@@ -1,0 +1,43 @@
+"""Paper Figs 3-4: classification time — fixed-point vs float, per classifier.
+
+Fig 3 analogue: per (dataset, classifier), mean time/instance for FLT vs
+FXP32 and FXP16 (on MCUs without FPU the paper sees fxp win; on this CPU —
+which *has* an FPU — the paper predicts no fxp win, exactly like its
+Teensy-3.6 results; recorded as the derived ratio).
+
+Fig 4 analogue: time per classifier class aggregated over datasets.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import convert
+from repro.data import load_dataset
+
+from .common import CLASSIFIERS, DATASETS, FORMATS, csv_line, get_model, time_predict
+
+
+def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
+    rows = []
+    agg: Dict[str, List[float]] = {c: [] for c in classifiers}
+    for d in datasets:
+        ds = load_dataset(d)
+        x = ds.x_test[:2048]
+        for name in classifiers:
+            model = get_model(d, name)
+            times = {}
+            for fmt in FORMATS:
+                em = convert(model, number_format=fmt)
+                times[fmt] = time_predict(em.predict, x)
+            rows.append({"dataset": d, "classifier": name, **times})
+            agg[name].append(times["flt"])
+            csv_line(f"fig3/{d}/{name}", times["flt"],
+                     f"fxp32_ratio={times['fxp32'] / times['flt']:.3f};"
+                     f"fxp16_ratio={times['fxp16'] / times['flt']:.3f}")
+    for name, ts in agg.items():
+        csv_line(f"fig4/{name}", float(np.mean(ts)),
+                 f"datasets={len(ts)};median={np.median(ts):.3f}")
+    return rows

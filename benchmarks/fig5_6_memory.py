@@ -1,0 +1,32 @@
+"""Paper Figs 5-6: memory usage — flash (params) and SRAM (scratch) per
+classifier x number format.  FXP16 must shrink the artifact; FXP32 ~ FLT.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import convert
+
+from .common import CLASSIFIERS, DATASETS, FORMATS, csv_line, get_model
+
+
+def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
+    rows = []
+    for d in datasets:
+        for name in classifiers:
+            t0 = time.perf_counter()
+            model = get_model(d, name)
+            mems = {}
+            for fmt in FORMATS:
+                em = convert(model, number_format=fmt)
+                mems[fmt] = em.memory_bytes()
+            rows.append({"dataset": d, "classifier": name, **{
+                f"{f}_{k}": v for f in FORMATS for k, v in mems[f].items()}})
+            csv_line(f"fig5_6/{d}/{name}", (time.perf_counter() - t0) * 1e6,
+                     f"flt_flash={mems['flt']['flash']};"
+                     f"fxp32_flash={mems['fxp32']['flash']};"
+                     f"fxp16_flash={mems['fxp16']['flash']};"
+                     f"fxp16_shrink={mems['fxp16']['flash'] / max(mems['flt']['flash'], 1):.3f}")
+    return rows

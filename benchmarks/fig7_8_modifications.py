@@ -1,0 +1,49 @@
+"""Paper Fig 7 (sigmoid-approximation time) + Fig 8 (tree layout time).
+
+Fig 7: MLP classification time per sigmoid option (exact vs rational/PWL).
+Fig 8: decision-tree time for iterative vs if-then-else (codegen) vs the
+TPU-native oblivious form, plus the memory-overhead check (paper: if-then-
+else costs at most ~6% memory).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import convert
+from repro.core.activations import SIGMOID_NAMES
+from repro.core.trees import TREE_LAYOUTS, tree_memory_bytes
+from repro.data import load_dataset
+
+from .common import DATASETS, csv_line, get_model, time_predict
+
+
+def run(datasets=DATASETS) -> List[Dict]:
+    rows = []
+    for d in datasets:
+        ds = load_dataset(d)
+        x = ds.x_test[:2048]
+        # --- Fig 7: sigmoid time on the fxp32 MLP (paper's target format)
+        model = get_model(d, "mlp")
+        base = None
+        for sig in SIGMOID_NAMES:
+            em = convert(model, number_format="fxp32", sigmoid=sig)
+            t = time_predict(em.predict, x)
+            base = t if sig == "exact" else base
+            rows.append({"dataset": d, "kind": "sigmoid", "option": sig, "us": t})
+            csv_line(f"fig7/{d}/{sig}", t, f"speedup_vs_exact={base / t:.3f}")
+        # --- Fig 8: tree layouts
+        tree_model = get_model(d, "tree")
+        t_layout = {}
+        for layout in TREE_LAYOUTS:
+            em = convert(tree_model, number_format="fxp32", tree_layout=layout)
+            t_layout[layout] = time_predict(em.predict, x)
+            rows.append({"dataset": d, "kind": "tree", "option": layout,
+                         "us": t_layout[layout]})
+        mem_it = tree_memory_bytes(tree_model.tree, "iterative")
+        mem_ie = tree_memory_bytes(tree_model.tree, "ifelse")
+        for layout in TREE_LAYOUTS:
+            csv_line(f"fig8/{d}/{layout}", t_layout[layout],
+                     f"speedup_vs_iterative={t_layout['iterative'] / t_layout[layout]:.3f};"
+                     f"ifelse_mem_overhead={(mem_ie - mem_it) / mem_it:+.3%}")
+    return rows

@@ -1,0 +1,74 @@
+"""Pallas kernel micro-bench: correctness vs oracle + per-call CPU time.
+
+Wall-times here are interpret-mode (CPU) — meaningful only as a correctness
+pipeline check; on-TPU block shapes are recorded as the derived field (the
+MXU-alignment contract: multiples of 128 on matmul dims).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FXP16
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.models.decision_tree import train_decision_tree
+
+from .common import csv_line
+
+
+def run() -> List[Dict]:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # fxp_qmatmul
+    a = jnp.asarray(rng.randint(-2000, 2000, (128, 256)).astype(np.int16))
+    b = jnp.asarray(rng.randint(-2000, 2000, (256, 128)).astype(np.int16))
+    t0 = time.perf_counter()
+    got = ops.fxp_qmatmul(a, b, FXP16)
+    dt = (time.perf_counter() - t0) * 1e6
+    exact = bool(np.array_equal(np.asarray(got),
+                                np.asarray(R.fxp_qmatmul_ref(a, b, FXP16))))
+    rows.append({"kernel": "fxp_qmatmul", "exact": exact})
+    csv_line("kernels/fxp_qmatmul", dt,
+             f"exact={exact};blocks=bm128,bn128,bk256;dtype=int16(Q12.4)")
+
+    # pwl_activation
+    x = jnp.asarray(rng.randn(64, 512).astype(np.float32) * 6)
+    for variant in ("pwl2", "pwl4", "rational", "silu_pwl4"):
+        t0 = time.perf_counter()
+        got = ops.pwl_activation(x, variant)
+        dt = (time.perf_counter() - t0) * 1e6
+        err = float(jnp.max(jnp.abs(got - R.pwl_activation_ref(x, variant))))
+        rows.append({"kernel": f"pwl_{variant}", "max_err": err})
+        csv_line(f"kernels/pwl_{variant}", dt, f"max_err={err:.2e};blocks=256x512")
+
+    # tree_ensemble
+    xt = rng.randn(800, 10).astype(np.float32)
+    yt = ((xt[:, 0] > 0) + (xt[:, 3] > 0.5)).astype(np.int32)
+    model = train_decision_tree(xt, yt, 3, max_depth=8)
+    xq = jnp.asarray(rng.randn(512, 10).astype(np.float32))
+    t0 = time.perf_counter()
+    got = ops.tree_predict(model.tree, xq)
+    dt = (time.perf_counter() - t0) * 1e6
+    exact = bool(np.array_equal(np.asarray(got),
+                                np.asarray(R.tree_ensemble_ref(model.tree, xq))))
+    rows.append({"kernel": "tree_ensemble", "exact": exact})
+    csv_line("kernels/tree_ensemble", dt,
+             f"exact={exact};nodes={model.tree.n_nodes};form=sel-matmul+bitpath")
+
+    # flash_attention
+    q = jnp.asarray(rng.randn(4, 256, 64).astype(np.float32))
+    k = jnp.asarray(rng.randn(4, 256, 64).astype(np.float32))
+    v = jnp.asarray(rng.randn(4, 256, 64).astype(np.float32))
+    t0 = time.perf_counter()
+    got = ops.flash_attention(q, k, v, bq=128, bk=128)
+    dt = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(got - R.flash_attention_ref(q, k, v))))
+    rows.append({"kernel": "flash_attention", "max_err": err})
+    csv_line("kernels/flash_attention", dt, f"max_err={err:.2e};blocks=bq128,bk128")
+    return rows

@@ -1,0 +1,72 @@
+"""§Roofline table: aggregates dry-run JSON records into markdown/CSV.
+
+Reads benchmarks/results/dryrun_*.json (written by launch/dryrun.py) and
+emits the per-(arch x shape x mesh) roofline terms, dominant bottleneck,
+MODEL_FLOPS ratio, and memory-fit verdict against the 16GB v5e budget.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .common import RESULTS_DIR, csv_line
+
+HBM_BUDGET = 16e9
+
+
+def load_records(mesh: str = "pod", quantized: bool = False) -> List[Dict]:
+    recs = []
+    suffix = "_int8" if quantized else ""
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"dryrun_*_{mesh}{suffix}.json"))):
+        if not quantized and "_int8" in path:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fit_verdict(rec: Dict) -> str:
+    mem = rec.get("memory_analysis", {})
+    temp = mem.get("temp_size_in_bytes", 0)
+    args = mem.get("argument_size_in_bytes", 0) - mem.get("alias_size_in_bytes", 0)
+    total = temp + max(args, 0) + mem.get("output_size_in_bytes", 0)
+    return f"{'FITS' if total <= HBM_BUDGET else 'OVER'}({total / 1e9:.1f}GB)"
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | t_compute(s) | t_memory(s) | t_collective(s) | "
+        "dominant | useful ratio | fit/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "run":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute']:.3e} | "
+            f"{ro['t_memory']:.3e} | {ro['t_collective']:.3e} | "
+            f"{ro['dominant']} | {ro['useful_ratio']:.2f} | {fit_verdict(r)} |")
+    return "\n".join(lines)
+
+
+def run(mesh: str = "pod") -> List[Dict]:
+    recs = load_records(mesh)
+    for r in recs:
+        if r.get("status") != "run":
+            csv_line(f"roofline/{r['arch']}/{r['shape']}/{mesh}", 0.0,
+                     r["status"].replace(",", ";"))
+            continue
+        ro = r["roofline"]
+        csv_line(
+            f"roofline/{r['arch']}/{r['shape']}/{mesh}",
+            max(ro["t_compute"], ro["t_memory"], ro["t_collective"]) * 1e6,
+            f"dominant={ro['dominant']};tc={ro['t_compute']:.3e};"
+            f"tm={ro['t_memory']:.3e};tx={ro['t_collective']:.3e};"
+            f"useful={ro['useful_ratio']:.2f};{fit_verdict(r)}")
+    return recs

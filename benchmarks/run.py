@@ -1,0 +1,70 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (assignment contract) and
+writes JSON rows under benchmarks/results/.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # 2 datasets, fast
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import warnings
+
+warnings.filterwarnings("ignore")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="2 datasets only")
+    ap.add_argument("--only", default=None, help="comma-separated module list")
+    args = ap.parse_args(argv)
+
+    from . import (fig3_4_time, fig5_6_memory, fig7_8_modifications,
+                   kernels_bench, lm_quantized, roofline_table,
+                   table_v_accuracy, table_vi_vii_sigmoid, table_viii_tools)
+    from .common import RESULTS_DIR
+
+    datasets = ("D5", "D2") if args.quick else None
+    modules = {
+        "table_v": lambda: table_v_accuracy.run(datasets or table_v_accuracy.DATASETS),
+        "table_vi_vii": lambda: table_vi_vii_sigmoid.run(datasets or table_vi_vii_sigmoid.DATASETS),
+        "fig3_4": lambda: fig3_4_time.run(datasets or fig3_4_time.DATASETS),
+        "fig5_6": lambda: fig5_6_memory.run(datasets or fig5_6_memory.DATASETS),
+        "fig7_8": lambda: fig7_8_modifications.run(datasets or fig7_8_modifications.DATASETS),
+        "table_viii": lambda: table_viii_tools.run(datasets or table_viii_tools.DATASETS),
+        "lm_quantized": lm_quantized.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline_table.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    failures = []
+    for name, fn in modules.items():
+        print(f"# === {name} ===")
+        t0 = time.time()
+        try:
+            rows = fn()
+            with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f"# {name}: {len(rows)} rows in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            import traceback
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

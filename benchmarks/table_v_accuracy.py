@@ -1,0 +1,41 @@
+"""Paper Table V: accuracy of EmbML artifacts (FLT/FXP32/FXP16) vs desktop.
+
+For each dataset x classifier: desktop accuracy, then the relative accuracy
+delta of each embedded number format, plus overflow/underflow rates (the
+paper's §V-A explanation of FXP16 cliffs).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import convert
+from repro.data import load_dataset
+
+from .common import CLASSIFIERS, DATASETS, FORMATS, csv_line, get_model
+
+
+def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
+    rows = []
+    for d in datasets:
+        ds = load_dataset(d)
+        for name in classifiers:
+            t0 = time.perf_counter()
+            model = get_model(d, name)
+            desk = float((model.predict(ds.x_test) == ds.y_test).mean())
+            row = {"dataset": d, "classifier": name, "desktop": desk}
+            for fmt in FORMATS:
+                em = convert(model, number_format=fmt)
+                cls, stats = em.predict_with_stats(ds.x_test)
+                acc = float((cls == ds.y_test).mean())
+                row[fmt] = acc
+                row[f"{fmt}_delta"] = acc - desk
+                row[f"{fmt}_ovf"] = stats["overflow_rate"]
+                row[f"{fmt}_unf"] = stats["underflow_rate"]
+            rows.append(row)
+            dt = (time.perf_counter() - t0) * 1e6
+            csv_line(f"table_v/{d}/{name}", dt,
+                     f"desktop={desk:.4f};" + ";".join(
+                         f"{f}_delta={row[f'{f}_delta']:+.4f}" for f in FORMATS))
+    return rows

@@ -1,0 +1,38 @@
+"""Paper Tables VI/VII: sigmoid approximations in MLP artifacts.
+
+Accuracy of {exact, rational, pwl2, pwl4} x {FLT, FXP32, FXP16} relative to
+the desktop MLP with the true sigmoid.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import convert
+from repro.core.activations import SIGMOID_NAMES
+from repro.data import load_dataset
+
+from .common import DATASETS, FORMATS, csv_line, get_model
+
+
+def run(datasets=DATASETS) -> List[Dict]:
+    rows = []
+    for d in datasets:
+        ds = load_dataset(d)
+        model = get_model(d, "mlp")
+        desk = float((model.predict(ds.x_test) == ds.y_test).mean())
+        for sig in SIGMOID_NAMES:
+            t0 = time.perf_counter()
+            row = {"dataset": d, "sigmoid": sig, "desktop": desk}
+            for fmt in FORMATS:
+                em = convert(model, number_format=fmt, sigmoid=sig)
+                acc = float((em.predict(ds.x_test) == ds.y_test).mean())
+                row[fmt] = acc
+                row[f"{fmt}_delta"] = acc - desk
+            rows.append(row)
+            csv_line(f"table_vi_vii/{d}/{sig}",
+                     (time.perf_counter() - t0) * 1e6,
+                     ";".join(f"{f}_delta={row[f'{f}_delta']:+.4f}"
+                              for f in FORMATS))
+    return rows

@@ -1,0 +1,63 @@
+"""Quickstart: the EmbML pipeline end to end in ~40 lines.
+
+Train a classifier on a 'desktop' (this process), serialize it, convert it
+to an embedded fixed-point artifact, and compare accuracy/memory — the
+paper's Fig. 1 workflow.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import pickle
+import tempfile
+
+from repro.core import ConversionOptions, convert
+from repro.data import load_dataset
+from repro.models import train_decision_tree, train_mlp
+
+
+def main():
+    # Step 1 — train on the desktop (paper: WEKA / scikit-learn).
+    ds = load_dataset("D5")  # pen-digits analogue: 8 features, 10 classes
+    print(f"dataset {ds.identifier} ({ds.name}): "
+          f"{ds.x_train.shape[0]} train / {ds.x_test.shape[0]} test")
+    model = train_mlp(ds.x_train, ds.y_train, ds.n_classes, hidden=(32,),
+                      epochs=15)
+    desktop_acc = (model.predict(ds.x_test) == ds.y_test).mean()
+    print(f"desktop MLP accuracy: {desktop_acc:.4f}")
+
+    # Step 2 — serialize / deserialize (paper: pickle / ObjectOutputStream).
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "mlp.pkl")
+        with open(path, "wb") as f:
+            pickle.dump(model, f)
+        with open(path, "rb") as f:
+            model = pickle.load(f)
+
+    # Step 3 — convert with EmbML options and evaluate the artifacts.
+    for opts in (
+        ConversionOptions(number_format="flt"),
+        ConversionOptions(number_format="fxp32"),
+        ConversionOptions(number_format="fxp32", sigmoid="pwl4"),
+        ConversionOptions(number_format="fxp16", sigmoid="pwl2"),
+    ):
+        em = convert(model, opts)
+        acc = (em.predict(ds.x_test) == ds.y_test).mean()
+        mem = em.memory_bytes()
+        print(f"  {opts.number_format:6s} sigmoid={opts.sigmoid:8s} "
+              f"acc={acc:.4f} (Δ{acc - desktop_acc:+.4f}) "
+              f"flash={mem['flash']:6d}B sram={mem['sram']}B")
+
+    # Decision trees: the three inference layouts agree exactly.
+    tree = train_decision_tree(ds.x_train, ds.y_train, ds.n_classes, max_depth=8)
+    preds = {}
+    for layout in ("iterative", "ifelse", "oblivious"):
+        em = convert(tree, number_format="fxp32", tree_layout=layout)
+        preds[layout] = em.predict(ds.x_test)
+    assert (preds["iterative"] == preds["ifelse"]).all()
+    assert (preds["iterative"] == preds["oblivious"]).all()
+    print("tree layouts (iterative == ifelse == oblivious): identical predictions")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end LM training driver: a ~100M-param model for a few hundred steps
+with the full production substrate — fault-tolerant loop, checkpoints,
+deterministic data, resume.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --steps 300 --kill-at 150 \
+      && PYTHONPATH=src python examples/train_lm.py --steps 300   # resumes
+
+Architecture: a ~100M-parameter qwen2-family config (the assigned small
+arch scaled to the assignment's 100M-class example).
+"""
+
+import argparse
+import dataclasses
+import os
+import shutil
+
+from repro.configs import get_config
+from repro.train.trainer import TrainConfig, train_loop
+
+
+def make_100m():
+    base = get_config("qwen2-0.5b")
+    return dataclasses.replace(
+        base, name="qwen2-100m", n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=2, d_head=64, d_ff=1536, vocab_size=8192,
+        tie_embeddings=True, attn_chunk=256, remat=False, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--fresh", action="store_true", help="wipe checkpoints")
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="simulate preemption at this step (tests resume)")
+    args = ap.parse_args()
+
+    if args.fresh and os.path.isdir(args.ckpt_dir):
+        shutil.rmtree(args.ckpt_dir)
+
+    arch = make_100m()
+    n = arch.param_count()
+    print(f"arch {arch.name}: {n / 1e6:.1f}M params, "
+          f"{arch.n_layers}L d={arch.d_model}")
+
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps,
+                       checkpoint_every=50, seed=0)
+
+    losses = []
+
+    def on_step(step, metrics):
+        losses.append(metrics["loss"])
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {metrics['loss']:.4f} "
+                  f"gnorm {metrics['grad_norm']:.3f}")
+        if args.kill_at is not None and step >= args.kill_at:
+            import signal
+            os.kill(os.getpid(), signal.SIGTERM)  # preemption drill
+
+    metrics = train_loop(arch, tcfg, batch=args.batch, seq=args.seq,
+                         ckpt_dir=args.ckpt_dir, steps=args.steps,
+                         on_step=on_step)
+    hist = metrics["history"]
+    print(f"\nfinished at step {metrics['final_step']}: "
+          f"loss {hist[0]:.3f} -> {hist[-1]:.3f} "
+          f"({'improved' if hist[-1] < hist[0] else 'NOT improved'})")
+    if metrics["final_step"] < args.steps:
+        print("(preempted — rerun the same command to resume from the last "
+              "committed checkpoint)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Assigned-architecture configs (``--arch <id>``).  Import registers all."""
+
+from .base import (ArchConfig, MLAConfig, MoEConfig, SHAPES, ShapeSpec,
+                   SSMConfig, get_config, list_configs, register)
+
+# Register every assigned architecture (one module per arch).
+from . import starcoder2_15b  # noqa: F401
+from . import minitron_8b  # noqa: F401
+from . import qwen2_0_5b  # noqa: F401
+from . import qwen1_5_32b  # noqa: F401
+from . import grok_1_314b  # noqa: F401
+from . import deepseek_v3_671b  # noqa: F401
+from . import zamba2_7b  # noqa: F401
+from . import llava_next_mistral_7b  # noqa: F401
+from . import rwkv6_1_6b  # noqa: F401
+from . import hubert_xlarge  # noqa: F401
+from . import embml_classifiers  # noqa: F401  (the paper's own model zoo)
+
+ARCH_IDS = (
+    "starcoder2-15b", "minitron-8b", "qwen2-0.5b", "qwen1.5-32b",
+    "grok-1-314b", "deepseek-v3-671b", "zamba2-7b",
+    "llava-next-mistral-7b", "rwkv6-1.6b", "hubert-xlarge",
+)
+
+__all__ = ["ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig", "SHAPES",
+           "ShapeSpec", "get_config", "list_configs", "register", "ARCH_IDS"]

@@ -1,0 +1,24 @@
+"""The paper's own model zoo as a config (EmbML classifier suite).
+
+Not an LM architecture: selects the classical pipeline (train -> convert ->
+embedded artifact) over the six benchmark datasets.  Used by
+``examples/embml_pipeline.py`` and the benchmark harness.
+"""
+
+import dataclasses
+from typing import Tuple
+
+__all__ = ["EmbMLSuiteConfig", "SUITE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbMLSuiteConfig:
+    datasets: Tuple[str, ...] = ("D1", "D2", "D3", "D4", "D5", "D6")
+    classifiers: Tuple[str, ...] = (
+        "tree", "logistic", "mlp", "svm-linear", "svm-poly", "svm-rbf")
+    number_formats: Tuple[str, ...] = ("flt", "fxp32", "fxp16")
+    sigmoids: Tuple[str, ...] = ("exact", "rational", "pwl2", "pwl4")
+    tree_layouts: Tuple[str, ...] = ("iterative", "ifelse", "oblivious")
+
+
+SUITE = EmbMLSuiteConfig()

@@ -1,0 +1,14 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+* :mod:`repro.core.fixedpoint` — Qn.m arithmetic (C1)
+* :mod:`repro.core.activations` — sigmoid approximations (C3)
+* :mod:`repro.core.trees` — tree inference layouts (C4)
+* :mod:`repro.core.convert` — the conversion pipeline (C5/C6)
+* :mod:`repro.core.quantize` — beyond-paper per-channel Qn.m for LM serving
+"""
+
+from .convert import ConversionOptions, EmbeddedModel, convert
+from .fixedpoint import FXP8, FXP16, FXP32, FxpFormat
+
+__all__ = ["ConversionOptions", "EmbeddedModel", "convert",
+           "FXP8", "FXP16", "FXP32", "FxpFormat"]

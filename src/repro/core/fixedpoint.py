@@ -1,0 +1,378 @@
+"""Qn.m fixed-point arithmetic library (paper §III-C, contribution C1).
+
+Implements the EmbML fixed-point semantics in JAX: signed Qn.m numbers stored
+in 8/16/32-bit integers (1 sign bit + ``n`` integer bits + ``m`` fractional
+bits), saturating arithmetic, round-to-nearest rescaling, and the transcendental
+helpers the paper's classifiers need (exp, sigmoid, tanh, sqrt, reciprocal,
+power) — mirroring the fixedptc / libfixmath / AVRfix lineage the paper builds
+on, but vectorized so the same semantics run on the TPU's integer datapath.
+
+The paper's two experimental formats are provided as constants:
+
+* ``FXP32`` — Q22.10 in an int32 container (22 might be wrong: paper says
+  Q22.10, i.e. n=22 integer bits incl. none for sign? EmbML's convention is
+  1 sign + 21 int + 10 frac = 32; we follow total=32, m=10).
+* ``FXP16`` — Q12.4 in an int16 container (total=16, m=4).
+
+Beyond-paper formats (``FXP8``, per-channel scaling) live in
+:mod:`repro.core.quantize`; this module is the faithful global-format core.
+
+Overflow/underflow accounting: the paper (§V-A) explains FXP16 accuracy cliffs
+by the rate of overflow (saturation) and underflow (non-zero real rounded to
+exactly zero). Every op here has an ``*_with_stats`` variant returning those
+counts so the benchmark harness can reproduce that analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FxpFormat",
+    "FXP32",
+    "FXP16",
+    "FXP8",
+    "quantize",
+    "dequantize",
+    "qadd",
+    "qsub",
+    "qneg",
+    "qmul",
+    "qdiv",
+    "qmatmul",
+    "qmatmul_with_stats",
+    "quantize_with_stats",
+    "qexp",
+    "qsigmoid",
+    "qtanh",
+    "qsqrt",
+    "qrecip",
+    "qpow_int",
+    "qrelu",
+    "FxpStats",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FxpFormat:
+    """A signed Qn.m fixed-point format in a ``total_bits`` integer container.
+
+    value = stored_int / 2**frac_bits.  ``int_bits = total_bits - 1 - frac_bits``
+    (one sign bit).  Representable range: [-(2**(total-1)) / 2**m,
+    (2**(total-1) - 1) / 2**m].
+    """
+
+    total_bits: int
+    frac_bits: int
+    name: str = ""
+
+    def __post_init__(self):
+        if self.total_bits not in (8, 16, 32):
+            raise ValueError(f"unsupported container width {self.total_bits}")
+        if not 0 <= self.frac_bits < self.total_bits:
+            raise ValueError(f"frac_bits {self.frac_bits} out of range")
+
+    # --- static properties -------------------------------------------------
+    @property
+    def int_bits(self) -> int:
+        return self.total_bits - 1 - self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.total_bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin / self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax / self.scale
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    @property
+    def dtype(self) -> jnp.dtype:
+        return {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}[self.total_bits]
+
+    @property
+    def wide_dtype(self) -> jnp.dtype:
+        """Accumulator dtype wide enough to hold a product of two values."""
+        return {8: jnp.int16, 16: jnp.int32, 32: jnp.int64}[self.total_bits]
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name or f"Q{self.int_bits}.{self.frac_bits}/{self.total_bits}b"
+
+
+# The paper's experimental formats (§IV): FXP32 = Q22.10, FXP16 = Q12.4.
+FXP32 = FxpFormat(32, 10, "FXP32(Q22.10)")
+FXP16 = FxpFormat(16, 4, "FXP16(Q12.4)")
+# Beyond-paper: 8-bit container (Q5.2 default) for MXU int8 paths.
+FXP8 = FxpFormat(8, 2, "FXP8(Q5.2)")
+
+
+@dataclasses.dataclass
+class FxpStats:
+    """Overflow/underflow accounting (paper §V-A)."""
+
+    overflow: jax.Array  # count of saturated elements
+    underflow: jax.Array  # count of non-zero reals rounded to exactly zero
+    total: jax.Array  # number of elements observed
+
+    def merge(self, other: "FxpStats") -> "FxpStats":
+        return FxpStats(
+            self.overflow + other.overflow,
+            self.underflow + other.underflow,
+            self.total + other.total,
+        )
+
+
+def _saturate(x_wide: jax.Array, fmt: FxpFormat) -> jax.Array:
+    return jnp.clip(x_wide, fmt.qmin, fmt.qmax).astype(fmt.dtype)
+
+
+# --------------------------------------------------------------------------
+# Conversion
+# --------------------------------------------------------------------------
+def quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """float -> Qn.m integer, round-to-nearest-even, saturating."""
+    scaled = jnp.asarray(x, jnp.float32) * fmt.scale
+    q = jnp.round(scaled)
+    q = jnp.clip(q, fmt.qmin, fmt.qmax)
+    return q.astype(fmt.dtype)
+
+
+def quantize_with_stats(x: jax.Array, fmt: FxpFormat) -> Tuple[jax.Array, FxpStats]:
+    scaled = jnp.asarray(x, jnp.float32) * fmt.scale
+    q = jnp.round(scaled)
+    over = jnp.sum((q > fmt.qmax) | (q < fmt.qmin))
+    under = jnp.sum((q == 0) & (x != 0))
+    q = jnp.clip(q, fmt.qmin, fmt.qmax).astype(fmt.dtype)
+    return q, FxpStats(over, under, jnp.asarray(x.size, jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))
+
+
+def dequantize(q: jax.Array, fmt: FxpFormat) -> jax.Array:
+    return q.astype(jnp.float32) / fmt.scale
+
+
+# --------------------------------------------------------------------------
+# Basic saturating arithmetic
+# --------------------------------------------------------------------------
+def qadd(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    wide = a.astype(fmt.wide_dtype) + b.astype(fmt.wide_dtype)
+    return _saturate(wide, fmt)
+
+
+def qsub(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    wide = a.astype(fmt.wide_dtype) - b.astype(fmt.wide_dtype)
+    return _saturate(wide, fmt)
+
+
+def qneg(a: jax.Array, fmt: FxpFormat) -> jax.Array:
+    return _saturate(-a.astype(fmt.wide_dtype), fmt)
+
+
+def _rshift_round(x_wide: jax.Array, m: int) -> jax.Array:
+    """Arithmetic right shift by ``m`` with round-to-nearest (ties away from 0).
+
+    Matches the MCU semantics ``(x + (1 << (m-1))) >> m`` for positive x and
+    its symmetric form for negative x, implemented branch-free.
+    """
+    if m == 0:
+        return x_wide
+    half = jnp.asarray(1, x_wide.dtype) << (m - 1)
+    # Round half away from zero: add +half for x>=0, subtract (half-1)... use
+    # the standard symmetric trick: (x + sign(x)*half) >> m via floor division
+    # on the absolute value.
+    sign = jnp.where(x_wide < 0, -1, 1).astype(x_wide.dtype)
+    rounded = sign * ((jnp.abs(x_wide) + half) >> m)
+    return rounded
+
+
+def qmul(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """(a*b) >> m with rounding, saturating — elementwise Qn.m multiply."""
+    wide = a.astype(fmt.wide_dtype) * b.astype(fmt.wide_dtype)
+    return _saturate(_rshift_round(wide, fmt.frac_bits), fmt)
+
+
+def qdiv(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """(a << m) / b with round-to-nearest, saturating. b == 0 saturates."""
+    wide_a = a.astype(fmt.wide_dtype) << fmt.frac_bits
+    wide_b = b.astype(fmt.wide_dtype)
+    safe_b = jnp.where(wide_b == 0, 1, wide_b)
+    sign = jnp.where((wide_a < 0) != (safe_b < 0), -1, 1).astype(fmt.wide_dtype)
+    # C-style truncating division on magnitudes, then round-to-nearest
+    # (ties away from zero) — matches the MCU fixed-point division macro.
+    q_trunc = sign * (jnp.abs(wide_a) // jnp.abs(safe_b))
+    rem_t = wide_a - q_trunc * safe_b
+    adjust_t = (jnp.abs(rem_t) * 2 >= jnp.abs(safe_b)).astype(fmt.wide_dtype)
+    q_rounded = q_trunc + adjust_t * sign
+    out = jnp.where(wide_b == 0, jnp.where(a >= 0, fmt.qmax, fmt.qmin), q_rounded)
+    return _saturate(out, fmt)
+
+
+def qrelu(a: jax.Array, fmt: FxpFormat) -> jax.Array:
+    del fmt
+    return jnp.maximum(a, 0)
+
+
+# --------------------------------------------------------------------------
+# Matrix multiply — the inference hot spot
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("fmt", "preferred_wide"))
+def qmatmul(a: jax.Array, b: jax.Array, fmt: FxpFormat, preferred_wide: bool = True) -> jax.Array:
+    """Fixed-point matmul: wide-accumulate int products, then one rounded
+    right-shift by ``m`` and saturation (MCU semantics; maps to MXU int paths).
+
+    a: (..., K) int, b: (K, N) int -> (..., N) int in the same format.
+    """
+    wide = fmt.wide_dtype if preferred_wide else jnp.int32
+    acc = jax.lax.dot_general(
+        a.astype(wide),
+        b.astype(wide),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=wide,
+    )
+    return _saturate(_rshift_round(acc, fmt.frac_bits), fmt)
+
+
+def qmatmul_with_stats(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> Tuple[jax.Array, FxpStats]:
+    wide = fmt.wide_dtype
+    acc = jax.lax.dot_general(
+        a.astype(wide),
+        b.astype(wide),
+        (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=wide,
+    )
+    shifted = _rshift_round(acc, fmt.frac_bits)
+    over = jnp.sum((shifted > fmt.qmax) | (shifted < fmt.qmin))
+    under = jnp.sum((shifted == 0) & (acc != 0))
+    out = _saturate(shifted, fmt)
+    total = jnp.asarray(out.size, over.dtype)
+    return out, FxpStats(over, under, total)
+
+
+# --------------------------------------------------------------------------
+# Transcendentals (range-reduced polynomials, pure integer ops)
+# --------------------------------------------------------------------------
+# 2^f for f in [0,1) as a cubic minimax polynomial; coefficients in float,
+# quantized per-format at trace time.  max |err| ~ 1e-4 over [0,1).
+_EXP2_COEFFS = (0.9999936, 0.6964313, 0.2243984, 0.0792043)
+_LOG2_E = 1.4426950408889634
+
+
+def qexp(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Fixed-point exp(x): exp(x) = 2^(x*log2e) = 2^k * 2^f, f in [0,1).
+
+    Implemented entirely in Qn.m integer ops (one widening multiply per
+    polynomial term), mirroring libfixmath's exp.  Saturates on overflow,
+    flushes to zero for k below -m (true underflow, which the paper counts).
+    """
+    m = fmt.frac_bits
+    wide = fmt.wide_dtype
+    log2e_q = int(round(_LOG2_E * fmt.scale))
+    y = _rshift_round(x.astype(wide) * log2e_q, m)  # y = x*log2e in Qn.m (wide)
+    k = y >> m  # floor(y): arithmetic shift == floor for two's complement
+    f = y - (k << m)  # fractional part in [0, 2^m)
+    # Horner in Qn.m on the wide dtype.
+    c0, c1, c2, c3 = (int(round(c * fmt.scale)) for c in _EXP2_COEFFS)
+    acc = jnp.full_like(f, c3)
+    acc = _rshift_round(acc * f, m) + c2
+    acc = _rshift_round(acc * f, m) + c1
+    acc = _rshift_round(acc * f, m) + c0  # ~2^f in Qn.m, in [2^m, 2^(m+1))
+    # Scale by 2^k: left shift when k>=0 (with saturation), right when k<0.
+    k_i32 = k.astype(jnp.int32)
+    max_shift = fmt.total_bits  # beyond this always saturates / flushes
+    k_clamped = jnp.clip(k_i32, -max_shift, max_shift)
+    pos = jnp.where(k_clamped > 0, k_clamped, 0).astype(wide)
+    neg = jnp.where(k_clamped < 0, -k_clamped, 0).astype(wide)
+    shifted_up = acc << jnp.minimum(pos, fmt.total_bits - 1).astype(wide)
+    # Detect overflow of the left shift on the wide dtype.
+    overflowed = (shifted_up >> jnp.minimum(pos, fmt.total_bits - 1).astype(wide)) != acc
+    up = jnp.where(overflowed, jnp.asarray(fmt.qmax, wide), shifted_up)
+    down = _rshift_round(acc, 0) >> jnp.minimum(neg, fmt.total_bits + m).astype(wide)
+    out = jnp.where(k_clamped >= 0, up, down)
+    # Saturate positive overflow (k too large).
+    out = jnp.where(k_i32 >= fmt.int_bits, jnp.asarray(fmt.qmax, wide), out)
+    return _saturate(out, fmt)
+
+
+def qrecip(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """1/x in Qn.m via exact integer division (2^(2m) / q)."""
+    one = jnp.asarray(int(fmt.scale), fmt.dtype)
+    return qdiv(jnp.broadcast_to(one, x.shape), x, fmt)
+
+
+def qsigmoid(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Exact-form fixed-point sigmoid: 1/(1+exp(-x)) in Qn.m.
+
+    Uses exp(-|x|) (always in (0,1], no overflow) and the identity
+    sigmoid(x) = 1 - sigmoid(-x) for the negative branch.
+    """
+    neg_abs = -jnp.abs(x.astype(fmt.wide_dtype))
+    e = qexp(_saturate(neg_abs, fmt), fmt)  # exp(-|x|) in (0, 1]
+    one = jnp.asarray(int(fmt.scale), fmt.dtype)
+    denom = qadd(jnp.broadcast_to(one, e.shape), e, fmt)
+    pos = qdiv(jnp.broadcast_to(one, e.shape), denom, fmt)  # sigmoid(|x|)
+    neg = qsub(jnp.broadcast_to(one, e.shape), pos, fmt)
+    return jnp.where(x >= 0, pos, neg)
+
+
+def qtanh(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """tanh(x) = 2*sigmoid(2x) - 1, all in Qn.m."""
+    two_x = _saturate(x.astype(fmt.wide_dtype) << 1, fmt)
+    s = qsigmoid(two_x, fmt)
+    wide = s.astype(fmt.wide_dtype) * 2 - int(fmt.scale)
+    return _saturate(wide, fmt)
+
+
+def qsqrt(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """sqrt in Qn.m via integer Newton iterations on 2^m * sqrt(v).
+
+    sqrt(q / 2^m) * 2^m = sqrt(q * 2^m); compute isqrt of (q << m) on the wide
+    dtype with enough Newton steps for the container width.
+    """
+    wide = fmt.wide_dtype
+    v = jnp.maximum(x.astype(wide), 0) << fmt.frac_bits
+    # Initial guess: 2^(ceil(bits/2)) scale — use float rsqrt seed for speed,
+    # then integer-Newton to exactness.
+    seed = jnp.sqrt(jnp.maximum(v.astype(jnp.float32), 1.0)).astype(wide)
+    guess = jnp.maximum(seed, 1)
+
+    def newton(g, _):
+        g = (g + v // jnp.maximum(g, 1)) >> 1
+        return g, None
+
+    guess, _ = jax.lax.scan(newton, guess, None, length=4)
+    guess = jnp.where(v == 0, 0, guess)
+    return _saturate(guess, fmt)
+
+
+def qpow_int(x: jax.Array, p: int, fmt: FxpFormat) -> jax.Array:
+    """x**p for small non-negative integer p (poly-kernel SVM degree)."""
+    if p < 0:
+        raise ValueError("qpow_int only supports non-negative integer powers")
+    out = jnp.full_like(x, int(fmt.scale))  # 1.0 in Qn.m
+    base = x
+    while p:
+        if p & 1:
+            out = qmul(out, base, fmt)
+        base = qmul(base, base, fmt)
+        p >>= 1
+    return out

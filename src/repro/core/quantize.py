@@ -1,0 +1,116 @@
+"""Weight-only Qn.m quantization for LM serving (paper C1 at pod scale).
+
+The EmbML insight — re-represent reals to match what the hardware serves
+cheaply — lands on TPU decode as *weight-only quantization*: decode is
+HBM-bandwidth-bound, so int8/int16 weights with a dequant epilogue cut the
+dominant roofline term ~2–4x.
+
+Two scale modes:
+
+* ``qnm``  (paper-faithful): one global power-of-two scale per tensor —
+  exactly the fixed n.m the paper uses (its §IX names the fixed exponent as
+  the main limitation);
+* ``per_channel`` (beyond-paper, the §IX future-work): one float scale per
+  output channel, chosen from the channel max.
+
+Quantized linears become ``{"w_q": intN, "scale": f32}``; every call site
+goes through :func:`repro.lm.layers.apply_linear` / ``wval`` which fuse the
+dequant into the consuming matmul, so the HBM-resident buffer stays integer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuantSpec", "quantize_linear", "quantize_lm_params",
+           "quantized_param_bytes"]
+
+_INT_DTYPES = {8: jnp.int8, 16: jnp.int16}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 8  # container width (8 or 16)
+    mode: str = "per_channel"  # 'per_channel' | 'qnm'
+    min_size: int = 1 << 16  # only quantize tensors at least this large
+    keep_embed: bool = False  # quantize embedding/unembedding tables too
+
+    @property
+    def dtype(self):
+        return _INT_DTYPES[self.bits]
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+def quantize_linear(w: jax.Array, spec: QuantSpec) -> Dict[str, jax.Array]:
+    """(..., din, dout) float -> {'w_q': intN, 'scale': f32}.
+
+    ``scale`` keeps a singleton contraction dim — shape (..., 1, dout) — so
+    ``w_q * scale`` broadcasts for both 2D linears and stacked/expert (E, d, f)
+    tensors, and per-(expert, channel) scales come out naturally.
+    """
+    w32 = jnp.asarray(w, jnp.float32)
+    if spec.mode == "per_channel":
+        amax = jnp.max(jnp.abs(w32), axis=-2, keepdims=True)  # (..., 1, dout)
+        scale = jnp.maximum(amax, 1e-8) / spec.qmax
+    elif spec.mode == "qnm":
+        # global power-of-two scale: the paper's fixed Qn.m with n chosen from
+        # the tensor max (one shared exponent for the whole tensor).
+        amax = jnp.max(jnp.abs(w32))
+        exp = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-8) / spec.qmax))
+        scale = jnp.broadcast_to(2.0 ** exp, w32.shape[:-2] + (1, w32.shape[-1]))
+    else:
+        raise KeyError(f"unknown quant mode {spec.mode}")
+    q = jnp.clip(jnp.round(w32 / scale), -spec.qmax - 1, spec.qmax)
+    return {"w_q": q.astype(spec.dtype), "scale": scale.astype(jnp.float32)}
+
+
+def _is_linear_dict(d: Any) -> bool:
+    return isinstance(d, dict) and "w" in d and hasattr(d["w"], "ndim") \
+        and d["w"].ndim >= 2
+
+
+def quantize_lm_params(params: Dict, spec: Optional[QuantSpec] = None,
+                       _path: str = "") -> Dict:
+    """Walk an LM param pytree, replacing large linear dicts with quantized
+    artifacts.  Embedding tables are kept float by default (gather-heavy,
+    quality-sensitive) unless ``spec.keep_embed``.
+    """
+    spec = spec or QuantSpec()
+    out = {}
+    for k, v in params.items():
+        path = f"{_path}/{k}"
+        if _is_linear_dict(v) and "router" not in path:
+            skip_embed = ("embed" in path or "table" in path) and not spec.keep_embed
+            if v["w"].size >= spec.min_size and not skip_embed:
+                q = quantize_linear(v["w"], spec)
+                if "b" in v:
+                    q["b"] = v["b"]
+                out[k] = q
+                continue
+        if isinstance(v, dict):
+            if "table" in v:  # embed dict
+                out[k] = v
+            else:
+                out[k] = quantize_lm_params(v, spec, path)
+        else:
+            out[k] = v
+    return out
+
+
+def quantized_param_bytes(params: Dict) -> Tuple[int, int]:
+    """(total_bytes, quantized_bytes) of a (possibly quantized) param tree."""
+    total = q = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        total += n
+        if "w_q" in jax.tree_util.keystr(path):
+            q += n
+    return total, q

@@ -1,0 +1,240 @@
+"""Decision-tree inference layouts (paper §III-E, contribution C4).
+
+EmbML emits decision trees either as an *iterative* node-chasing loop or as
+nested *if-then-else statements* (unrolled source code), trading a little
+flash memory for lower classification time.  We implement both, plus the
+TPU-native third form the paper's insight points at:
+
+* ``iterative`` — faithful port: a ``lax.fori_loop`` that gather-chases
+  ``node = select(x[feat[node]] <= thr[node], left[node], right[node])`` for
+  ``max_depth`` steps.  Data-dependent gathers; serial like the MCU loop.
+* ``ifelse`` — faithful *codegen* analogue: EmbML emits C++ source; we emit
+  JAX source — nested ``jnp.where`` expressions, one per internal node —
+  compiled via ``exec``.  No gathers, pure vector selects; the XLA analogue of
+  removing loop overhead.
+* ``oblivious`` — TPU-native adaptation (beyond-paper): evaluate *all* node
+  predicates at once (one vectorized gather + compare), then pick the leaf by
+  a dense path-matrix contraction.  Turns branching into MXU/VPU work; this is
+  the form the Pallas ``tree_ensemble`` kernel implements.
+
+All three produce bit-identical predictions (tested), in float or Qn.m
+domains.  The tree structure itself is a flat struct-of-arrays (CART-style):
+
+``feature[n], threshold[n], left[n], right[n], leaf_class[n], is_leaf[n]``
+
+with the convention that for leaves, ``left == right == n`` and
+``leaf_class`` holds the predicted class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixedpoint import FxpFormat, quantize
+
+__all__ = ["TreeArrays", "predict_iterative", "predict_ifelse", "predict_oblivious",
+           "codegen_ifelse", "tree_memory_bytes", "TREE_LAYOUTS"]
+
+TREE_LAYOUTS = ("iterative", "ifelse", "oblivious")
+
+
+@dataclasses.dataclass
+class TreeArrays:
+    """Flat struct-of-arrays binary decision tree."""
+
+    feature: np.ndarray  # (n_nodes,) int32; -1 for leaves
+    threshold: np.ndarray  # (n_nodes,) float32 (or Qn.m ints after convert)
+    left: np.ndarray  # (n_nodes,) int32
+    right: np.ndarray  # (n_nodes,) int32
+    leaf_class: np.ndarray  # (n_nodes,) int32; class id at leaves, -1 inside
+    max_depth: int
+    n_classes: int
+    n_features: int
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.feature.shape[0])
+
+    @property
+    def n_leaves(self) -> int:
+        return int((self.feature < 0).sum())
+
+    def quantized(self, fmt: FxpFormat) -> "TreeArrays":
+        """Qn.m thresholds (inputs are quantized at predict time)."""
+        thr = np.asarray(quantize(self.threshold.astype(np.float32), fmt))
+        return dataclasses.replace(self, threshold=thr)
+
+
+# --------------------------------------------------------------------------
+# Layout 1: iterative traversal (faithful)
+# --------------------------------------------------------------------------
+def predict_iterative(tree: TreeArrays, x: jax.Array) -> jax.Array:
+    """Batched iterative traversal.  x: (B, F) -> (B,) int32 class ids."""
+    feat = jnp.asarray(tree.feature)
+    thr = jnp.asarray(tree.threshold)
+    left = jnp.asarray(tree.left)
+    right = jnp.asarray(tree.right)
+    leaf_class = jnp.asarray(tree.leaf_class)
+    batch = x.shape[0]
+
+    def body(_, node):
+        f = feat[node]  # (B,)
+        t = thr[node]
+        # Leaves have feature == -1; stay put (left==right==self there).
+        xv = jnp.take_along_axis(x, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+        go_left = xv <= t
+        nxt = jnp.where(go_left, left[node], right[node])
+        return jnp.where(f < 0, node, nxt)
+
+    node0 = jnp.zeros((batch,), jnp.int32)
+    node = jax.lax.fori_loop(0, tree.max_depth + 1, body, node0)
+    return leaf_class[node]
+
+
+# --------------------------------------------------------------------------
+# Layout 2: if-then-else codegen (faithful — EmbML emits source code)
+# --------------------------------------------------------------------------
+def codegen_ifelse(tree: TreeArrays) -> str:
+    """Emit JAX source for the nested if-then-else form of ``tree``.
+
+    The generated function ``tree_predict(x, feature, threshold, leaf_class)``
+    takes the batched input (B, F) plus the tree constant arrays and returns
+    (B,) class ids.  Mirrors EmbML's C++ emission: one ``where`` per internal
+    node, leaves inline their class constant.
+    """
+    lines = ["def tree_predict(x, threshold, leaf_class):"]
+
+    def emit(node: int, indent: int) -> str:
+        if tree.feature[node] < 0:
+            return f"jnp.full(b, {int(tree.leaf_class[node])}, jnp.int32)"
+        f = int(tree.feature[node])
+        l = emit(int(tree.left[node]), indent + 1)
+        r = emit(int(tree.right[node]), indent + 1)
+        pad = "\n" + "    " * (indent + 1)
+        return (f"jnp.where(x[:, {f}] <= threshold[{node}],{pad}{l},{pad}{r})")
+
+    lines.append("    b = x.shape[0]")
+    lines.append("    return " + emit(0, 1))
+    return "\n".join(lines)
+
+
+def predict_ifelse(tree: TreeArrays, x: jax.Array) -> jax.Array:
+    """Compile (once per tree) and run the codegen'd nested-where form.
+
+    The compiled function is cached on the tree instance itself (an id()-keyed
+    global dict would alias recycled ids after GC).
+    """
+    fn = getattr(tree, "_ifelse_fn", None)
+    if fn is None:
+        src = codegen_ifelse(tree)
+        ns: dict = {"jnp": jnp}
+        exec(compile(src, f"<embml-tree-{id(tree)}>", "exec"), ns)
+        fn = ns["tree_predict"]
+        object.__setattr__(tree, "_ifelse_fn", fn)
+    return fn(x, jnp.asarray(tree.threshold), jnp.asarray(tree.leaf_class))
+
+
+# --------------------------------------------------------------------------
+# Layout 3: oblivious / tensorized (TPU-native, beyond-paper)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ObliviousTree:
+    """Dense path-matrix form: all predicates evaluated at once.
+
+    For each leaf l and internal node n, ``path[l, n]`` is +1 if the path to l
+    requires ``x[feat[n]] <= thr[n]``, -1 if it requires the negation, 0 if n
+    is not on the path.  A leaf is selected iff its satisfied-predicate count
+    equals its path length; computed as one (B, N) x (N, L) matmul.
+    """
+
+    node_feature: np.ndarray  # (N,) internal-node features
+    node_threshold: np.ndarray  # (N,)
+    path: np.ndarray  # (L, N) in {-1, 0, +1}, int8
+    path_len: np.ndarray  # (L,)
+    leaf_class: np.ndarray  # (L,)
+
+
+def build_oblivious(tree: TreeArrays) -> ObliviousTree:
+    internal = np.where(tree.feature >= 0)[0]
+    n_index = {int(n): i for i, n in enumerate(internal)}
+    leaves = np.where(tree.feature < 0)[0]
+    L, N = len(leaves), len(internal)
+    path = np.zeros((L, N), np.int8)
+    path_len = np.zeros((L,), np.int32)
+    leaf_class = np.zeros((L,), np.int32)
+
+    def walk(node: int, trail):
+        if tree.feature[node] < 0:
+            li = np.searchsorted(leaves, node)
+            for n, sign in trail:
+                path[li, n_index[n]] = sign
+            path_len[li] = len(trail)
+            leaf_class[li] = tree.leaf_class[node]
+            return
+        walk(int(tree.left[node]), trail + [(node, 1)])
+        walk(int(tree.right[node]), trail + [(node, -1)])
+
+    walk(0, [])
+    return ObliviousTree(
+        node_feature=tree.feature[internal].astype(np.int32),
+        node_threshold=tree.threshold[internal],
+        path=path,
+        path_len=path_len,
+        leaf_class=leaf_class,
+    )
+
+
+def predict_oblivious(tree: TreeArrays, x: jax.Array,
+                      ob: Optional[ObliviousTree] = None) -> jax.Array:
+    """Dense tensorized prediction.  x: (B, F) -> (B,) class ids."""
+    if ob is None:
+        ob = getattr(tree, "_oblivious", None)
+        if ob is None:
+            ob = build_oblivious(tree)
+            object.__setattr__(tree, "_oblivious", ob)
+    feats = jnp.asarray(ob.node_feature)
+    thr = jnp.asarray(ob.node_threshold)
+    # (B, N): one gather + one vector compare evaluates every predicate.
+    cmp = (x[:, feats] <= thr[None, :])
+    # Signed contraction: +1 rows count cmp, -1 rows count (1-cmp).
+    p = jnp.asarray(ob.path, jnp.int32)  # (L, N)
+    cmp_i = cmp.astype(jnp.int32)
+    pos = cmp_i @ jnp.maximum(p, 0).T  # (B, L)
+    neg = (1 - cmp_i) @ jnp.maximum(-p, 0).T
+    score = pos + neg
+    sel = score == jnp.asarray(ob.path_len)[None, :]
+    # Exactly one leaf matches; argmax picks it.
+    leaf = jnp.argmax(sel, axis=1)
+    return jnp.asarray(ob.leaf_class)[leaf]
+
+
+# --------------------------------------------------------------------------
+# Memory model (paper Figs 5-6 analogue)
+# --------------------------------------------------------------------------
+def tree_memory_bytes(tree: TreeArrays, layout: str, fmt: Optional[FxpFormat] = None) -> int:
+    """Model artifact size in bytes for each layout/number format.
+
+    iterative: node arrays (feature i16, threshold, left/right i16, class i8).
+    ifelse: inlined constants — per internal node one threshold + one feature
+    index embedded in code (the paper's 'more instructions' memory cost ~
+    modelled as 1.5x the constant footprint), per leaf one class constant.
+    oblivious: predicate arrays + path matrix (bitpacked) + leaf classes.
+    """
+    thr_bytes = 4 if fmt is None else fmt.total_bits // 8
+    n, l = tree.n_nodes, tree.n_leaves
+    internal = n - l
+    if layout == "iterative":
+        return n * (2 + thr_bytes + 2 + 2 + 1)
+    if layout == "ifelse":
+        per_node_code = 2 + thr_bytes  # cmp immediate + feature offset
+        overhead = int(1.5 * internal)  # extra branch instructions
+        return internal * per_node_code + l * 1 + overhead
+    if layout == "oblivious":
+        path_bits = l * internal * 2  # {-1,0,1} -> 2 bits
+        return internal * (2 + thr_bytes) + path_bits // 8 + l * 1
+    raise KeyError(f"unknown layout '{layout}'")

@@ -1,0 +1,5 @@
+"""Datasets: tabular benchmark suite (paper Table III) + LM token pipeline."""
+
+from .tabular import DATASETS, TabularDataset, load_dataset
+
+__all__ = ["DATASETS", "TabularDataset", "load_dataset"]

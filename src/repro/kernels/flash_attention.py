@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: causal flash attention (prefill hot spot).
+
+Classic streaming-softmax tiling: grid = (batch*heads, Sq/bq, Sk/bk) with the
+KV axis innermost; running (max, sum, acc) live in VMEM scratch across KV
+steps, rescaled online.  Causality skips nothing structurally (static grid)
+but masks the diagonal block; the jit wrapper chooses bq=bk=min(512, S).
+
+This kernel is the TPU codegen of the pure-JAX blockwise attention in
+``repro.lm.attention`` (which is also its oracle via ``ref.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bq: int, bk: int, k_steps: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # blocks strictly above the diagonal contribute nothing
+        run = ki * bk <= qi * bq + bq - 1
+    else:
+        run = ki >= 0  # traced, always true
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, bq: int = 512, bk: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, dh) — batch*heads flattened (GQA grouping done by the
+    caller).  Returns (BH, S, dh), q.dtype."""
+    bh, s, dh = q.shape
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    k_steps = s // bk
+    scale = float(1.0 / np.sqrt(dh))
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bk=bk,
+                               k_steps=k_steps, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fixed-point Qn.m matmul (paper C1 on the MXU).
+
+Computes ``saturate(round_shift(A_int @ B_int, m))`` — the exact MCU
+fixed-point matmul semantics — with MXU-friendly tiling:
+
+* grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis so each
+  (i, j) output tile accumulates into a VMEM int32 scratch across K steps.
+* A/B tiles are staged HBM->VMEM by ``BlockSpec``; the int8/int16 operands
+  feed the MXU's integer path (int32 accumulation), the final rounded shift
+  and saturation run on the VPU at the last K step.
+* block sizes default to 128/256 multiples (MXU alignment).
+
+The pure-jnp oracle is :func:`repro.kernels.ref.fxp_qmatmul_ref`; tests sweep
+shapes/dtypes in interpret mode against it.
+
+Accumulator contract: the MXU accumulates int32.  The kernel is bit-exact
+with the (int64-accumulating) oracle whenever the true dot-product magnitude
+stays below 2^31 — always true for int8 inputs with K < 133k, and true for
+int16/int32 inputs in the realistic quantized-NN value range (|values| a few
+units, i.e. |q| << qmax).  Inputs saturating the container near qmax over
+long K can wrap the accumulator — same failure mode as libfixmath's 32-bit
+accumulate on MCUs; callers needing full-range int16 sums should use the
+xla reference path (ops.fxp_qmatmul(impl='xla')).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fixedpoint import FxpFormat
+
+__all__ = ["fxp_qmatmul_pallas"]
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, frac_bits: int, qmin: int,
+            qmax: int, out_dtype, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_steps - 1)
+    def _finish():
+        acc = acc_ref[...]
+        if frac_bits > 0:
+            half = jnp.int32(1 << (frac_bits - 1))
+            sign = jnp.where(acc < 0, jnp.int32(-1), jnp.int32(1))
+            acc = sign * ((jnp.abs(acc) + half) >> frac_bits)
+        o_ref[...] = jnp.clip(acc, qmin, qmax).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "bm", "bn", "bk",
+                                             "interpret"))
+def fxp_qmatmul_pallas(a: jax.Array, b: jax.Array, fmt: FxpFormat,
+                       bm: int = 128, bn: int = 128, bk: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    """a: (M, K) intN, b: (K, N) intN -> (M, N) intN in the same Qn.m format.
+
+    M, N, K must be divisible by the block sizes (the jit wrapper in ops.py
+    pads).  ``interpret=True`` runs the kernel body on CPU for validation.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    k_steps = k // bk
+
+    kernel = functools.partial(
+        _kernel, frac_bits=fmt.frac_bits, qmin=fmt.qmin, qmax=fmt.qmax,
+        out_dtype=fmt.dtype, k_steps=k_steps)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), fmt.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,107 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Each wrapper pads to block multiples, dispatches to the kernel (interpret
+mode automatically when not running on TPU — this container validates on
+CPU), and unpads.  These are the entry points the rest of the framework
+uses; swapping ``impl='xla'`` falls back to the pure-jnp reference, which is
+also how the dry-run lowers (Mosaic kernels only lower on real TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import FxpFormat
+from repro.core.trees import TreeArrays
+from . import ref as ref_ops
+from .flash_attention import flash_attention_pallas
+from .fxp_qmatmul import fxp_qmatmul_pallas
+from .pwl_activation import pwl_activation_pallas
+from .tree_ensemble import pack_tree, tree_ensemble_pallas
+
+__all__ = ["fxp_qmatmul", "pwl_activation", "tree_predict", "flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value), size
+
+
+def fxp_qmatmul(a: jax.Array, b: jax.Array, fmt: FxpFormat,
+                impl: str = "pallas", bm: int = 128, bn: int = 128,
+                bk: int = 256) -> jax.Array:
+    """Qn.m matmul.  a: (M, K), b: (K, N) in fmt.dtype -> (M, N)."""
+    if impl == "xla":
+        return ref_ops.fxp_qmatmul_ref(a, b, fmt)
+    ap, m0 = _pad_to(a, 0, bm)
+    ap, _ = _pad_to(ap, 1, bk)
+    bp, _ = _pad_to(b, 0, bk)
+    bp, n0 = _pad_to(bp, 1, bn)
+    out = fxp_qmatmul_pallas(ap, bp, fmt, bm=bm, bn=bn, bk=bk,
+                             interpret=not _on_tpu())
+    return out[:m0, :n0]
+
+
+def pwl_activation(x: jax.Array, variant: str = "pwl4",
+                   impl: str = "pallas") -> jax.Array:
+    """Fused PWL sigmoid/silu over any-shaped input."""
+    if impl == "xla":
+        return ref_ops.pwl_activation_ref(x, variant)
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    cols = 512
+    flat, n0 = _pad_to(flat, 0, 256 * cols)
+    x2 = flat.reshape(-1, cols)
+    out = pwl_activation_pallas(x2, variant, block_rows=min(256, x2.shape[0]),
+                                block_cols=cols, interpret=not _on_tpu())
+    return out.reshape(-1)[:n0].reshape(orig_shape)
+
+
+@functools.lru_cache(maxsize=64)
+def _packed_tree_cache(tree_id: int):
+    raise KeyError  # populated via _get_packed below
+
+
+_PACKED: dict = {}
+
+
+def tree_predict(tree: TreeArrays, x: jax.Array, impl: str = "pallas",
+                 block_batch: int = 256) -> jax.Array:
+    """Oblivious-tree inference.  x: (B, F) float -> (B,) int32."""
+    if impl == "xla":
+        return ref_ops.tree_ensemble_ref(tree, x)
+    packed = getattr(tree, "_packed_kernel", None)
+    if packed is None:
+        packed = tuple(jnp.asarray(t) for t in pack_tree(tree))
+        object.__setattr__(tree, "_packed_kernel", packed)
+    sel, thr, ppos, pneg, plen, classes = packed
+    xp, b0 = _pad_to(x, 0, block_batch)
+    out = tree_ensemble_pallas(xp.astype(jnp.float32), sel, thr, ppos, pneg,
+                               plen, classes,
+                               block_batch=min(block_batch, xp.shape[0]),
+                               interpret=not _on_tpu())
+    return out[:b0]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, impl: str = "pallas",
+                    bq: int = 512, bk: int = 512) -> jax.Array:
+    """(BH, S, dh) attention; S must be a multiple of the block size."""
+    if impl == "xla":
+        return ref_ops.flash_attention_ref(q, k, v, causal)
+    return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=not _on_tpu())

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused PWL sigmoid family (paper C3 on the VPU).
+
+Elementwise select/fma-only activation — no transcendental unit involved:
+
+* ``pwl2``:    clip(0.25x + 0.5, 0, 1)
+* ``pwl4``:    PLAN segments (slopes 1/4, 1/8, 1/32 — shift-friendly)
+* ``rational``: 0.5 + 0.5x/(1+|x|)  (one divide)
+* ``silu_pwl4``: x * pwl4(x) — the fused gate used by the LM stack
+
+Tiled (block_rows x block_cols) through VMEM; the kernel is trivially
+memory-bound, so the tile size just has to keep the pipeline busy (the
+payoff on real HW is the *fusion* — gate applied in the same pass as the
+producing matmul's epilogue; standalone form here for validation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pwl_activation_pallas", "PWL_VARIANTS"]
+
+PWL_VARIANTS = ("pwl2", "pwl4", "rational", "silu_pwl4")
+
+
+def _pwl2(x):
+    return jnp.clip(x * 0.25 + 0.5, 0.0, 1.0)
+
+
+def _pwl4(x):
+    ax = jnp.abs(x)
+    y = jnp.where(
+        ax >= 5.0, 1.0,
+        jnp.where(ax >= 2.375, ax * 0.03125 + 0.84375,
+                  jnp.where(ax >= 1.0, ax * 0.125 + 0.625, ax * 0.25 + 0.5)))
+    return jnp.where(x >= 0, y, 1.0 - y)
+
+
+def _rational(x):
+    return 0.5 + 0.5 * x / (1.0 + jnp.abs(x))
+
+
+def _kernel(x_ref, o_ref, *, variant: str):
+    x = x_ref[...].astype(jnp.float32)
+    if variant == "pwl2":
+        y = _pwl2(x)
+    elif variant == "pwl4":
+        y = _pwl4(x)
+    elif variant == "rational":
+        y = _rational(x)
+    elif variant == "silu_pwl4":
+        y = x * _pwl4(x)
+    else:
+        raise KeyError(variant)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "block_rows",
+                                             "block_cols", "interpret"))
+def pwl_activation_pallas(x: jax.Array, variant: str = "pwl4",
+                          block_rows: int = 256, block_cols: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """x: (R, C) any float dtype -> same shape/dtype.  R % block_rows == 0,
+    C % block_cols == 0 (ops.py pads)."""
+    r, c = x.shape
+    assert r % block_rows == 0 and c % block_cols == 0, (x.shape, block_rows, block_cols)
+    return pl.pallas_call(
+        functools.partial(_kernel, variant=variant),
+        grid=(r // block_rows, c // block_cols),
+        in_specs=[pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+    )(x)

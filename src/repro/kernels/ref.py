@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` matches the corresponding kernel bit-for-bit (integer kernels)
+or to float tolerance (attention).  Tests sweep shapes/dtypes in interpret
+mode against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.activations import (sigmoid_pwl2, sigmoid_pwl4,
+                                    sigmoid_rational)
+from repro.core.trees import TreeArrays, predict_oblivious
+
+__all__ = ["fxp_qmatmul_ref", "pwl_activation_ref", "tree_ensemble_ref",
+           "flash_attention_ref"]
+
+
+def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat) -> jax.Array:
+    """Integer-exact oracle: the MCU round-shift-saturate matmul model."""
+    acc = jax.lax.dot_general(a.astype(jnp.int64), b.astype(jnp.int64),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int64)
+    m = fmt.frac_bits
+    if m > 0:
+        half = jnp.int64(1 << (m - 1))
+        sign = jnp.where(acc < 0, -1, 1).astype(jnp.int64)
+        acc = sign * ((jnp.abs(acc) + half) >> m)
+    return jnp.clip(acc, fmt.qmin, fmt.qmax).astype(fmt.dtype)
+
+
+def pwl_activation_ref(x: jax.Array, variant: str) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if variant == "pwl2":
+        y = sigmoid_pwl2(x32)
+    elif variant == "pwl4":
+        y = sigmoid_pwl4(x32)
+    elif variant == "rational":
+        y = sigmoid_rational(x32)
+    elif variant == "silu_pwl4":
+        y = x32 * sigmoid_pwl4(x32)
+    else:
+        raise KeyError(variant)
+    return y.astype(x.dtype)
+
+
+def tree_ensemble_ref(tree: TreeArrays, x: jax.Array) -> jax.Array:
+    return predict_oblivious(tree, x)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """(BH, S, dh) softmax attention, f32 internals."""
+    s = q.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * np.float32(1 / np.sqrt(q.shape[-1]))
+    if causal:
+        pos = jnp.arange(s)
+        scores = jnp.where(pos[:, None] >= pos[None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: oblivious decision-tree inference (paper C4, MXU form).
+
+The TPU-native adaptation of EmbML's if-then-else trees: branching becomes
+three dense stages, all MXU/VPU work, no data-dependent control flow:
+
+  1. ``xn = x @ sel``       — feature selection as a one-hot matmul
+                              (sel[f, n] = 1 iff node n tests feature f)
+  2. ``cmp = xn <= thr``     — every node predicate in one vector compare
+  3. ``score = cmp @ Ppos + (1-cmp) @ Pneg``; the predicted leaf is the row
+     whose score equals its path length (exactly one per sample).
+
+Output is the argmax leaf's class id per sample.  Grid over batch blocks;
+the tree tensors (sel, thr, path matrices, classes) stay resident in VMEM —
+valid for the paper-scale trees (hundreds of nodes); bigger ensembles would
+tile over nodes as a second grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.trees import ObliviousTree, TreeArrays, build_oblivious
+
+__all__ = ["tree_ensemble_pallas", "pack_tree"]
+
+
+def pack_tree(tree: TreeArrays, pad_nodes: int = 128, pad_leaves: int = 128):
+    """TreeArrays -> dense operands (sel, thr, ppos, pneg, plen, classes).
+
+    Padded to lane multiples; padding leaves get impossible path lengths so
+    they can never be selected.
+    """
+    ob: ObliviousTree = build_oblivious(tree)
+    n = max(pad_nodes, int(np.ceil(max(ob.path.shape[1], 1) / pad_nodes) * pad_nodes))
+    l = max(pad_leaves, int(np.ceil(ob.path.shape[0] / pad_leaves) * pad_leaves))
+    f = tree.n_features
+    sel = np.zeros((f, n), np.float32)
+    thr = np.full((n,), np.float32(np.inf))
+    for i, feat in enumerate(ob.node_feature):
+        sel[feat, i] = 1.0
+    thr[:len(ob.node_threshold)] = ob.node_threshold
+    ppos = np.zeros((n, l), np.float32)
+    pneg = np.zeros((n, l), np.float32)
+    nn, ll = ob.path.shape[1], ob.path.shape[0]
+    ppos[:nn, :ll] = (ob.path.T == 1)
+    pneg[:nn, :ll] = (ob.path.T == -1)
+    plen = np.full((l,), -1.0, np.float32)  # unreachable for padding
+    plen[:ll] = ob.path_len
+    classes = np.zeros((l,), np.int32)
+    classes[:ll] = ob.leaf_class
+    return sel, thr, ppos, pneg, plen, classes
+
+
+def _kernel(x_ref, sel_ref, thr_ref, ppos_ref, pneg_ref, plen_ref, cls_ref,
+            o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (bb, F)
+    xn = jax.lax.dot_general(x, sel_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bb, N)
+    cmp = (xn <= thr_ref[...][None, :]).astype(jnp.float32)
+    score = (jax.lax.dot_general(cmp, ppos_ref[...], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(1.0 - cmp, pneg_ref[...],
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    hit = score == plen_ref[...][None, :]  # (bb, L): exactly one true
+    leaf = jnp.argmax(hit, axis=1)
+    o_ref[...] = cls_ref[...][leaf].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_batch", "interpret"))
+def tree_ensemble_pallas(x: jax.Array, sel: jax.Array, thr: jax.Array,
+                         ppos: jax.Array, pneg: jax.Array, plen: jax.Array,
+                         classes: jax.Array, block_batch: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """x: (B, F) float; packed tree operands from :func:`pack_tree`.
+    Returns (B,) int32 class predictions.  B % block_batch == 0."""
+    b, f = x.shape
+    n = sel.shape[1]
+    l = ppos.shape[1]
+    assert b % block_batch == 0, (b, block_batch)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b // block_batch,),
+        in_specs=[
+            pl.BlockSpec((block_batch, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n, l), lambda i: (0, 0)),
+            pl.BlockSpec((n, l), lambda i: (0, 0)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_batch,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(x, sel, thr, ppos, pneg, plen, classes)

@@ -1,0 +1,52 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+Runs the fault-tolerant loop on a (scaled) config of the chosen assigned
+architecture.  On a real TPU deployment this process runs per host under the
+same mesh used by the dry-run; on CPU it drives the reduced config by
+default (`--full` uses the real one — only sensible on a pod).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import ARCH_IDS, get_config
+from repro.train.trainer import TrainConfig, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (pod-scale only)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps, microbatches=args.microbatches,
+                       checkpoint_every=args.checkpoint_every)
+
+    def on_step(step, m):
+        if step % 10 == 0:
+            print(f"step {step:5d} loss {m['loss']:.4f} gnorm {m['grad_norm']:.3f}"
+                  + (" [straggler?]" if "straggler_suspect" in m else ""))
+
+    metrics = train_loop(cfg, tcfg, batch=args.batch, seq=args.seq,
+                         ckpt_dir=f"{args.ckpt_dir}/{cfg.name}",
+                         steps=args.steps, on_step=on_step)
+    h = metrics["history"]
+    print(f"done at step {metrics['final_step']}: loss {h[0]:.3f} -> {h[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

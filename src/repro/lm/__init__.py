@@ -1,0 +1,1 @@
+"""LM stack for the assigned architectures (dense/MoE/MLA/SSM/RWKV/hybrid)."""

@@ -1,0 +1,267 @@
+"""Attention: GQA with RoPE, blockwise (flash-style) prefill, cached decode.
+
+The prefill/train path is a pure-JAX blockwise attention — ``lax.scan`` over
+KV chunks per query chunk with running (max, sum, acc) streaming softmax, so
+peak memory is O(chunk²) instead of O(S²) at 32k.  This is the jnp reference
+the Pallas ``flash_attention`` kernel mirrors (kernels/flash_attention.py).
+
+GQA is computed in grouped form (no KV head replication): q is reshaped to
+(B, S, Hkv, G, dh) so the score einsum contracts against unexpanded KV —
+keeping the KV working set (and its HBM traffic) at kv-head size, which is
+the whole point of GQA for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_linear, apply_rope, init_linear
+
+__all__ = ["attn_params", "attention", "decode_attention", "init_kv_cache"]
+
+_NEG_INF = -1e30
+
+
+def attn_params(key, d: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                dtype, qkv_bias: bool = False) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d, n_heads * head_dim, dtype, bias=qkv_bias),
+        "wk": init_linear(ks[1], d, n_kv_heads * head_dim, dtype, bias=qkv_bias),
+        "wv": init_linear(ks[2], d, n_kv_heads * head_dim, dtype, bias=qkv_bias),
+        "wo": init_linear(ks[3], n_heads * head_dim, d, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, s, h, dh = x.shape
+    return x.reshape(b, s, h * dh)
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,Hkv,G,dh), k: (B,Sk,Hkv,dh) -> scores (B,Hkv,G,Sq,Sk) f32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _grouped_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B,Hkv,G,Sq,Sk) f32, v: (B,Sk,Hkv,dh) -> (B,Sq,Hkv,G,dh)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool, chunk: int,
+                        window: Optional[int] = None) -> jax.Array:
+    """Streaming-softmax attention.
+
+    q: (B, S, Hq, dh); k, v: (B, S, Hkv, dh).  Returns (B, S, Hq, dh).
+    ``chunk`` must divide S.  ``window``: sliding-window size (None = full).
+    """
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = np.float32(1.0 / np.sqrt(dh))
+    nq = s // chunk
+    nk = s // chunk
+
+    qg = q.reshape(b, s, hkv, g, dh)
+    # (nq, B, chunk, Hkv, G, dh)
+    q_chunks = qg.reshape(b, nq, chunk, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    k_chunks = k.reshape(b, nk, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(b, nk, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+
+    base_pos = jnp.arange(chunk)
+
+    def per_q_chunk(qi, qc):
+        # qc: (B, chunk, Hkv, G, dh)
+        q_pos = qi * chunk + base_pos
+
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            ki, kc, vc = inputs
+            k_pos = ki * chunk + base_pos
+            scores = _grouped_scores(qc, kc) * scale  # (B,Hkv,G,chunk_q,chunk_k)
+            mask = jnp.ones((chunk, chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+            m_new = jnp.maximum(m_prev, scores.max(-1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l_prev * alpha + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk), jnp.float32)
+        acc0 = jnp.zeros((b, hkv, g, chunk, dh), jnp.float32)
+        # causal: only kv chunks <= qi contribute; we still scan all chunks
+        # (static trip count) and rely on the mask — XLA hoists the dead work
+        # only when it can prove it, so for long prefill we bound the scan.
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (jnp.arange(nk), k_chunks, v_chunks))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, Hkv, G, chunk, dh) -> (B, chunk, Hkv, G, dh)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    outs = jax.lax.map(lambda args: per_q_chunk(*args),
+                       (jnp.arange(nq), q_chunks))
+    # (nq, B, chunk, Hkv, G, dh) -> (B, S, Hq, dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, hkv * g, dh)
+    return out.astype(q.dtype)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+                   window: Optional[int] = None) -> jax.Array:
+    """Materialized-scores attention for short sequences (smoke tests)."""
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, s, hkv, hq // hkv, dh)
+    scores = _grouped_scores(qg, k) * np.float32(1.0 / np.sqrt(dh))
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(p, v)  # (B, Sq, Hkv, G, dh) — already query-major
+    return out.reshape(b, s, hq, dh).astype(q.dtype)
+
+
+def attention(params: Dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, rope_theta: float, causal: bool = True,
+              chunk: int = 1024, window: Optional[int] = None,
+              positions: Optional[jax.Array] = None) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    q = _split_heads(apply_linear(params["wq"], x), n_heads)
+    k = _split_heads(apply_linear(params["wk"], x), n_kv_heads)
+    v = _split_heads(apply_linear(params["wv"], x), n_kv_heads)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if s % chunk == 0 and s > chunk:
+        out = blockwise_attention(q, k, v, causal, chunk, window)
+    else:
+        out = full_attention(q, k, v, causal, window)
+    return apply_linear(params["wo"], _merge_heads(out))
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype, quantized: bool = False) -> Dict:
+    """KV cache.  ``quantized``: int8 entries + per-(token, head) f32 scale —
+    the paper's Qn.m re-representation applied to the decode-dominant buffer
+    (KIVI-style per-token scaling; the §IX 'per-operation exponent'
+    future-work rather than one global n.m)."""
+    if quantized:
+        return {
+            "k_q": jnp.zeros((batch, max_len, n_kv_heads, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, n_kv_heads, 1), jnp.float32),
+            "v_q": jnp.zeros((batch, max_len, n_kv_heads, head_dim), jnp.int8),
+            "v_scale": jnp.zeros((batch, max_len, n_kv_heads, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+    }
+
+
+def _quantize_kv(x: jax.Array):
+    """(B, 1, H, dh) -> int8 values + per-(token, head) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decode_attention(params: Dict, x: jax.Array, cache: Dict, position: jax.Array,
+                     *, n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: float, window: Optional[int] = None
+                     ) -> Tuple[jax.Array, Dict]:
+    """One-token decode.  x: (B, 1, d); cache K/V: (B, L, Hkv, dh).
+
+    Full-length cache (L >= max position): write at ``position``, attend over
+    the first ``position``+1 slots (the roofline's decode memory term *is*
+    this cache read).
+
+    Sliding-window cache (``window`` set and L == window): the cache is a
+    shift buffer ordered oldest->newest.  Once full, it shifts left one slot
+    per step; keys are stored RoPE'd at their absolute positions so no
+    re-rotation is needed.  This is what lets the hybrid arch serve 500k
+    sequences with a constant window-sized cache.
+    """
+    b, _, _ = x.shape
+    quantized = "k_q" in cache
+    kkey = "k_q" if quantized else "k"
+    L = cache[kkey].shape[1]
+    windowed = window is not None and L <= window
+    q = _split_heads(apply_linear(params["wq"], x), n_heads)  # (B,1,Hq,dh)
+    k_new = _split_heads(apply_linear(params["wk"], x), n_kv_heads)
+    v_new = _split_heads(apply_linear(params["wv"], x), n_kv_heads)
+    pos = jnp.broadcast_to(position, (b, 1))
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+
+    if windowed:
+        # shift once full; slot = min(position, L-1)
+        full = position >= L
+        slot = jnp.minimum(position, L - 1)
+        base = {kk: jnp.where(full, jnp.roll(cc, -1, axis=1), cc)
+                for kk, cc in cache.items()}
+    else:
+        slot = position
+        base = cache
+    zi = jnp.zeros((), slot.dtype) if hasattr(slot, "dtype") else 0
+
+    def upd(buf, new):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (zi, slot, zi, zi))
+
+    if quantized:
+        kq_new, ks_new = _quantize_kv(k_new)
+        vq_new, vs_new = _quantize_kv(v_new)
+        new_cache = {"k_q": upd(base["k_q"], kq_new),
+                     "k_scale": upd(base["k_scale"], ks_new),
+                     "v_q": upd(base["v_q"], vq_new),
+                     "v_scale": upd(base["v_scale"], vs_new)}
+        # dequantize at use: the HBM-resident buffer stays int8 (paper C1)
+        k = new_cache["k_q"].astype(jnp.float32) * new_cache["k_scale"]
+        v = new_cache["v_q"].astype(jnp.float32) * new_cache["v_scale"]
+        k = k.astype(x.dtype)
+        v = v.astype(x.dtype)
+    else:
+        k = upd(base["k"], k_new)
+        v = upd(base["v"], v_new)
+        new_cache = {"k": k, "v": v}
+    hkv = n_kv_heads
+    qg = q.reshape(b, 1, hkv, n_heads // hkv, head_dim)
+    scores = _grouped_scores(qg, k) * np.float32(1.0 / np.sqrt(head_dim))  # (B,Hkv,G,1,L)
+    idx = jnp.arange(L)
+    valid = idx[None, :] <= slot
+    if window is not None and not windowed:
+        valid &= (position - idx[None, :]) < window
+    scores = jnp.where(valid[None, None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _grouped_out(p, v)  # (B, 1, Hkv, G, dh) — already query-major
+    out = out.reshape(b, 1, n_heads * head_dim)
+    y = apply_linear(params["wo"], out.astype(x.dtype))
+    return y, new_cache

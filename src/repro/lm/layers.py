@@ -1,0 +1,170 @@
+"""Shared LM layers: norms, MLPs, RoPE, embeddings, PWL-gated activations.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Compute
+dtype follows the input; norm statistics and softmax always run in float32.
+The paper's PWL sigmoid (C3) is available for every sigmoid-derived gate
+(sigmoid, silu, tanh gates) via ``gate_sigmoid`` — exact by default.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import get_sigmoid
+
+__all__ = ["rmsnorm", "layernorm", "make_norm_params", "apply_norm",
+           "init_linear", "mlp_params", "apply_mlp", "activation_fn",
+           "rope_freqs", "apply_rope", "init_embed", "gated_silu"]
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm_params(kind: str, d: int, dtype) -> Dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(kind: str, p: Dict, x: jax.Array) -> jax.Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# --------------------------------------------------------------------------
+# Linear / MLP
+# --------------------------------------------------------------------------
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False,
+                scale: Optional[float] = None) -> Dict:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def wval(p: Dict, dtype=None) -> jax.Array:
+    """Weight value of a linear dict, dequantizing a Qn.m/int8 artifact.
+
+    Quantized linears (see :mod:`repro.core.quantize`) carry ``w_q`` (int8/16)
+    and ``scale`` (per-output-channel or scalar).  The convert-at-use keeps the
+    HBM-resident buffer integer (the paper's C1 on the memory roofline term);
+    XLA fuses the cast/scale into the consuming matmul.
+    """
+    if "w_q" in p:
+        dt = dtype if dtype is not None else p["scale"].dtype
+        return p["w_q"].astype(dt) * p["scale"].astype(dt)
+    return p["w"] if dtype is None else p["w"].astype(dtype)
+
+
+def apply_linear(p: Dict, x: jax.Array) -> jax.Array:
+    if "w_q" in p:
+        y = (x @ p["w_q"].astype(x.dtype)) * p["scale"].astype(x.dtype)
+    else:
+        y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def activation_fn(name: str, gate_sigmoid: str = "exact") -> Callable:
+    """silu/gelu/relu/relu2; silu routes through the (possibly PWL) sigmoid."""
+    if name == "silu":
+        sig = get_sigmoid(gate_sigmoid)
+        return lambda x: x * sig(x)
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise KeyError(f"unknown activation '{name}'")
+
+
+def gated_silu(x: jax.Array, gate_sigmoid: str = "exact") -> jax.Array:
+    sig = get_sigmoid(gate_sigmoid)
+    return x * sig(x)
+
+
+def mlp_params(key, d: int, d_ff: int, mlp_type: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "glu":
+        return {
+            "wi": init_linear(ks[0], d, d_ff, dtype),
+            "wg": init_linear(ks[1], d, d_ff, dtype),
+            "wo": init_linear(ks[2], d_ff, d, dtype),
+        }
+    return {
+        "wi": init_linear(ks[0], d, d_ff, dtype),
+        "wo": init_linear(ks[1], d_ff, d, dtype),
+    }
+
+
+def apply_mlp(p: Dict, x: jax.Array, mlp_type: str, activation: str,
+              gate_sigmoid: str = "exact") -> jax.Array:
+    act = activation_fn(activation, gate_sigmoid)
+    h = apply_linear(p["wi"], x)
+    if mlp_type == "glu":
+        h = act(apply_linear(p["wg"], x)) * h
+    else:
+        h = act(h)
+    return apply_linear(p["wo"], h)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh) rotated pairwise; positions: (..., S) int."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+def init_embed(key, vocab: int, d: int, dtype) -> Dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * (1.0 / np.sqrt(d))).astype(dtype)}
+
+
+def embed_tokens(p: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Dict, x: jax.Array) -> jax.Array:
+    """Logits in float32 (loss-critical)."""
+    return x.astype(jnp.float32) @ p["table"].T.astype(jnp.float32)

@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD) block: chunked state-space duality for train/prefill and an
+O(1)-state recurrent decode step.
+
+Chunked SSD follows the reference decomposition (Dao & Gu, arXiv:2405.21060):
+within-chunk quadratic term + inter-chunk low-rank state passing, all einsums
+(MXU-friendly).  The chunk decay matrix is exact ``exp(segsum(A))``.
+
+Decode carries ``(conv_state, ssm_state)`` — constant memory in sequence
+length, which is why the hybrid/SSM archs run the ``long_500k`` cell.
+
+Gates: ``silu`` gates route through the configurable sigmoid so the paper's
+PWL approximations (C3) apply natively to this family.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from .layers import gated_silu, init_linear, rmsnorm, wval
+
+__all__ = ["mamba2_params", "mamba2_forward", "mamba2_decode", "init_mamba_cache"]
+
+
+def _dims(d_model: int, s: SSMConfig) -> Tuple[int, int, int]:
+    d_in = s.expand * d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba2_params(key, d_model: int, s: SSMConfig, dtype) -> Dict:
+    d_in, n_heads, conv_dim = _dims(d_model, s)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_in + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": init_linear(ks[0], d_model, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * (1.0 / np.sqrt(s.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), dtype),
+        "out_proj": init_linear(ks[2], d_in, d_model, dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) lower-triangular segment sums (f32)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                 chunk: int) -> jax.Array:
+    """SSD scan.  x: (B,L,H,P); a: (B,L,H) [= dt*A, negative];
+    b, c: (B,L,H,N) (groups pre-expanded to heads).  Returns (B,L,H,P) f32."""
+    B_, L, H, P = x.shape
+    N = b.shape[-1]
+    nc = L // chunk
+    xs = x.reshape(B_, nc, chunk, H, P)
+    bs = b.reshape(B_, nc, chunk, H, N)
+    cs = c.reshape(B_, nc, chunk, H, N)
+    av = a.reshape(B_, nc, chunk, H).transpose(0, 3, 1, 2)  # (B,H,nc,chunk)
+    a_cumsum = jnp.cumsum(av, axis=-1)
+
+    # intra-chunk (diagonal blocks)
+    L_mat = jnp.exp(_segsum(av))  # (B,H,nc,chunk,chunk)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", cs, bs, L_mat, xs)
+
+    # chunk-final states
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)  # (B,H,nc,chunk)
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", bs, decay_states, xs)
+
+    # inter-chunk recurrence via the (nc+1)x(nc+1) decay matrix
+    chunk_decay = a_cumsum[..., -1]  # (B,H,nc)
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))  # (B,H,nc+1,nc+1)
+    init = jnp.zeros((B_, 1, H, P, N), jnp.float32)
+    all_states = jnp.concatenate([init, states], axis=1)  # (B,nc+1,H,P,N)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, all_states)
+    prev_states = new_states[:, :-1]  # state entering each chunk
+
+    # off-diagonal contribution
+    state_decay_out = jnp.exp(a_cumsum)  # (B,H,nc,chunk)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cs, prev_states, state_decay_out)
+    return (y_diag + y_off).reshape(B_, L, H, P)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B,L,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + bias[None, None, :]
+
+
+def _split_proj(proj: jax.Array, d_in: int, s: SSMConfig, n_heads: int):
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * gn]
+    dt = proj[..., d_in + d_in + 2 * gn:]
+    return z, xbc, dt
+
+
+def _expand_groups(t: jax.Array, n_heads: int, n_groups: int) -> jax.Array:
+    """(B,...,G,N) -> (B,...,H,N) by repeating each group H/G times."""
+    reps = n_heads // n_groups
+    return jnp.repeat(t, reps, axis=-2)
+
+
+def mamba2_forward(p: Dict, x: jax.Array, d_model: int, s: SSMConfig,
+                   gate_sigmoid: str = "exact") -> jax.Array:
+    """Full-sequence forward.  x: (B, L, d) -> (B, L, d)."""
+    d_in, n_heads, conv_dim = _dims(d_model, s)
+    B_, L, _ = x.shape
+    proj = x @ wval(p["in_proj"], x.dtype)
+    z, xbc, dt = _split_proj(proj, d_in, s, n_heads)
+    xbc = gated_silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]), gate_sigmoid)
+    gn = s.n_groups * s.d_state
+    xi = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + gn].reshape(B_, L, s.n_groups, s.d_state)
+    cmat = xbc[..., d_in + gn:].reshape(B_, L, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    xh = xi.reshape(B_, L, n_heads, s.head_dim).astype(jnp.float32)
+    bh = _expand_groups(bmat, n_heads, s.n_groups).astype(jnp.float32)
+    ch = _expand_groups(cmat, n_heads, s.n_groups).astype(jnp.float32)
+
+    y = _ssd_chunked(xh * dt[..., None], dt * A[None, None, :], bh, ch,
+                     min(s.chunk, L))
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B_, L, d_in).astype(x.dtype)
+    y = rmsnorm(y * gated_silu(z, gate_sigmoid), p["norm_scale"])
+    return y @ wval(p["out_proj"], y.dtype)
+
+
+def init_mamba_cache(batch: int, d_model: int, s: SSMConfig, dtype) -> Dict:
+    d_in, n_heads, conv_dim = _dims(d_model, s)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Dict, x: jax.Array, cache: Dict, d_model: int,
+                  s: SSMConfig, gate_sigmoid: str = "exact"
+                  ) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent step.  x: (B, 1, d)."""
+    d_in, n_heads, conv_dim = _dims(d_model, s)
+    B_ = x.shape[0]
+    proj = (x[:, 0] @ wval(p["in_proj"], x.dtype))  # (B, d_proj)
+    z, xbc, dt = _split_proj(proj, d_in, s, n_heads)
+
+    # conv state: (B, K-1, conv_dim) history + current input
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc_t = gated_silu(conv_out.astype(x.dtype), gate_sigmoid)
+    new_conv = hist[:, 1:]
+
+    gn = s.n_groups * s.d_state
+    xi = xbc_t[..., :d_in]
+    bmat = xbc_t[..., d_in:d_in + gn].reshape(B_, s.n_groups, s.d_state)
+    cmat = xbc_t[..., d_in + gn:].reshape(B_, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    xh = xi.reshape(B_, n_heads, s.head_dim).astype(jnp.float32)
+    bh = _expand_groups(bmat, n_heads, s.n_groups).astype(jnp.float32)  # (B,H,N)
+    ch = _expand_groups(cmat, n_heads, s.n_groups).astype(jnp.float32)
+
+    state = cache["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dt[..., None], bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch) + p["D"][None, :, None] * xh
+    y = y.reshape(B_, d_in).astype(x.dtype)
+    y = rmsnorm(y * gated_silu(z, gate_sigmoid), p["norm_scale"])
+    out = (y @ wval(p["out_proj"], y.dtype))[:, None, :]
+    return out, {"conv": new_conv, "ssm": state}

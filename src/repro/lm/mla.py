@@ -1,0 +1,159 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are projected through low-rank latents; only the compressed
+``c_kv`` (kv_lora_rank) and the shared rotary key ``k_rope`` are cached —
+the compression that makes V3's 128-head attention servable.
+
+Train/prefill path materializes per-head K/V from the latent (simple, exact).
+Decode path uses the *absorbed* form: ``q_nope`` is pushed through the
+``W_uk`` up-projection once so scores contract directly against the latent
+cache — per-step FLOPs and cache reads scale with ``kv_lora_rank``, not
+``n_heads * head_dim``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig
+from .attention import _NEG_INF, blockwise_attention, full_attention
+from .layers import apply_rope, init_linear, make_norm_params, rmsnorm, wval
+
+__all__ = ["mla_params", "mla_attention", "mla_decode", "init_mla_cache"]
+
+
+def mla_params(key, d: int, n_heads: int, m: MLAConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 8)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": make_norm_params("rmsnorm", m.q_lora_rank, dtype),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, n_heads * qk, dtype),
+        "wkv_a": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": make_norm_params("rmsnorm", m.kv_lora_rank, dtype),
+        "wkv_b": init_linear(ks[3], m.kv_lora_rank,
+                             n_heads * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_linear(ks[4], n_heads * m.v_head_dim, d, dtype),
+    }
+
+
+def _project_q(p: Dict, x: jax.Array, n_heads: int, m: MLAConfig,
+               positions: jax.Array, rope_theta: float):
+    b, s, _ = x.shape
+    q_lat = rmsnorm(x @ wval(p["wq_a"], x.dtype), p["q_norm"]["scale"])
+    q = (q_lat @ wval(p["wq_b"], x.dtype)).reshape(
+        b, s, n_heads, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p: Dict, x: jax.Array, *, n_heads: int, m: MLAConfig,
+                  rope_theta: float, chunk: int = 1024,
+                  positions: Optional[jax.Array] = None) -> jax.Array:
+    """Train/prefill: materialize per-head K/V from the latent."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope = _project_q(p, x, n_heads, m, positions, rope_theta)
+
+    kv = x @ wval(p["wkv_a"], x.dtype)  # (B,S,kv_lora+rope)
+    c_kv = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"]["scale"])
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions, rope_theta)
+
+    kv_up = (c_kv @ wval(p["wkv_b"], x.dtype)).reshape(
+        b, s, n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = kv_up[..., :m.qk_nope_head_dim]
+    v = kv_up[..., m.qk_nope_head_dim:]
+
+    # Assemble full q/k with rope parts; pad v to qk dim for the shared
+    # blockwise kernel, then slice back.
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, m.qk_rope_head_dim))], -1)
+    if m.v_head_dim < qk_dim:
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - m.v_head_dim)))
+    else:
+        v_pad = v
+    if s % chunk == 0 and s > chunk:
+        out = blockwise_attention(q, k, v_pad, causal=True, chunk=chunk)
+    else:
+        out = full_attention(q, k, v_pad, causal=True)
+    out = out[..., :m.v_head_dim].reshape(b, s, n_heads * m.v_head_dim)
+    return out @ wval(p["wo"], x.dtype)
+
+
+def init_mla_cache(batch: int, max_len: int, m: MLAConfig, dtype,
+                   quantized: bool = False) -> Dict:
+    """MLA latent cache; ``quantized`` stores the latent int8 with a
+    per-token scale (the shared rotary key stays bf16 — it is tiny)."""
+    if quantized:
+        return {
+            "c_kv_q": jnp.zeros((batch, max_len, m.kv_lora_rank), jnp.int8),
+            "c_kv_scale": jnp.zeros((batch, max_len, 1), jnp.float32),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: Dict, x: jax.Array, cache: Dict, position: jax.Array, *,
+               n_heads: int, m: MLAConfig, rope_theta: float
+               ) -> Tuple[jax.Array, Dict]:
+    """Absorbed decode: contract q through W_uk once; attend over the latent."""
+    b, _, d = x.shape
+    quantized = "c_kv_q" in cache
+    L = cache["c_kv_q" if quantized else "c_kv"].shape[1]
+    pos = jnp.broadcast_to(position, (b, 1))
+    q_nope, q_rope = _project_q(p, x, n_heads, m, pos, rope_theta)  # (B,1,H,*)
+
+    kv = x @ wval(p["wkv_a"], x.dtype)
+    c_kv_new = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"]["scale"])
+    k_rope_new = apply_rope(kv[..., None, m.kv_lora_rank:], pos, rope_theta)[:, :, 0]
+
+    zi = jnp.zeros((), position.dtype) if hasattr(position, "dtype") else 0
+
+    def upd(buf, new):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (zi, position, zi))
+
+    if quantized:
+        amax = jnp.max(jnp.abs(c_kv_new.astype(jnp.float32)), -1, keepdims=True)
+        scale_new = jnp.maximum(amax, 1e-8) / 127.0
+        q_new = jnp.clip(jnp.round(c_kv_new.astype(jnp.float32) / scale_new),
+                         -128, 127)
+        new_latent = {"c_kv_q": upd(cache["c_kv_q"], q_new),
+                      "c_kv_scale": upd(cache["c_kv_scale"], scale_new)}
+        c_kv = (new_latent["c_kv_q"].astype(jnp.float32)
+                * new_latent["c_kv_scale"]).astype(x.dtype)
+    else:
+        c_kv = upd(cache["c_kv"], c_kv_new)
+        new_latent = {"c_kv": c_kv}
+    k_rope = upd(cache["k_rope"], k_rope_new)
+
+    # Absorb W_uk into q: w_uk (kv_lora, H, qk_nope)
+    w_kv_b = wval(p["wkv_b"], x.dtype).reshape(m.kv_lora_rank, n_heads,
+                                     m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = w_kv_b[..., :m.qk_nope_head_dim]  # (r, H, dn)
+    w_uv = w_kv_b[..., m.qk_nope_head_dim:]  # (r, H, dv)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)  # (B,1,H,r)
+
+    scale = np.float32(1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32),
+                         c_kv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    idx = jnp.arange(L)
+    scores = jnp.where((idx <= position)[None, None, None, :], scores, _NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)  # (B,H,1,L)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", pr, c_kv.astype(jnp.float32))  # latent ctx
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))  # (B,1,H,dv)
+    out = out.reshape(b, 1, n_heads * m.v_head_dim).astype(x.dtype)
+    y = out @ wval(p["wo"], x.dtype)
+    return y, {**new_latent, "k_rope": k_rope}

@@ -1,0 +1,612 @@
+"""Model assembly: init / forward / loss / decode for every assigned family.
+
+Layer stacks are ``lax.scan``-ned over stacked parameters (small HLO, fast
+compile at 40–81 layers, MaxText-style).  Families:
+
+* ``attn``          — dense / MoE / MLA decoder stacks, VLM (prefix embeds),
+                      encoder-only (bidirectional, no decode)
+* ``mamba_hybrid``  — zamba2: groups of Mamba2 layers + one *shared*
+                      attention block invoked between groups
+* ``rwkv``          — rwkv6 stack (time-scan inside each layer)
+
+Public API (used by launch/, tests and benchmarks):
+  init_params(cfg, key)            -> params pytree
+  param_specs(cfg, rules)          -> matching PartitionSpec pytree
+  forward(params, batch, cfg)      -> (B, S, vocab) float32 logits
+  loss_fn(params, batch, cfg)      -> scalar CE
+  init_cache(cfg, batch, max_len)  -> decode cache pytree
+  cache_specs(cfg, rules, ...)     -> matching PartitionSpec pytree
+  serve_step(params, cache, batch, cfg) -> (logits, new_cache)
+  input_specs(cfg, shape)          -> dict of ShapeDtypeStruct stand-ins
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.sharding.rules import Rules
+from . import attention as attn_mod
+from . import mamba2 as mamba_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rwkv6 as rwkv_mod
+from .layers import (apply_linear, apply_mlp, apply_norm, init_embed,
+                     init_linear, make_norm_params, mlp_params)
+
+__all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_cache",
+           "cache_specs", "serve_step", "input_specs", "abstract_params",
+           "GATE_SIGMOID"]
+
+# Global inference-time sigmoid selection (paper C3); configs default exact.
+GATE_SIGMOID = "exact"
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# Parameter construction
+# ===========================================================================
+def _attn_layer_params(key, cfg: ArchConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    p = {"ln1": make_norm_params(cfg.norm, cfg.d_model, dt),
+         "ln2": make_norm_params(cfg.norm, cfg.d_model, dt)}
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.mla_params(ks[0], cfg.d_model, cfg.n_heads, cfg.mla, dt)
+    else:
+        p["attn"] = attn_mod.attn_params(ks[0], cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim, dt,
+                                         cfg.qkv_bias)
+    return p, ks[1]
+
+
+def _dense_layer_params(key, cfg: ArchConfig, d_ff: int) -> Dict:
+    p, k2 = _attn_layer_params(key, cfg)
+    p["mlp"] = mlp_params(k2, cfg.d_model, d_ff, cfg.mlp_type, _dtype(cfg))
+    return p
+
+
+def _moe_layer_params(key, cfg: ArchConfig) -> Dict:
+    p, k2 = _attn_layer_params(key, cfg)
+    p["moe"] = moe_mod.moe_params(k2, cfg.d_model, cfg.moe, cfg.mlp_type, _dtype(cfg))
+    return p
+
+
+def _stack(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _hybrid_structure(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_groups, mamba_per_group, tail_mamba) for the hybrid pattern."""
+    k = cfg.ssm.shared_attn_every
+    n_groups = cfg.n_layers // k
+    per_group = k - 1
+    tail = cfg.n_layers - n_groups * k
+    return n_groups, per_group, tail
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": init_embed(keys[0], cfg.vocab_size,
+                                                  cfg.d_model, dt)}
+    if cfg.modality is not None:
+        params["modality_proj"] = init_linear(keys[6], cfg.d_model, cfg.d_model, dt)
+
+    if cfg.block_pattern == "rwkv":
+        params["layers"] = _stack(
+            lambda k: rwkv_mod.rwkv6_params(k, cfg.d_model, cfg.d_ff,
+                                            cfg.n_heads, dt),
+            keys[1], cfg.n_layers)
+    elif cfg.block_pattern == "mamba_hybrid":
+        n_groups, per_group, tail = _hybrid_structure(cfg)
+
+        def mamba_layer(k):
+            return {"ln": make_norm_params(cfg.norm, cfg.d_model, dt),
+                    "mamba": mamba_mod.mamba2_params(k, cfg.d_model, cfg.ssm, dt)}
+
+        params["groups"] = _stack(
+            lambda k: _stack(mamba_layer, k, per_group), keys[1], n_groups)
+        if tail:
+            params["tail"] = _stack(mamba_layer, keys[2], tail)
+        params["shared_attn"] = _dense_layer_params(keys[3], cfg, cfg.d_ff)
+    elif cfg.moe is not None:
+        mo = cfg.moe
+        if mo.first_k_dense:
+            params["dense_layers"] = _stack(
+                lambda k: _dense_layer_params(k, cfg, mo.d_ff_dense or cfg.d_ff),
+                keys[1], mo.first_k_dense)
+        params["layers"] = _stack(lambda k: _moe_layer_params(k, cfg),
+                                  keys[2], cfg.n_layers - mo.first_k_dense)
+    else:
+        params["layers"] = _stack(lambda k: _dense_layer_params(k, cfg, cfg.d_ff),
+                                  keys[1], cfg.n_layers)
+
+    params["final_norm"] = make_norm_params(cfg.norm, cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(keys[4], cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Dict:
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ===========================================================================
+# Partition specs (structure mirrors init_params; drift guarded by tests)
+# ===========================================================================
+def _linear_spec(r: Rules, shape, din_logical, dout_logical, stacked: bool):
+    lead = (None,) if stacked else ()
+    axes = lead + (din_logical, dout_logical)
+    return r.spec(axes, shape)
+
+
+def _specs_like(r: Rules, tree, rule_fn):
+    """Map each array leaf (path, shape) -> spec via rule_fn."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [rule_fn(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_specs(cfg: ArchConfig, rules: Optional[Rules], fsdp: bool = True,
+                tree: Optional[Dict] = None):
+    """PartitionSpec pytree for params.
+
+    Policy: TP ('model') on the head/ffn/vocab/expert dimension; FSDP ('data',
+    ZeRO-3 gather-at-use) on the other big dimension.  Leading stacked-layer
+    dims stay unsharded.  Dimensions that do not divide the mesh axis are left
+    replicated (divisibility guard in :class:`Rules`).
+
+    ``tree``: override the abstract params (e.g. a quantized artifact whose
+    linears are ``{'w_q','scale'}`` — the same rules apply by shape/path).
+    """
+    aps = tree if tree is not None else abstract_params(cfg)
+    if rules is None:
+        return jax.tree.map(lambda _: P(), aps)
+    mesh = rules.mesh
+
+    def mdl(d: int):
+        return rules.resolve("model", d)
+
+    def dp(d: int):
+        if not fsdp or d < 512:
+            return None
+        # shard over every DP axis (incl. 'pod': ZeRO across pods — required
+        # for >=300B state to fit); Rules falls back to 'data'-only when the
+        # dim does not divide the full DP extent.
+        return rules.resolve("batch", d)
+
+    def rule(path: str, leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if nd <= 1:
+            return P(*([None] * nd))
+        lead = [None] * (nd - 2)
+        if "embed" in path and "table" in path:
+            return P(*lead, mdl(shape[-2]), dp(shape[-1]))
+        if "head" in path:
+            return P(*lead, dp(shape[-2]), mdl(shape[-1]))
+        if "router" in path:
+            return P(*([None] * nd))
+        if ("moe" in path and cfg.moe is not None and nd >= 3
+                and shape[-3] == cfg.moe.n_experts):
+            lead3 = [None] * (nd - 3)
+            if cfg.moe.expert_sharding == "ep2d":
+                return P(*lead3, rules.resolve("expert", shape[-3]), None, None)
+            if cfg.moe.expert_sharding == "ep":
+                return P(*lead3, mdl(shape[-3]), dp(shape[-2]), None)
+            # tp: shard the expert-ffn dimension
+            if shape[-1] == cfg.moe.d_ff_expert:
+                return P(*lead3, None, dp(shape[-2]), mdl(shape[-1]))
+            return P(*lead3, None, mdl(shape[-2]), dp(shape[-1]))
+        din, dout = shape[-2], shape[-1]
+        m = mdl(dout)
+        if m is not None:
+            return P(*lead, dp(din), m)
+        return P(*lead, mdl(din), dp(dout))
+
+    return _specs_like(rules, aps, rule)
+
+
+# ===========================================================================
+# Forward
+# ===========================================================================
+def _block_attn(cfg: ArchConfig, p: Dict, x: jax.Array,
+                positions: Optional[jax.Array] = None) -> jax.Array:
+    if cfg.mla is not None:
+        return mla_mod.mla_attention(p["attn"], x, n_heads=cfg.n_heads,
+                                     m=cfg.mla, rope_theta=cfg.rope_theta,
+                                     chunk=cfg.attn_chunk, positions=positions)
+    return attn_mod.attention(p["attn"], x, n_heads=cfg.n_heads,
+                              n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                              rope_theta=cfg.rope_theta,
+                              causal=not cfg.encoder_only,
+                              chunk=cfg.attn_chunk,
+                              window=cfg.sliding_window, positions=positions)
+
+
+def _dense_block(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
+    x = x + _block_attn(cfg, p, apply_norm(cfg.norm, p["ln1"], x))
+    x = x + apply_mlp(p["mlp"], apply_norm(cfg.norm, p["ln2"], x),
+                      cfg.mlp_type, cfg.activation, GATE_SIGMOID)
+    return x
+
+
+def _moe_ffn(cfg: ArchConfig, p: Dict, x: jax.Array, rules=None) -> jax.Array:
+    """MoE FFN, optionally scanned over sequence chunks: bounds the live
+    (E, C, d_ff) expert-activation set during long prefill (beyond-paper
+    memory lever; capacity is then enforced per chunk, which is strictly
+    closer to balanced)."""
+    ck = cfg.moe_prefill_chunk
+    b, s, d = x.shape
+    if ck and s > ck and s % ck == 0:
+        xs = x.reshape(b, s // ck, ck, d).transpose(1, 0, 2, 3)
+
+        def body(_, xc):
+            return None, moe_mod.apply_moe(xc_p, xc, cfg.moe, cfg.mlp_type,
+                                           cfg.activation,
+                                           gate_sigmoid=GATE_SIGMOID,
+                                           rules=rules)
+
+        xc_p = p
+        _, ys = jax.lax.scan(body, None, xs)
+        return ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return moe_mod.apply_moe(p, x, cfg.moe, cfg.mlp_type, cfg.activation,
+                             gate_sigmoid=GATE_SIGMOID, rules=rules)
+
+
+def _moe_block(cfg: ArchConfig, p: Dict, x: jax.Array, rules=None) -> jax.Array:
+    x = x + _block_attn(cfg, p, apply_norm(cfg.norm, p["ln1"], x))
+    x = x + _moe_ffn(cfg, p["moe"], apply_norm(cfg.norm, p["ln2"], x), rules)
+    return x
+
+
+def _scan_layers(block_fn, stacked_params, x, remat: bool):
+    def body(h, layer_p):
+        return block_fn(layer_p, h), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, stacked_params)
+    return x
+
+
+def _embed_inputs(cfg: ArchConfig, params: Dict, batch: Dict) -> jax.Array:
+    from .layers import embed_tokens
+    if cfg.modality == "audio":
+        return batch["embeds"].astype(_dtype(cfg))
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.modality == "vision" and "image_embeds" in batch:
+        img = apply_linear(params["modality_proj"],
+                           batch["image_embeds"].astype(x.dtype))
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def _shard(x: jax.Array, axes, rules: Optional[Rules]) -> jax.Array:
+    if rules is None:
+        return x
+    from repro.sharding.rules import shard as shard_act
+    return shard_act(x, axes, rules)
+
+
+def _cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean CE that never gathers the vocab axis (stays sharded on 'model').
+
+    lse via max/logsumexp reductions; the target logit via a masked reduce
+    over a global iota — both shard cleanly when logits carry
+    P(batch, None, 'model').
+    """
+    l32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(l32, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(l32 - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, l32.shape, l32.ndim - 1)
+    tgt = jnp.sum(jnp.where(vocab_iota == targets[..., None], l32, 0.0), axis=-1)
+    return jnp.mean(lse - tgt)
+
+
+def forward(params: Dict, batch: Dict, cfg: ArchConfig,
+            rules: Optional[Rules] = None) -> jax.Array:
+    """Full-sequence forward -> float32 logits (B, S_total, vocab)."""
+    x = _embed_inputs(cfg, params, batch)
+    x = _shard(x, ("batch", None, None), rules)
+
+    if cfg.block_pattern == "rwkv":
+        def rwkv_block(p, h):
+            return rwkv_mod.rwkv6_forward(p, h, cfg.n_heads, GATE_SIGMOID)
+        x = _scan_layers(rwkv_block, params["layers"], x, cfg.remat)
+    elif cfg.block_pattern == "mamba_hybrid":
+        def mamba_block(p, h):
+            return h + mamba_mod.mamba2_forward(
+                p["mamba"], apply_norm(cfg.norm, p["ln"], h), cfg.d_model,
+                cfg.ssm, GATE_SIGMOID)
+
+        def group_block(p, h):
+            h = _scan_layers(mamba_block, p, h, cfg.remat)
+            return _dense_block(cfg, params["shared_attn"], h)
+
+        def group_body(h, group_p):
+            return group_block(group_p, h), None
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+        if "tail" in params:
+            x = _scan_layers(mamba_block, params["tail"], x, cfg.remat)
+    elif cfg.moe is not None:
+        if "dense_layers" in params:
+            x = _scan_layers(lambda p, h: _dense_block(cfg, p, h),
+                             params["dense_layers"], x, cfg.remat)
+        x = _scan_layers(lambda p, h: _moe_block(cfg, p, h, rules),
+                         params["layers"], x, cfg.remat)
+    else:
+        x = _scan_layers(lambda p, h: _dense_block(cfg, p, h),
+                         params["layers"], x, cfg.remat)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"]["table"].T.astype(jnp.float32)
+    else:
+        logits = apply_linear(params["head"], x).astype(jnp.float32)
+    return _shard(logits, ("batch", None, "model"), rules)
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ArchConfig,
+            rules: Optional[Rules] = None) -> jax.Array:
+    logits = forward(params, batch, cfg, rules)
+    if cfg.encoder_only or cfg.modality == "audio":
+        return _cross_entropy(logits, batch["labels"])
+    tokens = batch["tokens"]
+    n_prefix = logits.shape[1] - tokens.shape[1]
+    logits_text = logits[:, n_prefix:, :]
+    return _cross_entropy(logits_text[:, :-1], tokens[:, 1:])
+
+
+# ===========================================================================
+# Decode (serve_step)
+# ===========================================================================
+def _scan_decode(body, x, stacked_params, stacked_cache):
+    """Scan layers with the cache in the *carry* (not xs/ys).
+
+    Carrying the stacked cache keeps XLA's while-loop input/output aliasing —
+    the cache is updated in place instead of double-buffering a fresh
+    multi-GB ys output (measured 55GB -> ~22GB temp on the 32B MHA decode).
+    ``body(layer_params, h, layer_cache) -> (h, new_layer_cache)``.
+    """
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+
+    def step(carry, inp):
+        h, cache = carry
+        i, p = inp
+        lc = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            cache)
+        h, nc = body(p, h, lc)
+        cache = jax.tree.map(
+            lambda c, new: jax.lax.dynamic_update_index_in_dim(
+                c, new.astype(c.dtype), i, 0),
+            cache, nc)
+        return (h, cache), None
+
+    (x, cache), _ = jax.lax.scan(
+        step, (x, stacked_cache), (jnp.arange(n, dtype=jnp.int32),
+                                   stacked_params))
+    return x, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    dt = _dtype(cfg)
+    kv_q = cfg.kv_cache_dtype == "int8"
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.block_pattern == "rwkv":
+        cache["layers"] = jax.vmap(
+            lambda _: rwkv_mod.init_rwkv_cache(batch, cfg.d_model, cfg.n_heads, dt)
+        )(jnp.arange(cfg.n_layers))
+    elif cfg.block_pattern == "mamba_hybrid":
+        n_groups, per_group, tail = _hybrid_structure(cfg)
+        mk = lambda _: mamba_mod.init_mamba_cache(batch, cfg.d_model, cfg.ssm, dt)
+        cache["groups"] = jax.vmap(jax.vmap(mk))(
+            jnp.zeros((n_groups, per_group)))
+        if tail:
+            cache["tail"] = jax.vmap(mk)(jnp.arange(tail))
+        win = min(cfg.sliding_window or max_len, max_len)
+        cache["shared_attn"] = jax.vmap(
+            lambda _: attn_mod.init_kv_cache(batch, win, cfg.n_kv_heads,
+                                             cfg.head_dim, dt, quantized=kv_q)
+        )(jnp.arange(n_groups))
+    elif cfg.mla is not None:
+        mo = cfg.moe
+        n_dense = mo.first_k_dense if mo else 0
+        mk = lambda _: mla_mod.init_mla_cache(batch, max_len, cfg.mla, dt,
+                                              quantized=kv_q)
+        if n_dense:
+            cache["dense_layers"] = jax.vmap(mk)(jnp.arange(n_dense))
+        cache["layers"] = jax.vmap(mk)(jnp.arange(cfg.n_layers - n_dense))
+    else:
+        mo = cfg.moe
+        n_dense = mo.first_k_dense if mo else 0
+        mk = lambda _: attn_mod.init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                              cfg.head_dim, dt, quantized=kv_q)
+        if n_dense:
+            cache["dense_layers"] = jax.vmap(mk)(jnp.arange(n_dense))
+        cache["layers"] = jax.vmap(mk)(jnp.arange(cfg.n_layers - n_dense))
+    return cache
+
+
+def _decode_attn(cfg: ArchConfig, p: Dict, x, layer_cache, pos):
+    if cfg.mla is not None:
+        return mla_mod.mla_decode(p["attn"], x, layer_cache, pos,
+                                  n_heads=cfg.n_heads, m=cfg.mla,
+                                  rope_theta=cfg.rope_theta)
+    return attn_mod.decode_attention(p["attn"], x, layer_cache, pos,
+                                     n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     head_dim=cfg.head_dim,
+                                     rope_theta=cfg.rope_theta,
+                                     window=cfg.sliding_window)
+
+
+def _decode_dense_block(cfg, p, x, layer_cache, pos):
+    att, new_cache = _decode_attn(cfg, p, apply_norm(cfg.norm, p["ln1"], x),
+                                  layer_cache, pos)
+    x = x + att
+    x = x + apply_mlp(p["mlp"], apply_norm(cfg.norm, p["ln2"], x),
+                      cfg.mlp_type, cfg.activation, GATE_SIGMOID)
+    return x, new_cache
+
+
+def _decode_moe_block(cfg, p, x, layer_cache, pos, rules=None):
+    att, new_cache = _decode_attn(cfg, p, apply_norm(cfg.norm, p["ln1"], x),
+                                  layer_cache, pos)
+    x = x + att
+    x = x + moe_mod.apply_moe(p["moe"], apply_norm(cfg.norm, p["ln2"], x),
+                              cfg.moe, cfg.mlp_type, cfg.activation,
+                              gate_sigmoid=GATE_SIGMOID, rules=rules)
+    return x, new_cache
+
+
+def serve_step(params: Dict, cache: Dict, batch: Dict, cfg: ArchConfig,
+               rules: Optional[Rules] = None) -> Tuple[jax.Array, Dict]:
+    """One decode step: new token(s) (B,) -> logits (B, vocab), updated cache."""
+    from .layers import embed_tokens
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], batch["token"][:, None])  # (B,1,d)
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    if cfg.block_pattern == "rwkv":
+        x, new_cache["layers"] = _scan_decode(
+            lambda p, h, c: rwkv_mod.rwkv6_decode(p, h, c, cfg.n_heads,
+                                                  GATE_SIGMOID),
+            x, params["layers"], cache["layers"])
+    elif cfg.block_pattern == "mamba_hybrid":
+        def mamba_body(p, h, c):
+            out, nc = mamba_mod.mamba2_decode(p["mamba"],
+                                              apply_norm(cfg.norm, p["ln"], h),
+                                              c, cfg.d_model, cfg.ssm,
+                                              GATE_SIGMOID)
+            return h + out, nc
+
+        def group_body(gp, h, gc_ac):
+            gc, ac = gc_ac
+            h, new_gc = _scan_decode(mamba_body, h, gp, gc)
+            # shift-buffer windowed decode handles pos >= window internally
+            att, new_ac = _decode_attn(
+                cfg, params["shared_attn"],
+                apply_norm(cfg.norm, params["shared_attn"]["ln1"], h), ac, pos)
+            h = h + att
+            h = h + apply_mlp(params["shared_attn"]["mlp"],
+                              apply_norm(cfg.norm, params["shared_attn"]["ln2"], h),
+                              cfg.mlp_type, cfg.activation, GATE_SIGMOID)
+            return h, (new_gc, new_ac)
+
+        x, (new_cache["groups"], new_cache["shared_attn"]) = _scan_decode(
+            group_body, x, params["groups"],
+            (cache["groups"], cache["shared_attn"]))
+        if "tail" in params:
+            x, new_cache["tail"] = _scan_decode(
+                mamba_body, x, params["tail"], cache["tail"])
+    else:
+        if cfg.moe is not None:
+            block = functools.partial(_decode_moe_block, rules=rules)
+        else:
+            block = _decode_dense_block
+        if "dense_layers" in params:
+            x, new_cache["dense_layers"] = _scan_decode(
+                lambda p, h, c: _decode_dense_block(cfg, p, h, c, pos),
+                x, params["dense_layers"], cache["dense_layers"])
+        x, new_cache["layers"] = _scan_decode(
+            lambda p, h, c: block(cfg, p, h, c, pos),
+            x, params["layers"], cache["layers"])
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x[:, 0].astype(jnp.float32) @ params["embed"]["table"].T.astype(jnp.float32)
+    else:
+        logits = apply_linear(params["head"], x[:, 0]).astype(jnp.float32)
+    return _shard(logits, ("batch", "model"), rules), new_cache
+
+
+# ===========================================================================
+# Input specs (dry-run stand-ins; no allocation)
+# ===========================================================================
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.modality == "audio":
+            return {"embeds": sds((B, S, cfg.d_model), dt),
+                    "labels": sds((B, S), i32)}
+        if cfg.modality == "vision":
+            n_img = cfg.n_prefix_embeds
+            return {"tokens": sds((B, S - n_img), i32),
+                    "image_embeds": sds((B, n_img, cfg.d_model), f32)}
+        return {"tokens": sds((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.modality == "audio":
+            return {"embeds": sds((B, S, cfg.d_model), dt),
+                    "labels": sds((B, S), i32)}
+        if cfg.modality == "vision":
+            n_img = cfg.n_prefix_embeds
+            return {"tokens": sds((B, S - n_img), i32),
+                    "image_embeds": sds((B, n_img, cfg.d_model), f32)}
+        return {"tokens": sds((B, S), i32)}
+    # decode
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"token": sds((B,), i32), "cache": cache}
+
+
+# ===========================================================================
+# Cache partition specs
+# ===========================================================================
+def cache_specs(cfg: ArchConfig, rules: Optional[Rules], batch: int,
+                max_len: int):
+    ac = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    if rules is None:
+        return jax.tree.map(lambda _: P(), ac)
+
+    def rule(path: str, leaf) -> P:
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        # Find the batch dim (== batch) and a heads-like dim to shard.
+        spec = [None] * nd
+        for i, d in enumerate(shape):
+            if d == batch:
+                ax = rules.resolve("batch", d)
+                if ax is not None:
+                    spec[i] = ax
+                break
+        # shard kv-heads / heads / latent dims on model when divisible
+        assigned_model = False
+        for i in range(nd - 1, 0, -1):
+            if spec[i] is None and shape[i] in (cfg.n_kv_heads, cfg.n_heads) \
+                    and rules.resolve("model", shape[i]):
+                spec[i] = rules.resolve("model", shape[i])
+                assigned_model = True
+                break
+        # fallback: sequence-shard the cache length dim on 'model' — keeps
+        # e.g. MHA (kv=40) or GQA kv=2 caches from replicating 16x; decode
+        # softmax reductions over the sharded length become all-reduces.
+        if not assigned_model:
+            for i in range(1, nd):
+                if spec[i] is None and shape[i] == max_len \
+                        and rules.resolve("model", shape[i]):
+                    spec[i] = rules.resolve("model", shape[i])
+                    break
+        return P(*spec)
+
+    return _specs_like(rules, ac, rule)

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch + EP/TP.
+
+Dispatch is the sort-and-slot scheme (GShard capacity semantics without the
+O(T·E·C) one-hot): flatten (token, k) assignments, argsort by expert, compute
+each assignment's position within its expert segment, scatter into an
+(E·C, d) buffer, run a grouped einsum ``ecd,edf->ecf`` over experts, gather
+back and combine with router weights.  Every shape is static; assignments
+beyond capacity are dropped (weighted 0), matching Switch/GShard.
+
+Sharding: the expert dimension of the grouped einsum carries either
+* ``ep``: experts sharded over the model axis (deepseek-v3: 256/16), XLA
+  inserts the all-to-alls at the buffer boundary, or
+* ``tp``: expert count not divisible by the mesh (grok: 8 experts/16-way) —
+  the expert ``d_ff`` columns are sharded instead.
+
+The aux-loss-free balancing (deepseek) adds a per-expert bias to the routing
+score for *selection only* (gate weights use unbiased scores).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from .layers import activation_fn, init_linear
+
+__all__ = ["moe_params", "apply_moe"]
+
+
+def moe_params(key, d: int, cfg: MoEConfig, mlp_type: str, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, e), jnp.float32) * s
+                         ).astype(jnp.float32)},  # router always f32
+        "wi": {"w": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * s).astype(dtype)},
+        "wo": {"w": (jax.random.normal(ks[2], (e, f, d), jnp.float32)
+                     * (1.0 / np.sqrt(f))).astype(dtype)},
+    }
+    if mlp_type == "glu":
+        p["wg"] = {"w": (jax.random.normal(ks[3], (e, d, f), jnp.float32) * s).astype(dtype)}
+    if cfg.router_aux_free:
+        p["router"]["bias"] = jnp.zeros((e,), jnp.float32)
+    if cfg.n_shared:
+        from .layers import mlp_params
+        p["shared"] = mlp_params(ks[4], d, cfg.n_shared * f, mlp_type, dtype)
+    return p
+
+
+def _route(p: Dict, x32: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x32: (T, d) f32 -> (weights (T,k), experts (T,k))."""
+    logits = x32 @ p["router"]["w"]  # (T, E)
+    scores = jax.nn.sigmoid(logits) if cfg.router_aux_free else jax.nn.softmax(logits, -1)
+    select = scores + p["router"]["bias"][None, :] if cfg.router_aux_free else scores
+    _, experts = jax.lax.top_k(select, cfg.top_k)  # (T, k)
+    w = jnp.take_along_axis(scores, experts, axis=1)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, experts
+
+
+def apply_moe(p: Dict, x: jax.Array, cfg: MoEConfig, mlp_type: str,
+              activation: str, capacity_factor: Optional[float] = None,
+              gate_sigmoid: str = "exact", rules=None) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+    act = activation_fn(activation, gate_sigmoid)
+
+    def _c(arr, axes):
+        if rules is None:
+            return arr
+        from repro.sharding.rules import shard as shard_act
+        return shard_act(arr, axes, rules)
+
+    weights, experts = _route(p, xf.astype(jnp.float32), cfg)  # (T,k)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    tk = t * k
+    flat_expert = experts.reshape(tk)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_weight = weights.reshape(tk)
+    order = jnp.argsort(flat_expert)  # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_weight = flat_weight[order]
+
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    capacity = max(1, int(np.ceil(t * k / e * cf)))
+    counts = jnp.bincount(flat_expert, length=e)  # (E,)
+    seg_start = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos_in_expert = jnp.arange(tk) - seg_start[sorted_expert]
+    keep = pos_in_expert < capacity
+    slot = sorted_expert * capacity + jnp.minimum(pos_in_expert, capacity - 1)
+
+    # ---- integer routing tables (scatter-free float path) -------------------
+    # Scattering (TK, d) activations materializes an 8x token copy that GSPMD
+    # replicates badly (measured +20GB temp on ds3).  Instead scatter only
+    # int32 routing tables, then move floats with gathers, which partition
+    # cleanly: slot -> source token (dispatch), (token, j) -> slot (combine).
+    oob_tok = jnp.int32(t)
+    slot_token = jnp.full((e * capacity,), oob_tok, jnp.int32)
+    slot_token = slot_token.at[slot].set(
+        jnp.where(keep, sorted_token, oob_tok).astype(jnp.int32), mode="drop")
+    oob_slot = jnp.int32(e * capacity)
+    token_slots = jnp.full((t, k), oob_slot, jnp.int32)
+    token_slots = token_slots.at[sorted_token, (order % k)].set(
+        jnp.where(keep, slot, oob_slot).astype(jnp.int32), mode="drop")
+    token_weights = jnp.zeros((t, k), jnp.float32)
+    token_weights = token_weights.at[sorted_token, (order % k)].set(
+        jnp.where(keep, sorted_weight, 0.0), mode="drop")
+
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), x.dtype)], 0)
+    buf = xf_pad[slot_token].reshape(e, capacity, d)
+    # EP: expert-major buffer lives sharded on the model axis ('ep') or over
+    # the whole mesh ('ep2d': one expert group per chip — tokens travel, the
+    # 1.3TB of expert weights never do).  The constraint is what turns the
+    # gather into an all-to-all instead of an all-gather.
+    ep = cfg.expert_sharding == "ep"
+    exp_axis = {"ep": "model", "ep2d": "expert", "tp": None}[cfg.expert_sharding]
+    # capacity rows ride the DP axes for 'ep'/'tp' (for 'tp' the expert dim is
+    # replicated — pinning it with None would otherwise force replication of
+    # the whole buffer; measured +45GB on grok prefill).
+    cap_ax = "batch" if cfg.expert_sharding in ("ep", "tp") else None
+    buf = _c(buf, (exp_axis, cap_ax, None))
+
+    # ---- expert compute (grouped einsum; sharded on experts or d_ff) --------
+    from .layers import wval
+    h = jnp.einsum("ecd,edf->ecf", buf, wval(p["wi"], x.dtype))
+    h = _c(h, (exp_axis, cap_ax,
+               "model" if cfg.expert_sharding == "tp" else None))
+    if mlp_type == "glu":
+        h = act(jnp.einsum("ecd,edf->ecf", buf, wval(p["wg"], x.dtype))) * h
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wval(p["wo"], x.dtype))
+    out_buf = _c(out_buf, (exp_axis, cap_ax, None))
+    out_buf = out_buf.reshape(e * capacity, d)
+
+    # ---- combine (pure gathers; OOB slots hit the zero row) -----------------
+    out_pad = jnp.concatenate([out_buf, jnp.zeros((1, d), out_buf.dtype)], 0)
+    outk = out_pad[jnp.minimum(token_slots, oob_slot)]  # (T, k, d)
+    out = jnp.sum(outk * token_weights[..., None].astype(outk.dtype), axis=1)
+    out = _c(out, ("batch", None))
+
+    if cfg.n_shared:
+        from .layers import apply_mlp
+        out = out + apply_mlp(p["shared"], xf, mlp_type, activation, gate_sigmoid)
+    return out.reshape(b, s, d).astype(x.dtype)

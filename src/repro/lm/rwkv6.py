@@ -1,0 +1,184 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Per layer: a time-mix block (r/k/v/g/w projections over ddlerp-shifted
+inputs, per-head matrix-valued WKV state with per-channel data-dependent
+decay ``w_t = exp(-exp(ŵ_t))``) and a channel-mix block (squared-ReLU FFN
+gated by a sigmoid receptance).
+
+Train/prefill runs a ``lax.scan`` over time (one fused recurrence step per
+token); decode carries ``(shift_tm, shift_cm, wkv_state)`` — O(1) in sequence
+length, so rwkv6 runs the ``long_500k`` cell.
+
+Every sigmoid here (receptances, gate) routes through the configurable
+sigmoid — the paper's PWL approximations (C3) land on this family natively.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import get_sigmoid
+from .layers import init_linear
+
+__all__ = ["rwkv6_params", "rwkv6_forward", "rwkv6_decode", "init_rwkv_cache"]
+
+_LORA_DIM = 64
+
+
+def rwkv6_params(key, d: int, d_ff: int, n_heads: int, dtype) -> Dict:
+    ks = jax.random.split(key, 16)
+    head_dim = d // n_heads
+    s = 1.0 / np.sqrt(d)
+
+    def lin(k_, din, dout):
+        return (jax.random.normal(k_, (din, dout), jnp.float32)
+                * (1.0 / np.sqrt(din))).astype(dtype)
+
+    return {
+        # time-mix
+        "mu": jnp.full((5, d), 0.5, jnp.float32),  # ddlerp anchors r,k,v,g,w
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "lora_a": lin(ks[0], d, _LORA_DIM * 5),
+        "lora_b": lin(ks[1], _LORA_DIM * 5, d * 5) * 0.1,
+        "w0": jnp.full((d,), -1.0, jnp.float32),  # decay base
+        "w_lora_a": lin(ks[2], d, _LORA_DIM),
+        "w_lora_b": lin(ks[3], _LORA_DIM, d) * 0.1,
+        "wr": lin(ks[4], d, d),
+        "wk": lin(ks[5], d, d),
+        "wv": lin(ks[6], d, d),
+        "wg": lin(ks[7], d, d),
+        "wo": lin(ks[8], d, d),
+        "u": jnp.zeros((n_heads, head_dim), jnp.float32),  # bonus
+        "ln_x_scale": jnp.ones((d,), jnp.float32),  # per-head groupnorm
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": lin(ks[9], d, d_ff),
+        "cm_wv": lin(ks[10], d_ff, d),
+        "cm_wr": lin(ks[11], d, d),
+        # pre-norms (RWKV uses LayerNorm before each sub-block)
+        "ln1_scale": jnp.zeros((d,), jnp.float32),
+        "ln1_bias": jnp.zeros((d,), jnp.float32),
+        "ln2_scale": jnp.zeros((d,), jnp.float32),
+        "ln2_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _ln(x, scale, bias):
+    from .layers import layernorm
+    return layernorm(x, scale, bias)
+
+
+def _ddlerp(p: Dict, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Data-dependent token-shift interpolation -> (5, ..., d) for r,k,v,g,w."""
+    diff = (x_prev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xx = xf + diff * p["mu_x"]
+    lora = jnp.tanh(xx @ p["lora_a"].astype(jnp.float32))
+    adjust = (lora @ p["lora_b"].astype(jnp.float32))
+    adjust = adjust.reshape(*adjust.shape[:-1], 5, x.shape[-1])
+    mixed = xf[..., None, :] + diff[..., None, :] * (p["mu"] + adjust)
+    return jnp.moveaxis(mixed, -2, 0)  # (5, ..., d)
+
+
+def _decay(p: Dict, xw: jax.Array) -> jax.Array:
+    """w_t in (0,1): exp(-exp(w0 + lora(xw)))."""
+    lw = jnp.tanh(xw @ p["w_lora_a"].astype(jnp.float32)) @ p["w_lora_b"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(p["w0"] + lw))
+
+
+def _wkv_step(state, r, k, v, w, u, n_heads):
+    """state: (B,H,N,N);  r,k,v: (B,H,N);  w: (B,H,N) decay; u: (H,N)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    new_state = state * w[..., None] + kv
+    return new_state, out
+
+
+def _time_mix(p: Dict, x: jax.Array, x_prev: jax.Array, state: jax.Array,
+              n_heads: int, gate_sigmoid: str):
+    """One token for all batches.  x: (B, d).  Returns (out, new_state)."""
+    sig = get_sigmoid(gate_sigmoid)
+    d = x.shape[-1]
+    hd = d // n_heads
+    xr, xk, xv, xg, xw = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"].astype(jnp.float32)).reshape(-1, n_heads, hd)
+    k = (xk @ p["wk"].astype(jnp.float32)).reshape(-1, n_heads, hd)
+    v = (xv @ p["wv"].astype(jnp.float32)).reshape(-1, n_heads, hd)
+    gg = xg @ p["wg"].astype(jnp.float32)
+    g = gg * sig(gg)  # silu gate
+    w = _decay(p, xw).reshape(-1, n_heads, hd)
+    new_state, out = _wkv_step(state, r, k, v, w, p["u"], n_heads)
+    out = out.reshape(-1, d)
+    # per-head groupnorm
+    oh = out.reshape(-1, n_heads, hd)
+    mean = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    out = ((oh - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(-1, d) * p["ln_x_scale"]
+    out = out * g
+    return (out @ p["wo"].astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _channel_mix(p: Dict, x: jax.Array, x_prev: jax.Array, gate_sigmoid: str):
+    sig = get_sigmoid(gate_sigmoid)
+    xf = x.astype(jnp.float32)
+    diff = (x_prev - x).astype(jnp.float32)
+    xk = xf + diff * p["cm_mu_k"]
+    xr = xf + diff * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(jnp.float32)))
+    kv = k @ p["cm_wv"].astype(jnp.float32)
+    return (sig(xr @ p["cm_wr"].astype(jnp.float32)) * kv).astype(x.dtype)
+
+
+def rwkv6_forward(p: Dict, x: jax.Array, n_heads: int,
+                  gate_sigmoid: str = "exact") -> jax.Array:
+    """Full-sequence layer forward.  x: (B, L, d) -> (B, L, d).
+
+    Scans over time with the fused (time-mix + channel-mix) step.
+    """
+    B_, L, d = x.shape
+    hd = d // n_heads
+    state0 = jnp.zeros((B_, n_heads, hd, hd), jnp.float32)
+    prev_tm0 = jnp.zeros((B_, d), x.dtype)
+    prev_cm0 = jnp.zeros((B_, d), x.dtype)
+
+    def step(carry, xt):
+        state, prev_tm, prev_cm = carry
+        xn = _ln(xt, p["ln1_scale"], p["ln1_bias"])
+        att, state = _time_mix(p, xn, prev_tm, state, n_heads, gate_sigmoid)
+        h = xt + att
+        hn = _ln(h, p["ln2_scale"], p["ln2_bias"])
+        ffn = _channel_mix(p, hn, prev_cm, gate_sigmoid)
+        out = h + ffn
+        return (state, xn, hn), out
+
+    (_, _, _), ys = jax.lax.scan(step, (state0, prev_tm0, prev_cm0),
+                                 x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)
+
+
+def init_rwkv_cache(batch: int, d: int, n_heads: int, dtype) -> Dict:
+    hd = d // n_heads
+    return {
+        "wkv": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def rwkv6_decode(p: Dict, x: jax.Array, cache: Dict, n_heads: int,
+                 gate_sigmoid: str = "exact") -> Tuple[jax.Array, Dict]:
+    """One-token step.  x: (B, 1, d)."""
+    xt = x[:, 0]
+    xn = _ln(xt, p["ln1_scale"], p["ln1_bias"])
+    att, state = _time_mix(p, xn, cache["shift_tm"], cache["wkv"], n_heads,
+                           gate_sigmoid)
+    h = xt + att
+    hn = _ln(h, p["ln2_scale"], p["ln2_bias"])
+    ffn = _channel_mix(p, hn, cache["shift_cm"], gate_sigmoid)
+    out = h + ffn
+    return out[:, None, :], {"wkv": state, "shift_tm": xn, "shift_cm": hn}

@@ -1,0 +1,24 @@
+"""Classical classifier zoo (paper §III-B) + trainers.
+
+The paper's pipeline trains with WEKA / scikit-learn; here the trainers are
+implemented natively (numpy/JAX) with the same model *families* and serving
+semantics: J48/CART decision trees, multinomial logistic regression, MLP with
+sigmoid hidden units, and SVMs with linear / polynomial / RBF kernels.
+"""
+
+from .decision_tree import DecisionTreeModel, train_decision_tree
+from .logistic import LogisticModel, train_logistic
+from .mlp import MLPModel, train_mlp
+from .svm import SVMModel, train_linear_svm, train_kernel_svm
+
+__all__ = [
+    "DecisionTreeModel",
+    "train_decision_tree",
+    "LogisticModel",
+    "train_logistic",
+    "MLPModel",
+    "train_mlp",
+    "SVMModel",
+    "train_linear_svm",
+    "train_kernel_svm",
+]

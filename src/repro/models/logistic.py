@@ -1,0 +1,58 @@
+"""Multinomial logistic regression (Logistic / LogisticRegression analogue)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optim import adamw, apply_updates
+
+__all__ = ["LogisticModel", "train_logistic"]
+
+
+@dataclasses.dataclass
+class LogisticModel:
+    coef: np.ndarray  # (F, C)
+    intercept: np.ndarray  # (C,)
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        return x @ jnp.asarray(self.coef) + jnp.asarray(self.intercept)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jnp.argmax(self.logits(jnp.asarray(x, jnp.float32)), axis=-1), np.int32)
+
+
+def train_logistic(x: np.ndarray, y: np.ndarray, n_classes: int,
+                   epochs: int = 80, batch_size: int = 512, lr: float = 5e-3,
+                   l2: float = 1e-4, seed: int = 0) -> LogisticModel:
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.int32)
+    params = {
+        "w": jnp.zeros((x.shape[1], n_classes), jnp.float32),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+    opt = adamw(lr, weight_decay=l2)
+    state = opt.init(params)
+
+    def loss_fn(p, xb, yb):
+        logp = jax.nn.log_softmax(xb @ p["w"] + p["b"])
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+    @jax.jit
+    def step(p, s, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss
+
+    n = x.shape[0]
+    rng = np.random.RandomState(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = perm[i:i + batch_size]
+            params, state, _ = step(params, state, x[idx], y[idx])
+
+    return LogisticModel(np.asarray(params["w"]), np.asarray(params["b"]))

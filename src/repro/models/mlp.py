@@ -1,0 +1,96 @@
+"""MLP classifier (MultilayerPerceptron / MLPClassifier analogue).
+
+Sigmoid hidden units (the paper's experiments force sigmoid so the C3
+approximations apply), linear output layer, softmax cross-entropy training
+with AdamW.  The *desktop* model is float32; conversion to the embedded
+artifact happens in :mod:`repro.core.convert`.
+
+The embedded inference loop reuses one activation buffer between layers
+(paper §III-D "reuse the output buffer of one layer as input to the next") —
+in JAX this is the natural dataflow, noted here for the mapping table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optim import adamw, apply_updates
+
+__all__ = ["MLPModel", "train_mlp"]
+
+
+@dataclasses.dataclass
+class MLPModel:
+    weights: List[np.ndarray]  # per layer (in, out)
+    biases: List[np.ndarray]  # per layer (out,)
+    hidden_activation: str = "sigmoid"
+
+    @property
+    def layer_sizes(self) -> Tuple[int, ...]:
+        return tuple([self.weights[0].shape[0]] + [w.shape[1] for w in self.weights])
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        h = x
+        for i, (w, b) in enumerate(zip(self.weights, self.biases)):
+            h = h @ jnp.asarray(w) + jnp.asarray(b)
+            if i < len(self.weights) - 1:
+                h = jax.nn.sigmoid(h)
+        return h
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jnp.argmax(self.logits(jnp.asarray(x, jnp.float32)), axis=-1), np.int32)
+
+
+def _init_params(key, sizes: Sequence[int]):
+    params = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        scale = np.sqrt(2.0 / (sizes[i] + sizes[i + 1]))
+        w = jax.random.normal(sub, (sizes[i], sizes[i + 1]), jnp.float32) * scale
+        params.append({"w": w, "b": jnp.zeros((sizes[i + 1],), jnp.float32)})
+    return params
+
+
+def train_mlp(x: np.ndarray, y: np.ndarray, n_classes: int,
+              hidden: Sequence[int] = (100,), epochs: int = 60,
+              batch_size: int = 256, lr: float = 3e-3, seed: int = 0) -> MLPModel:
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.int32)
+    sizes = [x.shape[1], *hidden, n_classes]
+    key = jax.random.PRNGKey(seed)
+    params = _init_params(key, sizes)
+    opt = adamw(lr, weight_decay=1e-5)
+    state = opt.init(params)
+
+    def loss_fn(p, xb, yb):
+        h = xb
+        for i, layer in enumerate(p):
+            h = h @ layer["w"] + layer["b"]
+            if i < len(p) - 1:
+                h = jax.nn.sigmoid(h)
+        logp = jax.nn.log_softmax(h)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+    @jax.jit
+    def step(p, s, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss
+
+    n = x.shape[0]
+    rng = np.random.RandomState(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = perm[i:i + batch_size]
+            params, state, _ = step(params, state, x[idx], y[idx])
+
+    return MLPModel(
+        weights=[np.asarray(l["w"], np.float32) for l in params],
+        biases=[np.asarray(l["b"], np.float32) for l in params],
+    )

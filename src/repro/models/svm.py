@@ -1,0 +1,164 @@
+"""SVM classifiers: linear (LinearSVC/SMO-linear) and kernelized (SVC poly/RBF).
+
+Serving semantics match libsvm-style artifacts — exactly what EmbML converts:
+
+* linear:  ``argmax_c  x @ coef[:, c] + b[c]``
+* kernel:  ``argmax_c  sum_m alpha[m, c] * K(x, sv_m) + b[c]`` with
+  ``K`` ∈ {poly(gamma, coef0, degree), rbf(gamma)} over stored support vectors.
+
+Training: one-vs-rest squared-hinge minimization (Adam).  The kernel machine
+learns dual coefficients over a class-stratified prototype set (Nyström-style
+support set) rather than running SMO — the *artifact* and its inference math
+are identical in shape/semantics to libsvm's, which is the object under test
+in the paper (EmbML converts trained artifacts; it never touches training).
+
+The kernel trainer runs in float64: the paper (§V-A) attributes poly-SVC
+accuracy loss on-device to serving a double-precision model in single
+precision — converting this f64 artifact to f32/fxp reproduces that effect.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optim import adamw, apply_updates
+
+__all__ = ["SVMModel", "train_linear_svm", "train_kernel_svm"]
+
+
+@dataclasses.dataclass
+class SVMModel:
+    kernel: str  # 'linear' | 'poly' | 'rbf'
+    coef: Optional[np.ndarray] = None  # linear: (F, C)
+    intercept: Optional[np.ndarray] = None  # (C,)
+    support_vectors: Optional[np.ndarray] = None  # kernel: (M, F)
+    dual_coef: Optional[np.ndarray] = None  # kernel: (M, C)
+    gamma: float = 1.0
+    coef0: float = 0.0
+    degree: int = 2
+    dtype: str = "float64"  # training precision of the artifact
+
+    def decision(self, x: jax.Array) -> jax.Array:
+        dt = jnp.float64 if self.dtype == "float64" else jnp.float32
+        x = x.astype(dt)
+        if self.kernel == "linear":
+            return x @ jnp.asarray(self.coef, dt) + jnp.asarray(self.intercept, dt)
+        sv = jnp.asarray(self.support_vectors, dt)
+        if self.kernel == "poly":
+            k = (self.gamma * (x @ sv.T) + self.coef0) ** self.degree
+        elif self.kernel == "rbf":
+            d2 = (jnp.sum(x * x, -1, keepdims=True) - 2 * x @ sv.T
+                  + jnp.sum(sv * sv, -1)[None, :])
+            k = jnp.exp(-self.gamma * d2)
+        else:
+            raise KeyError(self.kernel)
+        return k @ jnp.asarray(self.dual_coef, dt) + jnp.asarray(self.intercept, dt)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.asarray(jnp.argmax(self.decision(jnp.asarray(x)), axis=-1), np.int32)
+
+
+def _ovr_targets(y: np.ndarray, n_classes: int) -> np.ndarray:
+    t = -np.ones((y.shape[0], n_classes), np.float32)
+    t[np.arange(y.shape[0]), y] = 1.0
+    return t
+
+
+def train_linear_svm(x: np.ndarray, y: np.ndarray, n_classes: int,
+                     epochs: int = 60, batch_size: int = 512, lr: float = 3e-3,
+                     l2: float = 1e-4, seed: int = 0) -> SVMModel:
+    x = jnp.asarray(x, jnp.float32)
+    t = jnp.asarray(_ovr_targets(np.asarray(y), n_classes))
+    params = {"w": jnp.zeros((x.shape[1], n_classes), jnp.float32),
+              "b": jnp.zeros((n_classes,), jnp.float32)}
+    opt = adamw(lr, weight_decay=l2)
+    state = opt.init(params)
+
+    def loss_fn(p, xb, tb):
+        margin = jnp.maximum(0.0, 1.0 - tb * (xb @ p["w"] + p["b"]))
+        return jnp.mean(margin ** 2)
+
+    @jax.jit
+    def step(p, s, xb, tb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, tb)
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss
+
+    n = x.shape[0]
+    rng = np.random.RandomState(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = perm[i:i + batch_size]
+            params, state, _ = step(params, state, x[idx], t[idx])
+    return SVMModel("linear", coef=np.asarray(params["w"], np.float32),
+                    intercept=np.asarray(params["b"], np.float32), dtype="float32")
+
+
+def _pick_prototypes(x: np.ndarray, y: np.ndarray, n_classes: int, m: int,
+                     seed: int) -> np.ndarray:
+    """Class-stratified prototype ('support vector') selection."""
+    rng = np.random.RandomState(seed)
+    per = max(1, m // n_classes)
+    chosen = []
+    for c in range(n_classes):
+        idx = np.where(y == c)[0]
+        take = min(per, idx.size)
+        chosen.append(rng.choice(idx, take, replace=False))
+    return x[np.concatenate(chosen)]
+
+
+def train_kernel_svm(x: np.ndarray, y: np.ndarray, n_classes: int,
+                     kernel: str = "rbf", gamma: Optional[float] = None,
+                     coef0: float = 1.0, degree: int = 2, n_prototypes: int = 400,
+                     epochs: int = 60, batch_size: int = 512, lr: float = 3e-3,
+                     l2: float = 1e-4, seed: int = 0) -> SVMModel:
+    x64 = np.asarray(x, np.float64)
+    y = np.asarray(y, np.int32)
+    if gamma is None:
+        gamma = 1.0 / (x.shape[1] * max(x64.var(), 1e-12))  # sklearn 'scale'
+    sv = _pick_prototypes(x64, y, n_classes, n_prototypes, seed)
+
+    svj = jnp.asarray(sv)
+    t = jnp.asarray(_ovr_targets(y, n_classes), jnp.float64)
+
+    def kmap(xb):
+        if kernel == "poly":
+            return (gamma * (xb @ svj.T) + coef0) ** degree
+        d2 = (jnp.sum(xb * xb, -1, keepdims=True) - 2 * xb @ svj.T
+              + jnp.sum(svj * svj, -1)[None, :])
+        return jnp.exp(-gamma * d2)
+
+    params = {"a": jnp.zeros((sv.shape[0], n_classes), jnp.float64),
+              "b": jnp.zeros((n_classes,), jnp.float64)}
+    opt = adamw(lr, weight_decay=l2)
+    state = opt.init(params)
+
+    def loss_fn(p, kb, tb):
+        margin = jnp.maximum(0.0, 1.0 - tb * (kb @ p["a"] + p["b"]))
+        return jnp.mean(margin ** 2)
+
+    @jax.jit
+    def step(p, s, kb, tb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, kb, tb)
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss
+
+    xj = jnp.asarray(x64)
+    n = x64.shape[0]
+    rng = np.random.RandomState(seed)
+    for _ in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = perm[i:i + batch_size]
+            params, state, _ = step(params, state, kmap(xj[idx]), t[idx])
+
+    return SVMModel(kernel, support_vectors=sv,
+                    dual_coef=np.asarray(params["a"]),
+                    intercept=np.asarray(params["b"]),
+                    gamma=float(gamma), coef0=coef0, degree=degree, dtype="float64")

@@ -1,0 +1,5 @@
+"""Sharding rules: logical axes -> PartitionSpec with divisibility guards."""
+
+from .rules import (batch_axes, model_axis, spec_for, shard, Rules)
+
+__all__ = ["batch_axes", "model_axis", "spec_for", "shard", "Rules"]

@@ -1,0 +1,102 @@
+"""Logical-axis -> PartitionSpec rules with divisibility guards.
+
+The production mesh is ``(data=16, model=16)`` per pod, with a leading pure-DP
+``pod`` axis in the multi-pod mesh.  Logical axes used by the LM stack:
+
+* ``batch``   -> all data-parallel axes (``('pod','data')`` or ``('data',)``)
+* ``seq``     -> None normally; ``'data'`` for sequence-parallel long-context
+* ``model``   -> tensor/expert-parallel axis (heads, ffn columns, vocab, experts)
+* anything else -> replicated (None)
+
+``spec_for`` drops a mesh axis whenever the dimension is not divisible by the
+axis size (e.g. qwen2's 14 heads on a 16-way model axis) — the arch still
+compiles, just without that particular sharding, and the roofline table makes
+the cost visible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["batch_axes", "model_axis", "spec_for", "shard", "Rules"]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All pure data-parallel mesh axes, outermost first."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Resolves logical axis names against a concrete mesh."""
+
+    mesh: Mesh
+    seq_sharded: bool = False  # sequence parallelism for long-context cells
+
+    def resolve(self, logical: Optional[str], dim: int):
+        if logical is None:
+            return None
+        if logical == "batch":
+            axes = batch_axes(self.mesh)
+            total = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+            if axes and dim % total == 0:
+                return axes if len(axes) > 1 else axes[0]
+            # fall back to in-pod data axis only
+            if "data" in self.mesh.axis_names and dim % self.mesh.shape["data"] == 0:
+                return "data"
+            return None
+        if logical == "seq":
+            if self.seq_sharded and "data" in self.mesh.axis_names and \
+                    dim % self.mesh.shape["data"] == 0:
+                return "data"
+            return None
+        if logical == "model":
+            ax = model_axis(self.mesh)
+            if ax is not None and dim % self.mesh.shape[ax] == 0:
+                return ax
+            return None
+        if logical == "expert":
+            # 2D expert sharding: experts spread over (data, model) so each
+            # expert is fully resident on one chip group — no FSDP gather of
+            # expert weights, tokens move instead (all-to-all).
+            axes = tuple(a for a in ("data", "model") if a in self.mesh.axis_names)
+            total = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+            if axes and dim % total == 0:
+                return axes
+            return self.resolve("model", dim)
+        raise KeyError(f"unknown logical axis '{logical}'")
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        assert len(logical_axes) == len(shape), (logical_axes, shape)
+        return P(*[self.resolve(l, d) for l, d in zip(logical_axes, shape)])
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def spec_for(mesh: Optional[Mesh], logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int], seq_sharded: bool = False) -> Optional[P]:
+    if mesh is None:
+        return None
+    return Rules(mesh, seq_sharded).spec(logical_axes, shape)
+
+
+def shard(x: jax.Array, logical_axes: Sequence[Optional[str]],
+          rules: Optional[Rules]) -> jax.Array:
+    """Activation sharding constraint; no-op when rules is None (CPU smoke)."""
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,7 @@
+"""Training substrate: optimizers, LR schedules, checkpointing, fault-tolerant loop."""
+
+from .optim import adamw, sgd, clip_by_global_norm, OptState
+from .schedule import cosine_schedule, warmup_linear
+
+__all__ = ["adamw", "sgd", "clip_by_global_norm", "OptState",
+           "cosine_schedule", "warmup_linear"]

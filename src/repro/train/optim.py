@@ -1,0 +1,103 @@
+"""Minimal functional optimizers (no optax in this environment).
+
+API mirrors optax: ``init(params) -> state``, ``update(grads, state, params)
+-> (updates, state)``; apply with ``jax.tree.map(lambda p, u: p + u, ...)``.
+All state is a plain pytree, so it checkpoints/shards like params (the
+optimizer state inherits the parameter PartitionSpec in the LM trainer).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw", "sgd", "clip_by_global_norm", "apply_updates",
+           "global_norm"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any  # first moment (adamw) or momentum buffer (sgd)
+    nu: Any  # second moment (adamw) or None
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[..., tuple]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          mu_dtype: Optional[jnp.dtype] = None) -> Optimizer:
+    """AdamW with decoupled weight decay and fp32 moments by default."""
+
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dtype or jnp.float32), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / b1c
+            vhat = v / b2c
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+            updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mu, params)
+        else:
+            mu = None
+            updates = jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype), grads, params)
+        return updates, OptState(step, mu, None)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (functional, step -> lr)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "warmup_linear", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_linear(base_lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return base_lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,17 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", message=".*int64.*")
+
+
+@pytest.fixture(scope="session")
+def blobs():
+    """Small, clearly separable 3-class dataset for fast pipeline tests."""
+    rng = np.random.RandomState(0)
+    n, f, c = 900, 12, 3
+    means = rng.randn(c, f) * 4.0
+    y = rng.randint(0, c, n).astype(np.int32)
+    x = (means[y] + rng.randn(n, f)).astype(np.float32)
+    return x[:600], y[:600], x[600:], y[600:], c

@@ -1,0 +1,68 @@
+"""Sigmoid-approximation tests (paper C3, Fig. 2 + Tables VI/VII bounds)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import activations as act
+from repro.core import fixedpoint as fxp
+
+
+XS = np.linspace(-10, 10, 2001).astype(np.float32)
+TRUE = 1.0 / (1.0 + np.exp(-XS))
+
+
+@pytest.mark.parametrize("name", act.SIGMOID_NAMES)
+def test_float_max_error_bound(name):
+    fn = act.get_sigmoid(name)
+    got = np.asarray(fn(jnp.asarray(XS)))
+    assert np.abs(got - TRUE).max() <= act.SIGMOID_MAX_ERR[name] + 1e-6
+
+
+@pytest.mark.parametrize("name", act.SIGMOID_NAMES)
+def test_float_range_and_symmetry(name):
+    fn = act.get_sigmoid(name)
+    got = np.asarray(fn(jnp.asarray(XS)))
+    assert got.min() >= -1e-6 and got.max() <= 1 + 1e-6
+    sym = np.asarray(fn(jnp.asarray(-XS)))
+    np.testing.assert_allclose(got + sym, 1.0, atol=2e-6)
+
+
+@pytest.mark.parametrize("name", act.SIGMOID_NAMES)
+@pytest.mark.parametrize("fmt", [fxp.FXP32, fxp.FXP16], ids=str)
+def test_fxp_matches_float_version(name, fmt):
+    """The Qn.m implementation tracks its float counterpart to fxp tolerance."""
+    qx = fxp.quantize(XS, fmt)
+    qfn = act.get_qsigmoid(name)
+    got = np.asarray(fxp.dequantize(qfn(qx, fmt), fmt))
+    want = np.asarray(act.get_sigmoid(name)(jnp.asarray(XS)))
+    tol = 0.02 if name == "exact" else 6 * fmt.resolution
+    assert np.abs(got - want).max() <= tol + 2 * fmt.resolution
+
+
+@pytest.mark.parametrize("name", act.SIGMOID_NAMES)
+def test_monotone_nondecreasing(name):
+    got = np.asarray(act.get_sigmoid(name)(jnp.asarray(XS)))
+    # PLAN (pwl4) picks binary-fraction breakpoints (2.375 instead of the true
+    # segment intersection 7/3), giving a known 0.0039 downward step there.
+    tol = 0.004 if name == "pwl4" else 1e-6
+    assert np.all(np.diff(got) >= -tol)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=st.floats(-50, 50, allow_nan=False, width=32))
+def test_property_pwl4_piecewise_exact(x):
+    """pwl4 at any point equals the hand-computed PLAN segment value."""
+    ax = abs(x)
+    if ax >= 5:
+        y = 1.0
+    elif ax >= 2.375:
+        y = 0.03125 * ax + 0.84375
+    elif ax >= 1.0:
+        y = 0.125 * ax + 0.625
+    else:
+        y = 0.25 * ax + 0.5
+    want = y if x >= 0 else 1 - y
+    got = float(act.sigmoid_pwl4(jnp.float32(x)))
+    assert abs(got - want) < 1e-6

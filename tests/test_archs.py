@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates a REDUCED same-family config and runs one
+forward + one train step + (decoder archs) a few decode steps on CPU,
+asserting output shapes and finiteness.  Full configs are exercised only via
+the dry-run (ShapeDtypeStructs, no allocation) — see launch/dryrun.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.lm import model as M
+from repro.train.optim import adamw, apply_updates
+
+
+def _smoke_batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.RandomState(seed)
+    if cfg.modality == "audio":
+        return {"embeds": jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.float32),
+                "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.modality == "vision":
+        n = cfg.n_prefix_embeds
+        return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S - n)), jnp.int32),
+                "image_embeds": jnp.asarray(rng.randn(B, n, cfg.d_model), jnp.float32)}
+    return {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)}
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return request.param, cfg, params
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    name, cfg, params = arch_setup
+    batch = _smoke_batch(cfg)
+    logits = M.forward(params, batch, cfg)
+    B = 2
+    S_total = 64
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{name}: non-finite logits"
+
+
+def test_one_train_step_reduces_nan_free(arch_setup):
+    name, cfg, params = arch_setup
+    batch = _smoke_batch(cfg)
+    opt = adamw(1e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, b):
+        loss, grads = jax.value_and_grad(lambda q: M.loss_fn(q, b, cfg))(p)
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss
+
+    p1, s1, loss1 = step(params, state, batch)
+    p2, _, loss2 = step(p1, s1, batch)
+    assert bool(jnp.isfinite(loss1)) and bool(jnp.isfinite(loss2)), name
+    assert float(loss2) < float(loss1) + 0.5  # moving, not exploding
+
+
+def test_decode_steps_match_cache_semantics(arch_setup):
+    name, cfg, params = arch_setup
+    if cfg.encoder_only:
+        pytest.skip("encoder-only: no decode step")
+    B, L = 2, 32
+    cache = M.init_cache(cfg, B, L)
+    tok = jnp.asarray([1, 2], jnp.int32)
+    for i in range(3):
+        logits, cache = M.serve_step(params, cache, {"token": tok}, cfg)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(logits))), f"{name} step {i}"
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(cache["pos"]) == 3
+
+
+def test_param_count_positive_and_roughly_family_sized():
+    # full configs: parameter counting sanity (drives MODEL_FLOPS)
+    expected = {
+        "starcoder2-15b": (13e9, 18e9),
+        "minitron-8b": (7e9, 10.5e9),
+        "qwen2-0.5b": (0.3e9, 0.7e9),
+        "qwen1.5-32b": (29e9, 36e9),
+        "grok-1-314b": (280e9, 340e9),
+        "deepseek-v3-671b": (600e9, 720e9),
+        "zamba2-7b": (6e9, 9e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+        "rwkv6-1.6b": (1.2e9, 2.2e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B outside [{lo / 1e9}, {hi / 1e9}]"
+
+
+def test_runnable_shapes_policy():
+    # skip rules match the assignment
+    rs = get_config("hubert-xlarge").runnable_shapes()
+    assert rs["decode_32k"].startswith("skip") and rs["long_500k"].startswith("skip")
+    for a in ("zamba2-7b", "rwkv6-1.6b"):
+        assert get_config(a).runnable_shapes()["long_500k"] == "run"
+    for a in ("starcoder2-15b", "deepseek-v3-671b", "qwen2-0.5b"):
+        assert get_config(a).runnable_shapes()["long_500k"].startswith("skip")
+    # 40 cells total, 31 runnable
+    total = runnable = 0
+    for a in ARCH_IDS:
+        for status in get_config(a).runnable_shapes().values():
+            total += 1
+            runnable += status == "run"
+    assert total == 40 and runnable == 31
+
+
+def test_param_specs_structure_matches_params():
+    """Spec tree must stay drift-free vs the param tree (hand-aligned rules)."""
+    from repro.launch.mesh import make_ci_mesh
+    for arch in ("qwen2-0.5b", "grok-1-314b", "deepseek-v3-671b", "zamba2-7b",
+                 "rwkv6-1.6b"):
+        cfg = get_config(arch)
+        aps = M.abstract_params(cfg)
+        specs = M.param_specs(cfg, None)
+        assert jax.tree.structure(aps) == jax.tree.structure(specs), arch
+
+
+def test_quantized_params_serve(arch_setup):
+    """Paper C1 on LMs: int8 weight-only artifact still decodes finitely."""
+    name, cfg, params = arch_setup
+    if cfg.encoder_only:
+        pytest.skip("encoder-only")
+    from repro.core.quantize import QuantSpec, quantize_lm_params
+    qp = quantize_lm_params(params, QuantSpec(min_size=1024))
+    cache = M.init_cache(cfg, 2, 16)
+    logits, _ = M.serve_step(qp, cache, {"token": jnp.asarray([1, 2], jnp.int32)}, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits))), name

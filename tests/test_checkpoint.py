@@ -1,0 +1,92 @@
+"""Checkpoint manager tests: atomicity, retention, commit markers, resume."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager, restore_pytree, save_pytree
+
+
+def _tree(seed):
+    rng = np.random.RandomState(seed)
+    return {"w": rng.randn(4, 3).astype(np.float32),
+            "opt": {"mu": rng.randn(4, 3).astype(np.float32),
+                    "step": np.int32(seed)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree(0)
+    p = os.path.join(tmp_path, "x.ckpt")
+    save_pytree(p, t, metadata={"note": "hi"})
+    got, meta = restore_pytree(p, like=t)
+    assert meta["note"] == "hi"
+    np.testing.assert_array_equal(got["w"], t["w"])
+    np.testing.assert_array_equal(got["opt"]["mu"], t["opt"]["mu"])
+    assert got["opt"]["step"] == 0
+
+
+def test_restore_validates_shapes(tmp_path):
+    p = os.path.join(tmp_path, "x.ckpt")
+    save_pytree(p, {"w": np.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_pytree(p, like={"w": np.zeros((3, 3))})
+
+
+def test_restore_validates_leaf_count(tmp_path):
+    p = os.path.join(tmp_path, "x.ckpt")
+    save_pytree(p, {"w": np.zeros(2)})
+    with pytest.raises(ValueError):
+        restore_pytree(p, like={"w": np.zeros(2), "b": np.zeros(1)})
+
+
+def test_manager_latest_and_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    assert mgr.latest_step() is None
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s))
+    assert mgr.latest_step() == 30
+    step, tree, meta = mgr.restore(_tree(0))
+    assert step == 30 and meta["step"] == 30
+    assert tree["opt"]["step"] == 30
+
+
+def test_manager_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(5):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_manager_keep_period(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1, keep_period=100)
+    for s in (100, 150, 200, 250):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [100, 200, 250]
+
+
+def test_uncommitted_step_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(1, _tree(1))
+    # Simulate a crash mid-save of step 2: files exist but no COMMIT marker.
+    os.makedirs(os.path.join(tmp_path, "step_2"), exist_ok=True)
+    with open(os.path.join(tmp_path, "step_2", "host_0.ckpt"), "wb") as f:
+        f.write(b"garbage-partial-write")
+    assert mgr.latest_step() == 1  # step 2 is invisible
+
+
+def test_restore_or_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    init = _tree(7)
+    step, tree = mgr.restore_or_init(init)
+    assert step == 0 and tree is init
+    mgr.save(5, _tree(5))
+    step, tree = mgr.restore_or_init(init)
+    assert step == 5 and tree["opt"]["step"] == 5
+
+
+def test_atomic_no_tmp_left_behind(tmp_path):
+    p = os.path.join(tmp_path, "x.ckpt")
+    save_pytree(p, _tree(0))
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp-" in f]
+    assert leftovers == []

@@ -1,0 +1,51 @@
+"""Spec-compliance: every assigned architecture matches the assignment table
+exactly (layers, d_model, heads, kv, d_ff, vocab, family features)."""
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+
+# (n_layers, d_model, n_heads, n_kv_heads, d_ff, vocab)
+SPEC = {
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+    "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assignment_constants(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = SPEC[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+
+
+def test_family_features():
+    g = get_config("grok-1-314b").moe
+    assert g.n_experts == 8 and g.top_k == 2
+    d = get_config("deepseek-v3-671b")
+    assert d.moe.n_experts == 256 and d.moe.top_k == 8 and d.moe.n_shared == 1
+    assert d.moe.first_k_dense == 3 and d.mla is not None
+    assert d.mla.kv_lora_rank == 512 and d.mla.q_lora_rank == 1536
+    z = get_config("zamba2-7b")
+    assert z.ssm.d_state == 64 and z.block_pattern == "mamba_hybrid"
+    assert get_config("rwkv6-1.6b").block_pattern == "rwkv"
+    assert get_config("hubert-xlarge").encoder_only
+    assert get_config("llava-next-mistral-7b").n_prefix_embeds == 2880
+    assert get_config("qwen2-0.5b").qkv_bias and get_config("qwen1.5-32b").qkv_bias
+    assert get_config("starcoder2-15b").mlp_type == "standard"
+
+
+def test_all_ten_selectable():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        assert get_config(a).name == a

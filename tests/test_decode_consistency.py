@@ -1,0 +1,82 @@
+"""Decode == forward consistency: the strongest end-to-end correctness check.
+
+Feeding tokens one at a time through ``serve_step`` (recurrent states / KV
+caches) must reproduce the teacher-forced ``forward`` logits at every
+position.  This cross-validates:
+
+* the chunked-SSD Mamba2 prefill vs its recurrent decode step,
+* the RWKV6 time-scan vs its single-token step,
+* KV-cache write/read + RoPE positions vs blockwise attention,
+* the MLA absorbed decode vs the materialized train path,
+* int8 KV caches (to quantization tolerance).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.lm import model as M
+
+ARCHS = ["qwen2-0.5b", "starcoder2-15b", "deepseek-v3-671b", "zamba2-7b",
+         "rwkv6-1.6b", "grok-1-314b"]
+
+
+def _run_consistency(cfg, atol, steps=12):
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(1, cfg.vocab_size, (2, steps)), jnp.int32)
+
+    fwd_logits = M.forward(params, {"tokens": tokens}, cfg)  # (2, steps, V)
+
+    cache = M.init_cache(cfg, 2, steps + 2)
+    dec = []
+    for i in range(steps):
+        logits, cache = M.serve_step(params, cache, {"token": tokens[:, i]}, cfg)
+        dec.append(logits)
+    dec_logits = jnp.stack(dec, axis=1)
+
+    err = jnp.max(jnp.abs(dec_logits - fwd_logits))
+    scale = jnp.max(jnp.abs(fwd_logits)) + 1e-6
+    assert float(err / scale) < atol, f"{cfg.name}: rel err {float(err / scale)}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    _run_consistency(cfg, atol=2e-3)
+
+
+def test_decode_matches_forward_int8_kv():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              kv_cache_dtype="int8")
+    # int8 per-token KV quantization: relative logits error stays small
+    _run_consistency(cfg, atol=0.07)
+
+
+def test_decode_matches_forward_int8_kv_mla():
+    # Compounding-compression finding (documented in EXPERIMENTS §Perf): the
+    # MLA latent is *already* a learned compression of K/V, so int8-quantizing
+    # it is much lossier (rel err up to ~0.4 on random weights) than int8 on
+    # plain per-head KV (~0.07).  The feature stays available but the win is
+    # small anyway (MLA cache is ~14x smaller than the MHA equivalent).
+    cfg = dataclasses.replace(get_config("deepseek-v3-671b").reduced(),
+                              kv_cache_dtype="int8")
+    _run_consistency(cfg, atol=0.5)
+
+
+def test_sliding_window_shift_buffer():
+    """Windowed decode past the window edge stays finite and position-true."""
+    base = get_config("zamba2-7b").reduced()
+    cfg = dataclasses.replace(base, sliding_window=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = M.init_cache(cfg, 1, 8)  # cache == window -> shift-buffer mode
+    tok = jnp.asarray([1], jnp.int32)
+    for i in range(20):  # run well past the window
+        logits, cache = M.serve_step(params, cache, {"token": tok}, cfg)
+        assert bool(jnp.all(jnp.isfinite(logits))), f"step {i}"
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(cache["pos"]) == 20

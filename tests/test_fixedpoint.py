@@ -1,0 +1,182 @@
+"""Unit + property tests for the Qn.m fixed-point core (paper C1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fixedpoint as fxp
+
+FORMATS = [fxp.FXP32, fxp.FXP16, fxp.FXP8]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+class TestQuantizeDequantize:
+    def test_roundtrip_within_resolution(self, fmt):
+        x = np.linspace(fmt.min_value * 0.9, fmt.max_value * 0.9, 257).astype(np.float32)
+        d = np.asarray(fxp.dequantize(fxp.quantize(x, fmt), fmt))
+        assert np.abs(d - x).max() <= fmt.resolution / 2 + 1e-7
+
+    def test_saturation(self, fmt):
+        x = np.array([fmt.max_value * 10, fmt.min_value * 10], np.float32)
+        q = np.asarray(fxp.quantize(x, fmt))
+        assert q[0] == fmt.qmax and q[1] == fmt.qmin
+
+    def test_exact_grid_values(self, fmt):
+        # Integer multiples of the resolution quantize exactly.
+        ks = np.array([-7, -1, 0, 1, 3, 11], np.float32)
+        x = ks * fmt.resolution
+        q = np.asarray(fxp.quantize(x, fmt))
+        np.testing.assert_array_equal(q, ks.astype(q.dtype))
+
+    def test_quantize_with_stats_counts(self, fmt):
+        x = np.array([fmt.max_value * 2, fmt.resolution / 10, 0.0], np.float32)
+        _, stats = fxp.quantize_with_stats(x, fmt)
+        assert int(stats.overflow) == 1
+        assert int(stats.underflow) == 1  # tiny non-zero -> 0
+        assert int(stats.total) == 3
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+class TestArithmetic:
+    def test_add_sub_exact(self, fmt):
+        a = fxp.quantize(np.float32(1.25), fmt)
+        b = fxp.quantize(np.float32(2.5), fmt)
+        assert float(fxp.dequantize(fxp.qadd(a, b, fmt), fmt)) == 3.75
+        assert float(fxp.dequantize(fxp.qsub(a, b, fmt), fmt)) == -1.25
+
+    def test_add_saturates(self, fmt):
+        big = fxp.quantize(np.float32(fmt.max_value), fmt)
+        out = fxp.qadd(big, big, fmt)
+        assert int(out) == fmt.qmax
+
+    def test_mul_matches_float_within_tol(self, fmt):
+        rng = np.random.RandomState(0)
+        lim = min(np.sqrt(fmt.max_value) * 0.5, 4.0)
+        a = (rng.rand(64).astype(np.float32) * 2 - 1) * lim
+        b = (rng.rand(64).astype(np.float32) * 2 - 1) * lim
+        qa, qb = fxp.quantize(a, fmt), fxp.quantize(b, fmt)
+        prod = np.asarray(fxp.dequantize(fxp.qmul(qa, qb, fmt), fmt))
+        # Error: input rounding propagates (|a|+|b|)*res/2 + res/2 output rounding
+        bound = (np.abs(a) + np.abs(b) + 1.5) * fmt.resolution
+        assert np.all(np.abs(prod - a * b) <= bound)
+
+    def test_div_matches_float(self, fmt):
+        a = fxp.quantize(np.float32(3.0), fmt)
+        b = fxp.quantize(np.float32(4.0), fmt)
+        assert abs(float(fxp.dequantize(fxp.qdiv(a, b, fmt), fmt)) - 0.75) <= fmt.resolution
+
+    def test_div_by_zero_saturates(self, fmt):
+        a = fxp.quantize(np.float32(1.0), fmt)
+        z = fxp.quantize(np.float32(0.0), fmt)
+        assert int(fxp.qdiv(a, z, fmt)) == fmt.qmax
+
+    def test_neg(self, fmt):
+        a = fxp.quantize(np.float32(1.5), fmt)
+        assert float(fxp.dequantize(fxp.qneg(a, fmt), fmt)) == -1.5
+
+
+@pytest.mark.parametrize("fmt", [fxp.FXP32, fxp.FXP16], ids=str)
+class TestTranscendentals:
+    def test_exp(self, fmt):
+        xs = np.linspace(-6, 3, 37).astype(np.float32)
+        got = np.asarray(fxp.dequantize(fxp.qexp(fxp.quantize(xs, fmt), fmt), fmt))
+        want = np.exp(xs)
+        tol = 0.02 * np.maximum(want, 1.0) + 2 * fmt.resolution
+        assert np.all(np.abs(got - want) <= tol)
+
+    def test_exp_overflow_saturates(self, fmt):
+        x = fxp.quantize(np.float32(min(30.0, fmt.max_value / 2)), fmt)
+        assert int(fxp.qexp(x, fmt)) == fmt.qmax
+
+    def test_exp_underflow_flushes(self, fmt):
+        x = fxp.quantize(np.float32(fmt.min_value / 2), fmt)
+        assert float(fxp.dequantize(fxp.qexp(x, fmt), fmt)) <= fmt.resolution
+
+    def test_sigmoid(self, fmt):
+        xs = np.linspace(-8, 8, 65).astype(np.float32)
+        got = np.asarray(fxp.dequantize(fxp.qsigmoid(fxp.quantize(xs, fmt), fmt), fmt))
+        want = 1 / (1 + np.exp(-xs))
+        assert np.abs(got - want).max() <= 0.02 + 2 * fmt.resolution
+
+    def test_tanh(self, fmt):
+        xs = np.linspace(-4, 4, 33).astype(np.float32)
+        got = np.asarray(fxp.dequantize(fxp.qtanh(fxp.quantize(xs, fmt), fmt), fmt))
+        assert np.abs(got - np.tanh(xs)).max() <= 0.04 + 4 * fmt.resolution
+
+    def test_sqrt(self, fmt):
+        xs = np.array([0.0, 0.25, 1.0, 2.0, 9.0, 100.0], np.float32)
+        got = np.asarray(fxp.dequantize(fxp.qsqrt(fxp.quantize(xs, fmt), fmt), fmt))
+        assert np.abs(got - np.sqrt(xs)).max() <= 0.02 + 2 * fmt.resolution
+
+    def test_pow_int(self, fmt):
+        x = fxp.quantize(np.float32(1.5), fmt)
+        got = float(fxp.dequantize(fxp.qpow_int(x, 3, fmt), fmt))
+        assert abs(got - 1.5 ** 3) <= 0.01 + 4 * fmt.resolution
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("fmt", [fxp.FXP32, fxp.FXP16], ids=str)
+    def test_matches_float_matmul(self, fmt):
+        rng = np.random.RandomState(1)
+        a = rng.randn(16, 32).astype(np.float32)
+        b = rng.randn(32, 8).astype(np.float32)
+        got = np.asarray(fxp.dequantize(
+            fxp.qmatmul(fxp.quantize(a, fmt), fxp.quantize(b, fmt), fmt), fmt))
+        # K rounding errors of res/2 scaled by |b|, plus output rounding.
+        bound = 32 * fmt.resolution * (np.abs(a).max() + np.abs(b).max()) / 2 + fmt.resolution
+        assert np.abs(got - a @ b).max() <= bound
+
+    def test_stats_overflow_detection(self):
+        fmt = fxp.FXP16
+        a = np.full((1, 64), 40.0, np.float32)
+        b = np.full((64, 1), 40.0, np.float32)
+        out, stats = fxp.qmatmul_with_stats(fxp.quantize(a, fmt), fxp.quantize(b, fmt), fmt)
+        assert int(stats.overflow) == 1
+        assert int(out[0, 0]) == fmt.qmax  # saturated, not wrapped
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(
+    x=st.lists(st.floats(-1000, 1000, allow_nan=False, width=32), min_size=1, max_size=32),
+    fmt_i=st.integers(0, 2),
+)
+def test_property_quantize_monotonic(x, fmt_i):
+    fmt = FORMATS[fmt_i]
+    xs = np.sort(np.asarray(x, np.float32))
+    q = np.asarray(fxp.quantize(xs, fmt)).astype(np.int64)
+    assert np.all(np.diff(q) >= 0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    a=st.floats(-100, 100, allow_nan=False, width=32),
+    b=st.floats(-100, 100, allow_nan=False, width=32),
+)
+def test_property_qadd_commutes(a, b):
+    fmt = fxp.FXP32
+    qa = fxp.quantize(np.float32(a), fmt)
+    qb = fxp.quantize(np.float32(b), fmt)
+    assert int(fxp.qadd(qa, qb, fmt)) == int(fxp.qadd(qb, qa, fmt))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 8), st.integers(1, 16), st.integers(1, 8)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_qmatmul_matches_integer_model(shape, seed):
+    """qmatmul == saturate(round_shift(int_a @ int_b)) exactly (the MCU model)."""
+    m, k, n = shape
+    fmt = fxp.FXP16
+    rng = np.random.RandomState(seed)
+    qa = rng.randint(-2000, 2000, (m, k)).astype(np.int16)
+    qb = rng.randint(-2000, 2000, (k, n)).astype(np.int16)
+    acc = qa.astype(np.int64) @ qb.astype(np.int64)
+    half = 1 << (fmt.frac_bits - 1)
+    shifted = np.sign(acc) * ((np.abs(acc) + half) >> fmt.frac_bits)
+    want = np.clip(shifted, fmt.qmin, fmt.qmax).astype(np.int16)
+    got = np.asarray(fxp.qmatmul(qa, qb, fmt))
+    np.testing.assert_array_equal(got, want)

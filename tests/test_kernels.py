@@ -1,0 +1,125 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles.
+
+Shape/dtype sweeps as required: parametrized grids + hypothesis randoms.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fixedpoint import FXP8, FXP16, FXP32
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.models.decision_tree import train_decision_tree
+
+
+# ---------------------------------------------------------------------------
+# fxp_qmatmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [FXP32, FXP16, FXP8], ids=str)
+@pytest.mark.parametrize("shape", [(8, 16, 8), (100, 300, 70), (128, 256, 128),
+                                   (1, 1, 1), (17, 129, 33)])
+def test_fxp_qmatmul_matches_ref(fmt, shape):
+    m, k, n = shape
+    rng = np.random.RandomState(hash(shape) % 2**31)
+    lim = min(2000, fmt.qmax // 2)
+    a = rng.randint(-lim, lim, (m, k)).astype(np.dtype(fmt.dtype))
+    b = rng.randint(-lim, lim, (k, n)).astype(np.dtype(fmt.dtype))
+    got = np.asarray(ops.fxp_qmatmul(jnp.asarray(a), jnp.asarray(b), fmt))
+    want = np.asarray(R.fxp_qmatmul_ref(jnp.asarray(a), jnp.asarray(b), fmt))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fxp_qmatmul_saturates():
+    # FXP8: int8 inputs can never wrap the int32 MXU accumulator (K < 133k),
+    # so output saturation is exact.  (FXP16 at extreme magnitudes can wrap
+    # the accumulator — the documented int32-accumulate contract; the 'xla'
+    # impl keeps int64 semantics for that regime.)
+    fmt = FXP8
+    a = np.full((4, 256), fmt.qmax, np.int8)
+    b = np.full((256, 4), fmt.qmax, np.int8)
+    got = np.asarray(ops.fxp_qmatmul(jnp.asarray(a), jnp.asarray(b), fmt))
+    assert np.all(got == fmt.qmax)
+    want = np.asarray(R.fxp_qmatmul_ref(jnp.asarray(a), jnp.asarray(b), fmt))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fxp_qmatmul_xla_impl_full_range():
+    # the reference path keeps int64 accumulation for full-range int16 sums
+    fmt = FXP16
+    a = jnp.asarray(np.full((4, 64), 8000, np.int16))
+    b = jnp.asarray(np.full((64, 4), 8000, np.int16))
+    got = np.asarray(ops.fxp_qmatmul(a, b, fmt, impl="xla"))
+    assert np.all(got == fmt.qmax)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 128), n=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_fxp_qmatmul(m, k, n, seed):
+    fmt = FXP16
+    rng = np.random.RandomState(seed)
+    a = rng.randint(-3000, 3000, (m, k)).astype(np.int16)
+    b = rng.randint(-3000, 3000, (k, n)).astype(np.int16)
+    got = np.asarray(ops.fxp_qmatmul(jnp.asarray(a), jnp.asarray(b), fmt))
+    want = np.asarray(R.fxp_qmatmul_ref(jnp.asarray(a), jnp.asarray(b), fmt))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# pwl_activation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant", ["pwl2", "pwl4", "rational", "silu_pwl4"])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+@pytest.mark.parametrize("shape", [(4, 8), (257,), (3, 5, 7), (1024, 16)])
+def test_pwl_activation_matches_ref(variant, dtype, shape):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*shape).astype(np.float32) * 6).astype(dtype)
+    got = np.asarray(ops.pwl_activation(x, variant), np.float32)
+    want = np.asarray(R.pwl_activation_ref(x, variant), np.float32)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tree_ensemble
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [2, 5, 8])
+@pytest.mark.parametrize("batch", [1, 100, 512])
+def test_tree_ensemble_matches_ref(depth, batch):
+    rng = np.random.RandomState(depth * 100 + batch)
+    xt = rng.randn(800, 10).astype(np.float32)
+    yt = ((xt[:, 0] > 0).astype(np.int32) + (xt[:, 3] > 0.5).astype(np.int32))
+    model = train_decision_tree(xt, yt, 3, max_depth=depth)
+    xq = jnp.asarray(rng.randn(batch, 10).astype(np.float32) * 2)
+    got = np.asarray(ops.tree_predict(model.tree, xq))
+    want = np.asarray(R.tree_ensemble_ref(model.tree, xq))
+    np.testing.assert_array_equal(got, want)
+    # and equals the iterative (MCU) layout
+    from repro.core.trees import predict_iterative
+    np.testing.assert_array_equal(got, np.asarray(predict_iterative(model.tree, xq)))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,bq,bk", [(128, 64, 64), (256, 128, 64), (64, 64, 64)])
+def test_flash_attention_matches_ref(causal, s, bq, bk):
+    rng = np.random.RandomState(s + causal)
+    q = jnp.asarray(rng.randn(2, s, 32).astype(np.float32))
+    k = jnp.asarray(rng.randn(2, s, 32).astype(np.float32))
+    v = jnp.asarray(rng.randn(2, s, 32).astype(np.float32))
+    got = np.asarray(ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk))
+    want = np.asarray(R.flash_attention_ref(q, k, v, causal=causal))
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(2, 128, 64).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.randn(2, 128, 64).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.randn(2, 128, 64).astype(np.float32)).astype(jnp.bfloat16)
+    got = np.asarray(ops.flash_attention(q, k, v, bq=64, bk=64), np.float32)
+    want = np.asarray(R.flash_attention_ref(q, k, v), np.float32)
+    np.testing.assert_allclose(got, want, atol=3e-2)

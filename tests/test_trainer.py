@@ -1,0 +1,95 @@
+"""Trainer substrate tests: loss falls, checkpoint/restart resumes exactly,
+deterministic data replay, gradient accumulation equivalence."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.lm import model as M
+from repro.train.trainer import (TrainConfig, make_optimizer, make_train_step,
+                                 synthetic_token_stream, train_loop)
+
+
+def _tiny_arch():
+    return dataclasses.replace(
+        get_config("qwen2-0.5b").reduced(), name="tiny", n_layers=2,
+        d_model=64, n_heads=2, n_kv_heads=2, d_head=32, d_ff=128,
+        vocab_size=256, remat=False, dtype="float32")
+
+
+def test_loss_decreases(tmp_path):
+    arch = _tiny_arch()
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=5, total_steps=40,
+                       checkpoint_every=100, seed=0)
+    metrics = train_loop(arch, tcfg, batch=4, seq=32,
+                         ckpt_dir=str(tmp_path), steps=40)
+    hist = metrics["history"]
+    assert hist[-1] < hist[0], f"loss did not fall: {hist[0]} -> {hist[-1]}"
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Interrupted run + resume == uninterrupted run (bitwise on loss path)."""
+    arch = _tiny_arch()
+
+    def run(ckpt_dir, steps):
+        tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=30,
+                           checkpoint_every=10, seed=3)
+        return train_loop(arch, tcfg, batch=4, seq=32, ckpt_dir=ckpt_dir,
+                          steps=steps)
+
+    d1 = os.path.join(tmp_path, "a")
+    full = run(d1, 20)
+
+    d2 = os.path.join(tmp_path, "b")
+    run(d2, 10)  # stops at step 10 (checkpointed)
+    resumed = run(d2, 20)  # resumes 10 -> 20
+
+    np.testing.assert_allclose(full["history"][-1], resumed["history"][-1],
+                               rtol=1e-5)
+
+
+def test_data_stream_deterministic_replay():
+    arch = _tiny_arch()
+    a = synthetic_token_stream(arch, 4, 32, seed=7, start_step=5)
+    b = synthetic_token_stream(arch, 4, 32, seed=7, start_step=5)
+    for _ in range(3):
+        ba, bb = next(a), next(b)
+        np.testing.assert_array_equal(np.asarray(ba["tokens"]),
+                                      np.asarray(bb["tokens"]))
+
+
+def test_grad_accumulation_matches_full_batch():
+    """microbatches=K averages to the same gradients as one big batch."""
+    arch = _tiny_arch()
+    params = M.init_params(arch, jax.random.PRNGKey(0))
+    batch = next(synthetic_token_stream(arch, 8, 32, seed=0))
+
+    def one(mb):
+        tcfg = TrainConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                           microbatches=mb, clip_norm=1e9)
+        opt = make_optimizer(tcfg)
+        step = make_train_step(arch, tcfg, opt)
+        p, _, m = step(params, opt.init(params), batch)
+        return p, m
+
+    p1, m1 = one(1)
+    p4, m4 = one(4)
+    # losses computed per-microbatch average ~= full-batch average
+    np.testing.assert_allclose(m1["loss"], m4["loss"], rtol=2e-3)
+    l1 = jax.tree.leaves(p1)[0]
+    l4 = jax.tree.leaves(p4)[0]
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4), atol=5e-4)
+
+
+def test_watchdog_field_and_final_step(tmp_path):
+    arch = _tiny_arch()
+    tcfg = TrainConfig(lr=1e-3, total_steps=5, checkpoint_every=100)
+    metrics = train_loop(arch, tcfg, batch=2, seq=16,
+                         ckpt_dir=str(tmp_path), steps=5)
+    assert metrics["final_step"] == 5
+    assert len(metrics["history"]) == 5

@@ -1,0 +1,51 @@
+"""Backend benchmark for the unified ``repro.compile`` API.
+
+Per (classifier, number format), times the same Target compiled for each
+backend:
+
+* ``ref``    — eager pure-jnp oracle (the old ``convert()`` semantics);
+* ``xla``    — whole-program ``jax.jit`` (the serving configuration);
+* ``pallas`` — MXU kernels; only timed on a real TPU (off-TPU the kernels
+  run in interpret mode, which benchmarks the interpreter, not the kernel).
+
+Derived field: xla speedup over ref — the payoff of backend being a Target
+field rather than a rewrite.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+
+from repro.compile import Target, compile
+from repro.data import load_dataset
+
+from .common import CLASSIFIERS, FORMATS, csv_line, get_model, time_predict
+
+DATASETS = ("D5",)
+
+
+def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
+    backends = ["ref", "xla"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+    rows = []
+    for d in datasets:
+        ds = load_dataset(d)
+        x = ds.x_test[:2048]
+        for name in classifiers:
+            model = get_model(d, name)
+            for fmt in FORMATS:
+                times = {}
+                for backend in backends:
+                    art = compile(model, Target(number_format=fmt,
+                                                backend=backend))
+                    times[backend] = time_predict(art.predict, x)
+                rows.append({"dataset": d, "classifier": name,
+                             "format": fmt, **times})
+                derived = f"xla_speedup={times['ref'] / times['xla']:.3f}"
+                if "pallas" in times:
+                    derived += f";pallas_speedup={times['ref'] / times['pallas']:.3f}"
+                csv_line(f"backends/{d}/{name}/{fmt}", times["xla"], derived)
+    return rows

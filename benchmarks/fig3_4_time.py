@@ -14,7 +14,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import convert
+from repro.compile import Target, compile
 from repro.data import load_dataset
 
 from .common import CLASSIFIERS, DATASETS, FORMATS, csv_line, get_model, time_predict
@@ -30,7 +30,9 @@ def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
             model = get_model(d, name)
             times = {}
             for fmt in FORMATS:
-                em = convert(model, number_format=fmt)
+                # backend='ref' preserves the paper-faithful eager semantics
+                # (see compile_backends.py for the xla/pallas comparison).
+                em = compile(model, Target(number_format=fmt))
                 times[fmt] = time_predict(em.predict, x)
             rows.append({"dataset": d, "classifier": name, **times})
             agg[name].append(times["flt"])

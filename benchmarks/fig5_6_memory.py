@@ -7,7 +7,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core import convert
+from repro.compile import Target, compile
 
 from .common import CLASSIFIERS, DATASETS, FORMATS, csv_line, get_model
 
@@ -20,7 +20,7 @@ def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
             model = get_model(d, name)
             mems = {}
             for fmt in FORMATS:
-                em = convert(model, number_format=fmt)
+                em = compile(model, Target(number_format=fmt))
                 mems[fmt] = em.memory_bytes()
             rows.append({"dataset": d, "classifier": name, **{
                 f"{f}_{k}": v for f in FORMATS for k, v in mems[f].items()}})

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.core import convert
+from repro.compile import Target, compile
 from repro.core.activations import SIGMOID_NAMES
 from repro.core.trees import TREE_LAYOUTS, tree_memory_bytes
 from repro.data import load_dataset
@@ -27,7 +27,7 @@ def run(datasets=DATASETS) -> List[Dict]:
         model = get_model(d, "mlp")
         base = None
         for sig in SIGMOID_NAMES:
-            em = convert(model, number_format="fxp32", sigmoid=sig)
+            em = compile(model, Target(number_format="fxp32", sigmoid=sig))
             t = time_predict(em.predict, x)
             base = t if sig == "exact" else base
             rows.append({"dataset": d, "kind": "sigmoid", "option": sig, "us": t})
@@ -36,7 +36,7 @@ def run(datasets=DATASETS) -> List[Dict]:
         tree_model = get_model(d, "tree")
         t_layout = {}
         for layout in TREE_LAYOUTS:
-            em = convert(tree_model, number_format="fxp32", tree_layout=layout)
+            em = compile(tree_model, Target(number_format="fxp32", tree_layout=layout))
             t_layout[layout] = time_predict(em.predict, x)
             rows.append({"dataset": d, "kind": "tree", "option": layout,
                          "us": t_layout[layout]})

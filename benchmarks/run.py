@@ -25,9 +25,10 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, help="comma-separated module list")
     args = ap.parse_args(argv)
 
-    from . import (fig3_4_time, fig5_6_memory, fig7_8_modifications,
-                   kernels_bench, lm_quantized, roofline_table,
-                   table_v_accuracy, table_vi_vii_sigmoid, table_viii_tools)
+    from . import (compile_backends, fig3_4_time, fig5_6_memory,
+                   fig7_8_modifications, kernels_bench, lm_quantized,
+                   roofline_table, table_v_accuracy, table_vi_vii_sigmoid,
+                   table_viii_tools)
     from .common import RESULTS_DIR
 
     datasets = ("D5", "D2") if args.quick else None
@@ -38,6 +39,8 @@ def main(argv=None) -> None:
         "fig5_6": lambda: fig5_6_memory.run(datasets or fig5_6_memory.DATASETS),
         "fig7_8": lambda: fig7_8_modifications.run(datasets or fig7_8_modifications.DATASETS),
         "table_viii": lambda: table_viii_tools.run(datasets or table_viii_tools.DATASETS),
+        "backends": lambda: compile_backends.run(
+            ("D5",) if args.quick else compile_backends.DATASETS),
         "lm_quantized": lm_quantized.run,
         "kernels": kernels_bench.run,
         "roofline": roofline_table.run,

@@ -10,7 +10,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core import convert
+from repro.compile import Target, compile
 from repro.data import load_dataset
 
 from .common import CLASSIFIERS, DATASETS, FORMATS, csv_line, get_model
@@ -26,7 +26,7 @@ def run(datasets=DATASETS, classifiers=CLASSIFIERS) -> List[Dict]:
             desk = float((model.predict(ds.x_test) == ds.y_test).mean())
             row = {"dataset": d, "classifier": name, "desktop": desk}
             for fmt in FORMATS:
-                em = convert(model, number_format=fmt)
+                em = compile(model, Target(number_format=fmt))
                 cls, stats = em.predict_with_stats(ds.x_test)
                 acc = float((cls == ds.y_test).mean())
                 row[fmt] = acc

@@ -9,7 +9,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core import convert
+from repro.compile import Target, compile
 from repro.core.activations import SIGMOID_NAMES
 from repro.data import load_dataset
 
@@ -26,7 +26,7 @@ def run(datasets=DATASETS) -> List[Dict]:
             t0 = time.perf_counter()
             row = {"dataset": d, "sigmoid": sig, "desktop": desk}
             for fmt in FORMATS:
-                em = convert(model, number_format=fmt, sigmoid=sig)
+                em = compile(model, Target(number_format=fmt, sigmoid=sig))
                 acc = float((em.predict(ds.x_test) == ds.y_test).mean())
                 row[fmt] = acc
                 row[f"{fmt}_delta"] = acc - desk

@@ -22,7 +22,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import convert
+from repro.compile import Target, compile
 from repro.data import load_dataset
 
 from .common import CLASSIFIERS, DATASETS, csv_line, get_model, time_predict
@@ -30,11 +30,11 @@ from .common import CLASSIFIERS, DATASETS, csv_line, get_model, time_predict
 
 def _variants(model, name):
     out = {}
-    out["embml"] = convert(model, number_format="fxp32",
+    out["embml"] = compile(model, Target(number_format="fxp32",
                            sigmoid="pwl4" if name == "mlp" else "exact",
-                           tree_layout="ifelse" if name == "tree" else "iterative")
-    out["sklearn-porter"] = convert(model, number_format="flt")
-    out["m2cgen"] = convert(model, number_format="flt")
+                           tree_layout="ifelse" if name == "tree" else "iterative"))
+    out["sklearn-porter"] = compile(model, Target(number_format="flt"))
+    out["m2cgen"] = compile(model, Target(number_format="flt"))
     return out
 
 

@@ -1,17 +1,20 @@
 """Quickstart: the EmbML pipeline end to end in ~40 lines.
 
-Train a classifier on a 'desktop' (this process), serialize it, convert it
-to an embedded fixed-point artifact, and compare accuracy/memory — the
-paper's Fig. 1 workflow.
+Train a classifier on a 'desktop' (this process), serialize it, compile it
+to an embedded fixed-point artifact with the unified ``repro.compile`` API,
+and compare accuracy/memory — the paper's Fig. 1 workflow.
+
+Migration note: the old ``convert(model, ConversionOptions(...))`` API still
+works as a deprecation shim; new code uses ``compile(model, Target(...))``,
+where the backend (ref / xla / pallas) is a Target field, not a code path.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import os
-import pickle
 import tempfile
 
-from repro.core import ConversionOptions, convert
+from repro.compile import Target, compile, load
 from repro.data import load_dataset
 from repro.models import train_decision_tree, train_mlp
 
@@ -26,34 +29,38 @@ def main():
     desktop_acc = (model.predict(ds.x_test) == ds.y_test).mean()
     print(f"desktop MLP accuracy: {desktop_acc:.4f}")
 
-    # Step 2 — serialize / deserialize (paper: pickle / ObjectOutputStream).
-    with tempfile.TemporaryDirectory() as tmp:
-        path = os.path.join(tmp, "mlp.pkl")
-        with open(path, "wb") as f:
-            pickle.dump(model, f)
-        with open(path, "rb") as f:
-            model = pickle.load(f)
-
-    # Step 3 — convert with EmbML options and evaluate the artifacts.
-    for opts in (
-        ConversionOptions(number_format="flt"),
-        ConversionOptions(number_format="fxp32"),
-        ConversionOptions(number_format="fxp32", sigmoid="pwl4"),
-        ConversionOptions(number_format="fxp16", sigmoid="pwl2"),
+    # Step 2 — compile with EmbML targets and evaluate the artifacts.
+    for target in (
+        Target(number_format="flt"),
+        Target(number_format="fxp32"),
+        Target(number_format="fxp32", sigmoid="pwl4", backend="xla"),
+        Target(number_format="fxp16", sigmoid="pwl2"),
     ):
-        em = convert(model, opts)
-        acc = (em.predict(ds.x_test) == ds.y_test).mean()
-        mem = em.memory_bytes()
-        print(f"  {opts.number_format:6s} sigmoid={opts.sigmoid:8s} "
-              f"acc={acc:.4f} (Δ{acc - desktop_acc:+.4f}) "
+        art = compile(model, target)
+        acc = (art.predict(ds.x_test) == ds.y_test).mean()
+        mem = art.memory_report()
+        print(f"  {target.number_format:6s} sigmoid={target.sigmoid:8s} "
+              f"backend={target.backend:6s} acc={acc:.4f} "
+              f"(Δ{acc - desktop_acc:+.4f}) "
               f"flash={mem['flash']:6d}B sram={mem['sram']}B")
+
+    # Step 3 — save / load the self-contained archive (the paper's "output
+    # file"): the loaded artifact predicts identically.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "mlp_fxp16.embml")
+        art = compile(model, Target(number_format="fxp16", sigmoid="pwl4"))
+        art.save(path)
+        restored = load(path)
+        assert (restored.predict(ds.x_test) == art.predict(ds.x_test)).all()
+        print(f"save/load round trip: identical predictions "
+              f"({os.path.getsize(path)}B archive)")
 
     # Decision trees: the three inference layouts agree exactly.
     tree = train_decision_tree(ds.x_train, ds.y_train, ds.n_classes, max_depth=8)
     preds = {}
     for layout in ("iterative", "ifelse", "oblivious"):
-        em = convert(tree, number_format="fxp32", tree_layout=layout)
-        preds[layout] = em.predict(ds.x_test)
+        art = compile(tree, Target(number_format="fxp32", tree_layout=layout))
+        preds[layout] = art.predict(ds.x_test)
     assert (preds["iterative"] == preds["ifelse"]).all()
     assert (preds["iterative"] == preds["oblivious"]).all()
     print("tree layouts (iterative == ifelse == oblivious): identical predictions")

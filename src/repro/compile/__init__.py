@@ -1,0 +1,50 @@
+"""repro.compile — the unified model -> target artifact compiler.
+
+The paper's pipeline (trained model in, self-contained embedded artifact
+out) as a staged, extensible API:
+
+    from repro.compile import compile, Target
+
+    art = compile(model, Target(number_format="fxp16", backend="pallas"))
+    art.predict(x)                      # specialized inference program
+    art.predict_with_stats(x)           # + overflow/underflow accounting
+    art.memory_report()                 # flash/SRAM footprint model
+    art.save("model.embml")             # self-contained archive
+    art2 = load("model.embml")          # predicts identically
+
+Stages: ``extract_params -> quantize -> lower -> specialize/jit``, dispatched
+through a decorator-based lowering registry (``tree``, ``logistic``, ``mlp``,
+``svm-*``, ``lm``).  The legacy ``repro.core.convert.convert()`` /
+``ConversionOptions`` API is a thin deprecation shim over this package.
+"""
+
+from .api import compile, compile_from_params
+from .artifact import CompiledArtifact, load
+from .registry import (Lowered, Lowering, get_lowering, lowering_kinds,
+                       model_kind, register_lowering)
+from .target import BACKENDS, NUMBER_FORMATS, Target
+from . import lowerings as _lowerings  # noqa: F401  (registration side effects)
+
+__all__ = [
+    "compile",
+    "compile_from_params",
+    "CompiledArtifact",
+    "load",
+    "Target",
+    "NUMBER_FORMATS",
+    "BACKENDS",
+    "Lowering",
+    "Lowered",
+    "register_lowering",
+    "get_lowering",
+    "lowering_kinds",
+    "model_kind",
+    "LMModel",
+]
+
+
+def __getattr__(name):
+    if name == "LMModel":  # lazy: avoid importing the LM stack eagerly
+        from .lowerings.lm import LMModel
+        return LMModel
+    raise AttributeError(f"module 'repro.compile' has no attribute '{name}'")

@@ -1,0 +1,110 @@
+"""The staged compiler entry point: ``compile(model, Target(...))``.
+
+Pipeline (replaces the closure monolith in ``core/convert.py``):
+
+    extract_params -> quantize -> lower -> specialize/jit
+
+Each registered lowering (see :mod:`repro.compile.registry`) implements the
+first three stages for one model kind; ``specialize`` is shared: it applies
+the Target's backend (eager reference / ``jax.jit`` / Pallas programs are
+already built by ``lower``) and batch policy, producing the final callable
+wrapped into a :class:`repro.compile.artifact.CompiledArtifact`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.fixedpoint import FxpStats
+
+from .artifact import CompiledArtifact
+from .registry import Lowered, get_lowering, model_kind
+from .target import Target
+
+__all__ = ["compile", "compile_from_params"]
+
+
+def _specialize(program: Lowered, target: Target) -> Callable:
+    """Stage 4: backend jit + batch policy.
+
+    * ``ref`` runs the program eagerly (op-by-op oracle semantics, easiest to
+      debug); ``xla``/``pallas`` wrap the whole program in ``jax.jit``.
+    * ``fixed`` batch policy pads every call up to ``batch_size`` (one traced
+      shape, the embedded static-allocation posture) and rejects larger
+      batches; padded rows are sliced off the output.
+    """
+    predict = program.predict
+    if target.backend in ("xla", "pallas") and program.jittable:
+        predict = jax.jit(predict)
+
+    if target.batch_policy == "fixed":
+        inner = predict
+        batch_size = target.batch_size
+        # Per-zero-row stat contribution, probed lazily on first partial
+        # batch: every stats counter is an elementwise count, so rows are
+        # independent and an all-zeros batch yields exactly batch_size
+        # copies of one phantom row's events (zero rows are *not* silent —
+        # biases make them nonzero downstream).
+        pad_row_stats: list = []
+
+        def predict(x):
+            x = np.asarray(x)
+            n = x.shape[0]
+            if n > batch_size:
+                raise ValueError(
+                    f"batch {n} exceeds the artifact's fixed batch_size "
+                    f"{batch_size}; recompile with a larger Target.batch_size")
+            if n == batch_size:
+                return inner(x)
+            pad = [(0, batch_size - n)] + [(0, 0)] * (x.ndim - 1)
+            out, stats = inner(np.pad(x, pad))
+            if target.fmt is None:
+                return out[:n], stats  # float stats are structurally zero
+            if not pad_row_stats:
+                zeros = np.zeros((batch_size,) + x.shape[1:], x.dtype)
+                _, zstats = inner(zeros)
+                pad_row_stats.append(FxpStats(
+                    *(np.asarray(v) // batch_size
+                      for v in (zstats.overflow, zstats.underflow, zstats.total))))
+            per = pad_row_stats[0]
+            k = batch_size - n
+            stats = FxpStats(stats.overflow - k * per.overflow,
+                             stats.underflow - k * per.underflow,
+                             stats.total - k * per.total)
+            return out[:n], stats
+
+    return predict
+
+
+def compile_from_params(kind: str, params: Any, target: Target) -> CompiledArtifact:
+    """Run the quantize/lower/specialize stages on already-extracted params.
+
+    This is the shared tail of :func:`compile` and of
+    :func:`repro.compile.artifact.load` (archives store extracted params).
+    """
+    lowering = get_lowering(kind)
+    qparams = lowering.quantize(params, target)
+    program = lowering.lower(qparams, target)
+    predict = _specialize(program, target)
+    return CompiledArtifact(kind=kind, target=target, params=params,
+                            _predict=predict, flash_bytes=program.flash_bytes,
+                            sram_bytes=program.sram_bytes,
+                            extras=program.extras)
+
+
+def compile(model: Any, target: Optional[Target] = None, **kwargs) -> CompiledArtifact:
+    """Compile a trained model into an embedded inference artifact.
+
+    ``target`` may be omitted and given as keyword fields instead:
+    ``compile(model, number_format="fxp16", backend="pallas")``.
+    """
+    tgt = target if target is not None else Target(**kwargs)
+    if target is not None and kwargs:
+        raise TypeError("pass either a Target or keyword fields, not both")
+    kind = model_kind(model)
+    lowering = get_lowering(kind)
+    params = lowering.extract_params(model)
+    return compile_from_params(kind, params, tgt)

@@ -1,0 +1,161 @@
+"""The compiled artifact — the paper's "output file" analogue.
+
+A :class:`CompiledArtifact` is the frozen, self-contained result of
+:func:`repro.compile.compile`: extracted parameters + a specialized predict
+program + the memory model.  ``save(path)`` writes a single-file archive
+(compressed msgpack: kind + Target + parameter tree) and ``load(path)``
+re-runs the lowering pipeline on the stored parameters, so an archive
+round-trips to an artifact that predicts identically — including across
+machines that pick a different kernel execution mode (interpret vs TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.fixedpoint import FxpStats
+from repro.train.checkpoint import (LEAF_KEY as _LEAF_KEY,
+                                    atomic_write_bytes, compress_bytes,
+                                    decode_leaf, decompress_bytes,
+                                    encode_leaf)
+
+from .target import Target
+
+__all__ = ["CompiledArtifact", "load"]
+
+_ARCHIVE_FORMAT = "repro-compiled-artifact"
+_ARCHIVE_VERSION = 1
+
+
+# --------------------------------------------------------------------------
+# parameter-tree (de)serialization: nested dicts/lists of arrays + scalars,
+# leaves in the shared checkpoint codec.
+# --------------------------------------------------------------------------
+def _encode(x: Any) -> Any:
+    if isinstance(x, dict):
+        return {str(k): _encode(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return {_LEAF_KEY: "list", "items": [_encode(v) for v in x]}
+    return encode_leaf(x)
+
+
+def _decode(d: Any) -> Any:
+    if not isinstance(d, dict):
+        return d
+    kind = d.get(_LEAF_KEY)
+    if kind is None:
+        return {k: _decode(v) for k, v in d.items()}
+    if kind == "list":
+        return [_decode(v) for v in d["items"]]
+    return decode_leaf(d)
+
+
+@dataclasses.dataclass
+class CompiledArtifact:
+    """Frozen inference artifact: parameters + specialized predict program."""
+
+    kind: str  # 'tree' | 'logistic' | 'mlp' | 'svm-*' | 'lm'
+    target: Target
+    # Extracted (float) parameters — the archive payload; None after
+    # discard_params().
+    params: Optional[Dict[str, Any]]
+    _predict: Callable[..., Tuple[jax.Array, FxpStats]] = dataclasses.field(repr=False)
+    flash_bytes: int = 0  # read-only parameter memory (paper: flash / HBM)
+    sram_bytes: int = 0  # activation scratch (paper: SRAM / VMEM working set)
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict, repr=False)
+
+    # -- inference -----------------------------------------------------------
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        out, _ = self._predict(x)
+        return np.asarray(out, np.int32)
+
+    def predict_with_stats(self, x: np.ndarray) -> Tuple[np.ndarray, Dict[str, float]]:
+        out, stats = self._predict(x)
+        total = max(int(stats.total), 1)
+        return np.asarray(out, np.int32), {
+            "overflow": int(stats.overflow),
+            "underflow": int(stats.underflow),
+            "total": int(stats.total),
+            "overflow_rate": float(int(stats.overflow) / total),
+            "underflow_rate": float(int(stats.underflow) / total),
+        }
+
+    # -- memory model --------------------------------------------------------
+    def memory_report(self) -> Dict[str, int]:
+        return {"flash": self.flash_bytes, "sram": self.sram_bytes,
+                "total": self.flash_bytes + self.sram_bytes}
+
+    def memory_bytes(self) -> Dict[str, int]:
+        """Legacy alias for :meth:`memory_report` (EmbeddedModel API)."""
+        return self.memory_report()
+
+    # -- legacy compat -------------------------------------------------------
+    @property
+    def options(self):
+        """Legacy ``ConversionOptions`` view of the target (deprecated)."""
+        from repro.core.convert import ConversionOptions
+        return ConversionOptions(number_format=self.target.number_format,
+                                 sigmoid=self.target.sigmoid,
+                                 tree_layout=self.target.tree_layout)
+
+    def discard_params(self) -> "CompiledArtifact":
+        """Drop the retained (unquantized) parameter tree to free memory.
+
+        The specialized predict program keeps working (it closes over the
+        lowered representation), but :meth:`save` becomes unavailable.
+        Useful for long-lived quantized LM artifacts, where the float tree
+        would otherwise stay resident alongside the quantized one.
+        """
+        self.params = None
+        return self
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str, metadata: Optional[Dict] = None) -> None:
+        """Write the self-contained archive (paper Fig. 1 'output file')."""
+        import time
+
+        import msgpack
+
+        if self.params is None:
+            raise ValueError(
+                "cannot save: parameters were dropped via discard_params(); "
+                "recompile the model to obtain a saveable artifact")
+        payload = {
+            "format": _ARCHIVE_FORMAT,
+            "version": _ARCHIVE_VERSION,
+            "kind": self.kind,
+            "target": dataclasses.asdict(self.target),
+            "params": _encode(self.params),
+            "metadata": metadata or {},
+            "saved_at": time.time(),
+        }
+        atomic_write_bytes(
+            path, compress_bytes(msgpack.packb(payload, use_bin_type=True)))
+
+
+def load(path: str) -> CompiledArtifact:
+    """Load an archive and recompile it into a live artifact.
+
+    The stored parameters are re-run through the quantize/lower/specialize
+    stages of the recorded Target, so the loaded artifact predicts
+    identically to the one that was saved.
+    """
+    import msgpack
+
+    from .api import compile_from_params
+
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(decompress_bytes(f.read()), raw=False,
+                                  strict_map_key=False)
+    if payload.get("format") != _ARCHIVE_FORMAT:
+        raise ValueError(f"{path} is not a {_ARCHIVE_FORMAT} archive")
+    if payload.get("version", 0) > _ARCHIVE_VERSION:
+        raise ValueError(f"archive version {payload['version']} is newer than "
+                         f"this reader ({_ARCHIVE_VERSION})")
+    target = Target(**payload["target"])
+    params = _decode(payload["params"])
+    return compile_from_params(payload["kind"], params, target)

@@ -1,0 +1,7 @@
+"""Registered lowerings, one module per model kind.
+
+Importing this package registers the classifier lowerings; the heavyweight
+``lm`` lowering is resolved lazily by the registry on first use.
+"""
+
+from . import linear, mlp, svm, tree  # noqa: F401  (registration side effects)

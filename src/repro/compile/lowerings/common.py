@@ -1,0 +1,36 @@
+"""Helpers shared by the classifier lowerings."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.fixedpoint import FxpFormat, FxpStats
+
+__all__ = ["zero_stats", "q", "qx_with_stats", "nbytes", "elem_bytes"]
+
+
+def zero_stats() -> FxpStats:
+    z = jnp.zeros((), jnp.int64)
+    return FxpStats(z, z, z)
+
+
+def q(x: np.ndarray, fmt: FxpFormat) -> jax.Array:
+    """Quantize static parameters (no stats — parameters are audited once)."""
+    return fxp.quantize(jnp.asarray(x, jnp.float32), fmt)
+
+
+def qx_with_stats(x: jax.Array, fmt: FxpFormat) -> Tuple[jax.Array, FxpStats]:
+    return fxp.quantize_with_stats(x, fmt)
+
+
+def nbytes(*arrays) -> int:
+    return int(sum(np.asarray(a).nbytes for a in arrays))
+
+
+def elem_bytes(fmt: FxpFormat | None) -> int:
+    return 4 if fmt is None else fmt.total_bits // 8

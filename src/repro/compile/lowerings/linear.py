@@ -1,0 +1,70 @@
+"""Lowering for linear decision functions: logistic regression (and, via
+delegation from the SVM lowering, linear SVMs — identical artifact math:
+``argmax(x @ W + b)``).
+
+Backend routing for fixed-point targets: ``ref``/``xla`` use the wide-
+accumulate ``qmatmul_with_stats`` oracle; ``pallas`` routes the matmul
+through ``kernels/fxp_qmatmul`` (MXU int path, interpret mode off-TPU).
+The pallas path reports quantization stats for the *input* stage only —
+kernel-internal saturation accounting stays on the reference backend.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+
+from ..registry import Lowered, Lowering, register_lowering
+from ..target import Target
+from .common import elem_bytes, nbytes, q, qx_with_stats, zero_stats
+
+
+def lower_linear(coef: np.ndarray, intercept: np.ndarray, target: Target) -> Lowered:
+    """Build the Lowered program for ``argmax(x @ coef + intercept)``."""
+    fmt = target.fmt
+    if fmt is None:
+        w = jnp.asarray(coef, jnp.float32)
+        b = jnp.asarray(intercept, jnp.float32)
+
+        def predict(x):
+            x = jnp.asarray(x, jnp.float32)
+            return jnp.argmax(x @ w + b, -1).astype(jnp.int32), zero_stats()
+
+        flash = nbytes(np.asarray(coef, np.float32),
+                       np.asarray(intercept, np.float32))
+    else:
+        qw = q(coef, fmt)
+        qb = q(intercept, fmt)
+
+        if target.backend == "pallas":
+            from repro.kernels import ops
+
+            def predict(x):
+                qx, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                logits = ops.fxp_qmatmul(qx, qw, fmt)
+                logits = fxp.qadd(logits, qb[None, :], fmt)
+                return jnp.argmax(logits, -1).astype(jnp.int32), stats
+        else:
+            def predict(x):
+                qx, s1 = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                logits, s2 = fxp.qmatmul_with_stats(qx, qw, fmt)
+                logits = fxp.qadd(logits, qb[None, :], fmt)
+                return jnp.argmax(logits, -1).astype(jnp.int32), s1.merge(s2)
+
+        flash = nbytes(np.asarray(qw), np.asarray(qb))
+    sram = int(np.asarray(coef).shape[1]) * elem_bytes(fmt)
+    return Lowered(predict, flash, sram)
+
+
+@register_lowering("logistic")
+class LogisticLowering(Lowering):
+    def extract_params(self, model: Any) -> Dict[str, Any]:
+        return {"coef": np.asarray(model.coef),
+                "intercept": np.asarray(model.intercept)}
+
+    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+        return lower_linear(qparams["coef"], qparams["intercept"], target)

@@ -1,0 +1,93 @@
+"""Lowering for sigmoid-MLP classifiers (paper C3: sigmoid replacements).
+
+Backend routing:
+
+* float targets — plain XLA matmuls; the ``pallas`` backend additionally
+  routes non-exact sigmoids through the fused ``kernels/pwl_activation``
+  VPU kernel.
+* fixed-point targets — ``ref``/``xla`` use the wide-accumulate
+  ``qmatmul_with_stats`` oracle per layer; ``pallas`` routes every layer
+  matmul through ``kernels/fxp_qmatmul`` (MXU int path).  Activations stay
+  in the Qn.m integer domain either way.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.activations import get_qsigmoid, get_sigmoid
+
+from ..registry import Lowered, Lowering, register_lowering
+from ..target import Target
+from .common import elem_bytes, nbytes, q, qx_with_stats, zero_stats
+
+
+@register_lowering("mlp")
+class MLPLowering(Lowering):
+    def extract_params(self, model: Any) -> Dict[str, Any]:
+        return {"weights": [np.asarray(w) for w in model.weights],
+                "biases": [np.asarray(b) for b in model.biases]}
+
+    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+        fmt = target.fmt
+        weights = qparams["weights"]
+        biases = qparams["biases"]
+        widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
+
+        if fmt is None:
+            ws = [jnp.asarray(w, jnp.float32) for w in weights]
+            bs = [jnp.asarray(b, jnp.float32) for b in biases]
+            if target.backend == "pallas" and target.sigmoid in (
+                    "pwl2", "pwl4", "rational"):
+                from repro.kernels import ops
+                variant = target.sigmoid
+                sig = lambda h: ops.pwl_activation(h, variant)
+            else:
+                sig = get_sigmoid(target.sigmoid)
+
+            def predict(x):
+                h = jnp.asarray(x, jnp.float32)
+                for i, (w, b) in enumerate(zip(ws, bs)):
+                    h = h @ w + b
+                    if i < len(ws) - 1:
+                        h = sig(h)
+                return jnp.argmax(h, -1).astype(jnp.int32), zero_stats()
+
+            flash = nbytes(*[np.asarray(w, np.float32) for w in weights],
+                           *[np.asarray(b, np.float32) for b in biases])
+        else:
+            qsig = get_qsigmoid(target.sigmoid)
+            qws = [q(w, fmt) for w in weights]
+            qbs = [q(b, fmt) for b in biases]
+
+            if target.backend == "pallas":
+                from repro.kernels import ops
+
+                def predict(x):
+                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                    for i, (w, b) in enumerate(zip(qws, qbs)):
+                        h = ops.fxp_qmatmul(h, w, fmt)
+                        h = fxp.qadd(h, b[None, :], fmt)
+                        if i < len(qws) - 1:
+                            h = qsig(h, fmt)
+                    return jnp.argmax(h, -1).astype(jnp.int32), stats
+            else:
+                def predict(x):
+                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                    for i, (w, b) in enumerate(zip(qws, qbs)):
+                        h, s = fxp.qmatmul_with_stats(h, w, fmt)
+                        stats = stats.merge(s)
+                        h = fxp.qadd(h, b[None, :], fmt)
+                        if i < len(qws) - 1:
+                            h = qsig(h, fmt)
+                    return jnp.argmax(h, -1).astype(jnp.int32), stats
+
+            flash = nbytes(*[np.asarray(w) for w in qws],
+                           *[np.asarray(b) for b in qbs])
+        # One reused activation buffer (paper §III-D): the widest layer.
+        sram = max(widths) * elem_bytes(fmt)
+        return Lowered(predict, flash, sram)

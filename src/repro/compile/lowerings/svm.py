@@ -1,0 +1,126 @@
+"""Lowering for SVM classifiers: linear / polynomial / RBF kernels.
+
+``svm-linear`` delegates to the shared linear program (same artifact math as
+logistic regression).  Kernel machines compute the libsvm decision function
+``argmax_c sum_m alpha[m,c] K(x, sv_m) + b[c]``; the float path serves the
+f64-trained artifact in f32 (reproducing the paper's poly-SVC precision-drop
+finding), the fixed-point path runs the full kernel in Qn.m integer ops.
+
+Backend routing: the two large matmuls (x @ sv.T and k @ dual) go through
+``kernels/fxp_qmatmul`` on the ``pallas`` backend; the elementwise kernel
+math (qmul/qpow/qexp) stays on the VPU-equivalent jnp ops.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+
+from ..registry import Lowered, Lowering, register_lowering
+from ..target import Target
+from .common import elem_bytes, nbytes, q, qx_with_stats, zero_stats
+from .linear import lower_linear
+
+
+@register_lowering("svm-linear", "svm-poly", "svm-rbf")
+class SVMLowering(Lowering):
+    def extract_params(self, model: Any) -> Dict[str, Any]:
+        if model.kernel == "linear":
+            return {"kernel": "linear",
+                    "coef": np.asarray(model.coef),
+                    "intercept": np.asarray(model.intercept)}
+        return {"kernel": str(model.kernel),
+                "support_vectors": np.asarray(model.support_vectors),
+                "dual_coef": np.asarray(model.dual_coef),
+                "intercept": np.asarray(model.intercept),
+                "gamma": float(model.gamma),
+                "coef0": float(model.coef0),
+                "degree": int(model.degree)}
+
+    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+        if qparams["kernel"] == "linear":
+            return lower_linear(qparams["coef"], qparams["intercept"], target)
+        return _lower_kernel_svm(qparams, target)
+
+
+def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
+    fmt = target.fmt
+    kernel = p["kernel"]
+    sv = np.asarray(p["support_vectors"])
+    dual = np.asarray(p["dual_coef"])
+    icept = np.asarray(p["intercept"])
+    gamma, coef0, degree = p["gamma"], p["coef0"], p["degree"]
+
+    if fmt is None:
+        svj = jnp.asarray(sv, jnp.float32)  # f32 serve of the f64 artifact
+        dj = jnp.asarray(dual, jnp.float32)
+        bj = jnp.asarray(icept, jnp.float32)
+
+        if kernel == "poly":
+            def predict(x):
+                x = jnp.asarray(x, jnp.float32)
+                k = (np.float32(gamma) * (x @ svj.T) + np.float32(coef0)) ** degree
+                return jnp.argmax(k @ dj + bj, -1).astype(jnp.int32), zero_stats()
+        else:  # rbf
+            def predict(x):
+                x = jnp.asarray(x, jnp.float32)
+                d2 = (jnp.sum(x * x, -1, keepdims=True) - 2 * x @ svj.T
+                      + jnp.sum(svj * svj, -1)[None, :])
+                k = jnp.exp(-np.float32(gamma) * d2)
+                return jnp.argmax(k @ dj + bj, -1).astype(jnp.int32), zero_stats()
+
+        flash = nbytes(sv.astype(np.float32), dual.astype(np.float32),
+                       icept.astype(np.float32))
+    else:
+        qsv = q(sv, fmt)
+        qd = q(dual, fmt)
+        qb = q(icept, fmt)
+        qgamma = q(np.float32(gamma), fmt)
+        qcoef0 = q(np.float32(coef0), fmt)
+
+        if target.backend == "pallas":
+            from repro.kernels import ops
+
+            def matmul(a, b):
+                return ops.fxp_qmatmul(a, b, fmt), zero_stats()
+        else:
+            def matmul(a, b):
+                return fxp.qmatmul_with_stats(a, b, fmt)
+
+        if kernel == "poly":
+            def predict(x):
+                qx, s0 = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                dot, s1 = matmul(qx, qsv.T)
+                k = fxp.qadd(fxp.qmul(dot, qgamma, fmt), qcoef0, fmt)
+                k = fxp.qpow_int(k, degree, fmt)
+                out, s2 = matmul(k, qd)
+                out = fxp.qadd(out, qb[None, :], fmt)
+                return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
+        else:  # rbf
+            def _qsq_norm(qv):
+                # sum_k q_k^2 in wide precision, one rounded shift at the end
+                wide = qv.astype(fmt.wide_dtype)
+                acc = jnp.sum(wide * wide, axis=-1)
+                return fxp._saturate(fxp._rshift_round(acc, fmt.frac_bits), fmt)
+
+            def predict(x):
+                qx, s0 = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                # d2 = |x|^2 - 2 x.sv + |sv|^2, all Qn.m
+                x2 = _qsq_norm(qx)
+                dot, s1 = matmul(qx, qsv.T)
+                sv2 = _qsq_norm(qsv)
+                d2 = fxp.qadd(fxp.qsub(x2[:, None], fxp.qadd(dot, dot, fmt), fmt),
+                              sv2[None, :], fmt)
+                arg = fxp.qneg(fxp.qmul(d2, qgamma, fmt), fmt)
+                k = fxp.qexp(arg, fmt)
+                out, s2 = matmul(k, qd)
+                out = fxp.qadd(out, qb[None, :], fmt)
+                return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
+
+        flash = nbytes(np.asarray(qsv), np.asarray(qd), np.asarray(qb))
+    sram = (sv.shape[0] + dual.shape[1]) * elem_bytes(fmt)
+    return Lowered(predict, flash, sram)

@@ -1,0 +1,96 @@
+"""Lowering for decision trees (paper C4: three inference layouts).
+
+Backend routing:
+
+* ``ref`` / ``xla`` — the layout chosen by ``Target.tree_layout`` (iterative
+  gather-chase, codegen'd nested-where, or dense oblivious form).
+* ``pallas`` — ``kernels/tree_ensemble`` (the MXU oblivious kernel) via
+  ``kernels.ops.tree_predict``, which auto-selects interpret mode off-TPU.
+  The kernel computes the oblivious form regardless of the requested layout
+  (all layouts are prediction-equivalent — tested); the memory model still
+  reports the requested layout's footprint.
+
+Fixed-point targets quantize thresholds at compile time and inputs at call
+time; the kernel compares the integer values in float32 (exact for |q| < 2^24,
+far above any paper-scale tree threshold).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trees as trees_mod
+from repro.core.trees import TreeArrays
+
+from ..registry import Lowered, Lowering, register_lowering
+from ..target import Target
+from .common import qx_with_stats, zero_stats
+
+_LAYOUT_FNS = {
+    "iterative": trees_mod.predict_iterative,
+    "ifelse": trees_mod.predict_ifelse,
+    "oblivious": trees_mod.predict_oblivious,
+}
+
+
+@register_lowering("tree")
+class TreeLowering(Lowering):
+    def extract_params(self, model: Any) -> Dict[str, Any]:
+        t: TreeArrays = model.tree
+        return {
+            "feature": np.asarray(t.feature, np.int32),
+            "threshold": np.asarray(t.threshold, np.float32),
+            "left": np.asarray(t.left, np.int32),
+            "right": np.asarray(t.right, np.int32),
+            "leaf_class": np.asarray(t.leaf_class, np.int32),
+            "max_depth": int(t.max_depth),
+            "n_classes": int(t.n_classes),
+            "n_features": int(t.n_features),
+        }
+
+    def quantize(self, params: Dict[str, Any], target: Target) -> Dict[str, Any]:
+        tree = TreeArrays(
+            feature=np.asarray(params["feature"], np.int32),
+            threshold=np.asarray(params["threshold"], np.float32),
+            left=np.asarray(params["left"], np.int32),
+            right=np.asarray(params["right"], np.int32),
+            leaf_class=np.asarray(params["leaf_class"], np.int32),
+            max_depth=int(params["max_depth"]),
+            n_classes=int(params["n_classes"]),
+            n_features=int(params["n_features"]),
+        )
+        if target.fmt is not None:
+            tree = tree.quantized(target.fmt)
+        return {"tree": tree}
+
+    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+        tree: TreeArrays = qparams["tree"]
+        fmt = target.fmt
+
+        if target.backend == "pallas":
+            from repro.kernels import ops
+
+            if fmt is None:
+                def predict(x):
+                    xf = jnp.asarray(x, jnp.float32)
+                    return ops.tree_predict(tree, xf), zero_stats()
+            else:
+                def predict(x):
+                    qx, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                    return ops.tree_predict(tree, qx.astype(jnp.float32)), stats
+        else:
+            predict_raw = _LAYOUT_FNS[target.tree_layout]
+            if fmt is None:
+                def predict(x):
+                    return predict_raw(tree, jnp.asarray(x, jnp.float32)), zero_stats()
+            else:
+                def predict(x):
+                    qx, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                    return predict_raw(tree, qx), stats
+
+        flash = trees_mod.tree_memory_bytes(tree, target.tree_layout, fmt)
+        sram = 8  # node index + feature value registers
+        return Lowered(predict, flash, sram)

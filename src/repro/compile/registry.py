@@ -1,0 +1,111 @@
+"""Decorator-based lowering registry: model kind -> staged compiler.
+
+Replaces the isinstance ladder in the old ``core/convert.py``.  A *lowering*
+implements the staged pipeline for one model kind:
+
+    extract_params(model) -> params     # pure-data dict (serializable)
+    quantize(params, target) -> qparams # format-specific representation
+    lower(qparams, target) -> Lowered   # predict program + memory model
+
+Kinds are declared by the models themselves via a ``compile_kind`` attribute
+(class attr or property) — the registry never imports model classes, which
+keeps ``repro.compile`` import-cycle-free with ``repro.models``.
+
+The heavyweight ``lm`` lowering is registered lazily so classifier-only users
+never pay for importing the LM stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.fixedpoint import FxpStats
+
+from .target import Target
+
+__all__ = ["Lowered", "register_lowering", "get_lowering", "lowering_kinds",
+           "model_kind"]
+
+
+@dataclasses.dataclass
+class Lowered:
+    """Output of a lowering's ``lower`` stage.
+
+    ``predict(x) -> (out, FxpStats)`` is the raw program the specialize/jit
+    stage wraps; ``flash_bytes``/``sram_bytes`` model the artifact footprint
+    (paper Figs 5-6); ``extras`` carries kind-specific entry points (e.g. the
+    LM lowering exposes ``serve_step`` / ``generate``).
+    """
+
+    predict: Callable[[jax.Array], Tuple[jax.Array, FxpStats]]
+    flash_bytes: int = 0
+    sram_bytes: int = 0
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    jittable: bool = True  # False: specialize must not wrap in jax.jit
+
+
+class Lowering:
+    """Base class: one registered compiler per model kind."""
+
+    kinds: Tuple[str, ...] = ()
+
+    def extract_params(self, model: Any) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def quantize(self, params: Dict[str, Any], target: Target) -> Dict[str, Any]:
+        return params
+
+    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+        raise NotImplementedError
+
+
+_LOWERINGS: Dict[str, Lowering] = {}
+# Deferred registrations: kind -> module that registers it on import.
+_LAZY: Dict[str, str] = {"lm": "repro.compile.lowerings.lm"}
+
+
+def register_lowering(*kinds: str) -> Callable[[type], type]:
+    """Class decorator: ``@register_lowering("tree")`` registers an instance
+    of the decorated :class:`Lowering` subclass for each kind."""
+
+    def deco(cls: type) -> type:
+        inst = cls()
+        inst.kinds = kinds
+        for kind in kinds:
+            _LOWERINGS[kind] = inst
+        return cls
+
+    return deco
+
+
+def get_lowering(kind: str) -> Lowering:
+    if kind not in _LOWERINGS and kind in _LAZY:
+        importlib.import_module(_LAZY[kind])
+    try:
+        return _LOWERINGS[kind]
+    except KeyError:
+        raise KeyError(
+            f"no lowering registered for kind '{kind}'; "
+            f"known: {sorted(set(_LOWERINGS) | set(_LAZY))}")
+
+
+def lowering_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(set(_LOWERINGS) | set(_LAZY)))
+
+
+def model_kind(model: Any) -> str:
+    """Resolve a model object to its registered lowering kind.
+
+    Models declare their kind via ``compile_kind`` (e.g. ``"tree"``,
+    ``"svm-rbf"``); anything without one is not compilable.
+    """
+    kind = getattr(model, "compile_kind", None)
+    if isinstance(kind, str):
+        return kind
+    raise TypeError(
+        f"{type(model).__name__} declares no 'compile_kind'; "
+        f"cannot compile it (known kinds: {lowering_kinds()})")

@@ -1,0 +1,93 @@
+"""The frozen :class:`Target` spec — *what* to compile for, in one value.
+
+A Target captures every lowering decision the EmbML pipeline makes (paper
+§III): the serving number format (C1), the sigmoid replacement (C3), the tree
+inference layout (C4), plus the beyond-paper axes this reproduction adds —
+which *backend* executes the artifact (pure-jnp reference, jitted XLA, or the
+Pallas TPU kernels) and the batch policy the artifact is specialized for.
+
+Replaces the old ``repro.core.convert.ConversionOptions`` (which only knew
+the three paper axes and hard-coded the backend); ``ConversionOptions`` is
+kept as a deprecation shim over this class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.activations import SIGMOID_NAMES
+from repro.core.fixedpoint import FXP8, FXP16, FXP32, FxpFormat
+from repro.core.trees import TREE_LAYOUTS
+
+__all__ = ["Target", "NUMBER_FORMATS", "BACKENDS", "BATCH_POLICIES"]
+
+NUMBER_FORMATS: Dict[str, Optional[FxpFormat]] = {
+    "flt": None,
+    "fxp32": FXP32,
+    "fxp16": FXP16,
+    "fxp8": FXP8,
+}
+
+BACKENDS = ("ref", "xla", "pallas")
+BATCH_POLICIES = ("dynamic", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """Frozen compilation target for :func:`repro.compile.compile`.
+
+    * ``number_format`` — ``flt`` | ``fxp32`` (Q22.10) | ``fxp16`` (Q12.4) |
+      ``fxp8`` (Q5.2).  For the ``lm`` lowering, ``fxp8``/``fxp16`` select
+      int8/int16 weight-only quantization.
+    * ``sigmoid`` — ``exact`` | ``rational`` | ``pwl2`` | ``pwl4``.  MLP
+      hidden activation (paper C3); for LMs, the gate sigmoid/SiLU variant.
+    * ``tree_layout`` — ``iterative`` | ``ifelse`` | ``oblivious`` (paper C4).
+    * ``backend`` — ``ref`` (eager pure-jnp oracle semantics), ``xla`` (the
+      same program under ``jax.jit``), ``pallas`` (fixed-point matmuls via
+      ``kernels/fxp_qmatmul``, tree inference via ``kernels/tree_ensemble``;
+      off-TPU the kernels run in interpret mode automatically, so the same
+      Target compiles everywhere).
+    * ``batch_policy`` — ``dynamic`` (retrace per batch shape) or ``fixed``
+      (artifact is specialized to ``batch_size``; smaller batches are padded,
+      larger ones rejected — the embedded "static allocation" posture).
+    * ``weight_scale`` — LM weight-only scale mode: ``qnm`` (paper-faithful
+      global power-of-two scale) or ``per_channel``.
+    * ``kv_cache`` — LM decode cache: ``native`` dtype or ``int8``.
+    """
+
+    number_format: str = "flt"
+    sigmoid: str = "exact"
+    tree_layout: str = "iterative"
+    backend: str = "ref"
+    batch_policy: str = "dynamic"
+    batch_size: Optional[int] = None
+    weight_scale: str = "qnm"
+    kv_cache: str = "native"
+
+    def __post_init__(self):
+        if self.number_format not in NUMBER_FORMATS:
+            raise KeyError(
+                f"number_format must be one of {list(NUMBER_FORMATS)}")
+        if self.sigmoid not in SIGMOID_NAMES:
+            raise KeyError(f"sigmoid must be one of {SIGMOID_NAMES}")
+        if self.tree_layout not in TREE_LAYOUTS:
+            raise KeyError(f"tree_layout must be one of {TREE_LAYOUTS}")
+        if self.backend not in BACKENDS:
+            raise KeyError(f"backend must be one of {BACKENDS}")
+        if self.batch_policy not in BATCH_POLICIES:
+            raise KeyError(f"batch_policy must be one of {BATCH_POLICIES}")
+        if self.batch_policy == "fixed" and not self.batch_size:
+            raise ValueError("batch_policy='fixed' requires batch_size")
+        if self.weight_scale not in ("qnm", "per_channel"):
+            raise KeyError("weight_scale must be 'qnm' or 'per_channel'")
+        if self.kv_cache not in ("native", "int8"):
+            raise KeyError("kv_cache must be 'native' or 'int8'")
+
+    @property
+    def fmt(self) -> Optional[FxpFormat]:
+        """The fixed-point format, or None for float serving."""
+        return NUMBER_FORMATS[self.number_format]
+
+    def replace(self, **kwargs) -> "Target":
+        return dataclasses.replace(self, **kwargs)

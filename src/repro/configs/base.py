@@ -97,6 +97,7 @@ class ArchConfig:
     n_prefix_embeds: int = 0  # vision patches per example (llava anyres)
     attn_chunk: int = 1024  # blockwise-attention chunk (prefill memory bound)
     kv_cache_dtype: str = "bfloat16"  # 'int8' = Qn.m-quantized decode cache (C1)
+    gate_sigmoid: str = "exact"  # serve-time gate sigmoid variant (paper C3)
     moe_prefill_chunk: int = 0  # scan MoE over token chunks (bounds live set)
     remat: bool = True
     dtype: str = "bfloat16"

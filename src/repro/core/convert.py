@@ -1,310 +1,92 @@
-"""The EmbML conversion pipeline (paper §III): trained model → embedded artifact.
+"""DEPRECATED shim — the conversion pipeline now lives in :mod:`repro.compile`.
 
-Workflow (Fig. 1 of the paper):
+The original EmbML conversion entry point (paper §III, Fig. 1):
+``convert(model, ConversionOptions(...))``.  It is kept so every existing
+test, example, and benchmark works unchanged, but it is now a thin wrapper
+over the staged compiler API:
 
-1. a model is trained by the :mod:`repro.models` trainers (WEKA/sklearn
-   analogue) and **serialized** via :func:`repro.train.checkpoint.save_pytree`
-   (pickle/ObjectOutputStream analogue);
-2. :func:`convert` **deserializes** the artifact, extracts the parameters and
-   emits an :class:`EmbeddedModel` — a frozen, self-contained inference
-   program specialized by :class:`ConversionOptions`:
+    from repro.compile import compile, Target
+    art = compile(model, Target(number_format="fxp32", tree_layout="ifelse"))
 
-   * ``number_format`` ∈ {``flt``, ``fxp32`` (Q22.10), ``fxp16`` (Q12.4),
-     ``fxp8``} — contribution C1;
-   * ``sigmoid`` ∈ {``exact``, ``rational``, ``pwl2``, ``pwl4``} (MLP) — C3;
-   * ``tree_layout`` ∈ {``iterative``, ``ifelse``, ``oblivious``} — C4;
+Mapping:
 
-3. the artifact's ``predict`` is a pure jitted function (the C++ output-file
-   analogue); ``predict_with_stats`` additionally returns overflow/underflow
-   counts (§V-A analysis); ``memory_bytes`` models the flash/SRAM footprint
-   (Figs 5–6).
+* ``ConversionOptions(number_format, sigmoid, tree_layout)`` ->
+  ``Target(number_format, sigmoid, tree_layout, backend="ref")`` — the
+  ``ref`` backend reproduces the old eager semantics exactly; new code can
+  pick ``backend="xla"`` (whole-program jit) or ``backend="pallas"`` (TPU
+  kernels) as a Target field rather than a code path.
+* ``EmbeddedModel`` -> :class:`repro.compile.CompiledArtifact` (same
+  ``predict`` / ``predict_with_stats`` / ``memory_bytes`` surface, plus
+  ``save``/``load`` and ``memory_report``).
 
-``flt`` serves in float32 regardless of training precision — reproducing the
-paper's poly-SVC finding that a double-trained model served single loses
-accuracy.
+``repro.compile`` is imported lazily (it builds on the core submodules, so a
+module-level import here would be circular through ``repro.core.__init__``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import warnings
+from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import fixedpoint as fxp
-from repro.core.activations import get_qsigmoid, get_sigmoid
-from repro.core.fixedpoint import FXP8, FXP16, FXP32, FxpFormat, FxpStats
-from repro.core import trees as trees_mod
-
-# NOTE: repro.models imports repro.core.trees; model classes are therefore
-# imported lazily inside convert() to keep the package import-cycle-free.
+from repro.core.fixedpoint import FxpFormat
 
 __all__ = ["ConversionOptions", "EmbeddedModel", "convert", "NUMBER_FORMATS"]
 
-NUMBER_FORMATS: Dict[str, Optional[FxpFormat]] = {
-    "flt": None,
-    "fxp32": FXP32,
-    "fxp16": FXP16,
-    "fxp8": FXP8,
-}
+
+def _number_formats() -> Dict[str, Optional[FxpFormat]]:
+    # Single source of truth lives in repro.compile.target; resolved lazily
+    # (this module is imported during repro.compile's own initialization).
+    from repro.compile.target import NUMBER_FORMATS
+    return NUMBER_FORMATS
 
 
 @dataclasses.dataclass(frozen=True)
 class ConversionOptions:
+    """DEPRECATED: use :class:`repro.compile.Target`."""
+
     number_format: str = "flt"
     sigmoid: str = "exact"  # MLP hidden activation replacement
     tree_layout: str = "iterative"
 
     def __post_init__(self):
-        if self.number_format not in NUMBER_FORMATS:
-            raise KeyError(f"number_format must be one of {list(NUMBER_FORMATS)}")
+        if self.number_format not in _number_formats():
+            raise KeyError(
+                f"number_format must be one of {list(_number_formats())}")
 
     @property
     def fmt(self) -> Optional[FxpFormat]:
-        return NUMBER_FORMATS[self.number_format]
+        return _number_formats()[self.number_format]
+
+    def to_target(self):
+        from repro.compile import Target
+        return Target(number_format=self.number_format, sigmoid=self.sigmoid,
+                      tree_layout=self.tree_layout, backend="ref")
 
 
-def _zero_stats() -> FxpStats:
-    z = jnp.zeros((), jnp.int64)
-    return FxpStats(z, z, z)
-
-
-@dataclasses.dataclass
-class EmbeddedModel:
-    """Frozen inference artifact: parameters + a specialized predict program."""
-
-    kind: str  # 'tree' | 'logistic' | 'mlp' | 'svm-linear' | 'svm-poly' | 'svm-rbf'
-    options: ConversionOptions
-    params: Dict[str, Any]  # frozen (possibly integer) arrays
-    _predict: Callable[..., Tuple[jax.Array, FxpStats]] = dataclasses.field(repr=False)
-    flash_bytes: int = 0  # read-only parameter memory (paper: flash / HBM)
-    sram_bytes: int = 0  # activation scratch (paper: SRAM / VMEM working set)
-
-    def predict(self, x: np.ndarray) -> np.ndarray:
-        cls, _ = self._predict(jnp.asarray(x, jnp.float32))
-        return np.asarray(cls, np.int32)
-
-    def predict_with_stats(self, x: np.ndarray) -> Tuple[np.ndarray, Dict[str, float]]:
-        cls, stats = self._predict(jnp.asarray(x, jnp.float32))
-        total = max(int(stats.total), 1)
-        return np.asarray(cls, np.int32), {
-            "overflow": int(stats.overflow),
-            "underflow": int(stats.underflow),
-            "total": int(stats.total),
-            "overflow_rate": float(int(stats.overflow) / total),
-            "underflow_rate": float(int(stats.underflow) / total),
-        }
-
-    def memory_bytes(self) -> Dict[str, int]:
-        return {"flash": self.flash_bytes, "sram": self.sram_bytes,
-                "total": self.flash_bytes + self.sram_bytes}
-
-
-# --------------------------------------------------------------------------
-# helpers
-# --------------------------------------------------------------------------
-def _q(x: np.ndarray, fmt: FxpFormat) -> jax.Array:
-    return fxp.quantize(jnp.asarray(x, jnp.float32), fmt)
-
-
-def _qx_with_stats(x: jax.Array, fmt: FxpFormat) -> Tuple[jax.Array, FxpStats]:
-    return fxp.quantize_with_stats(x, fmt)
-
-
-def _nbytes(*arrays) -> int:
-    return int(sum(np.asarray(a).nbytes for a in arrays))
-
-
-# --------------------------------------------------------------------------
-# per-kind converters
-# --------------------------------------------------------------------------
-def _convert_tree(model: DecisionTreeModel, opts: ConversionOptions) -> EmbeddedModel:
-    fmt = opts.fmt
-    tree = model.tree if fmt is None else model.tree.quantized(fmt)
-    layout = opts.tree_layout
-    predict_raw = {
-        "iterative": trees_mod.predict_iterative,
-        "ifelse": trees_mod.predict_ifelse,
-        "oblivious": trees_mod.predict_oblivious,
-    }[layout]
-
-    if fmt is None:
-        def predict(x):
-            return predict_raw(tree, x), _zero_stats()
-    else:
-        def predict(x):
-            qx, stats = _qx_with_stats(x, fmt)
-            return predict_raw(tree, qx), stats
-
-    flash = trees_mod.tree_memory_bytes(tree, layout, fmt)
-    sram = 8  # node index + feature value registers
-    return EmbeddedModel("tree", opts, {"tree": tree}, predict, flash, sram)
-
-
-def _convert_logistic(model: LogisticModel, opts: ConversionOptions) -> EmbeddedModel:
-    fmt = opts.fmt
-    if fmt is None:
-        w = jnp.asarray(model.coef, jnp.float32)
-        b = jnp.asarray(model.intercept, jnp.float32)
-
-        def predict(x):
-            return jnp.argmax(x @ w + b, -1).astype(jnp.int32), _zero_stats()
-
-        flash = _nbytes(model.coef.astype(np.float32), model.intercept.astype(np.float32))
-    else:
-        qw = _q(model.coef, fmt)
-        qb = _q(model.intercept, fmt)
-
-        def predict(x):
-            qx, s1 = _qx_with_stats(x, fmt)
-            logits, s2 = fxp.qmatmul_with_stats(qx, qw, fmt)
-            logits = fxp.qadd(logits, qb[None, :], fmt)
-            return jnp.argmax(logits, -1).astype(jnp.int32), s1.merge(s2)
-
-        flash = _nbytes(np.asarray(qw), np.asarray(qb))
-    sram = model.coef.shape[1] * (4 if fmt is None else fmt.total_bits // 8)
-    return EmbeddedModel("logistic", opts, {"coef": model.coef, "intercept": model.intercept},
-                         predict, flash, sram)
-
-
-def _convert_mlp(model: MLPModel, opts: ConversionOptions) -> EmbeddedModel:
-    fmt = opts.fmt
-    widths = model.layer_sizes
-    if fmt is None:
-        sig = get_sigmoid(opts.sigmoid)
-        ws = [jnp.asarray(w, jnp.float32) for w in model.weights]
-        bs = [jnp.asarray(b, jnp.float32) for b in model.biases]
-
-        def predict(x):
-            h = x
-            for i, (w, b) in enumerate(zip(ws, bs)):
-                h = h @ w + b
-                if i < len(ws) - 1:
-                    h = sig(h)
-            return jnp.argmax(h, -1).astype(jnp.int32), _zero_stats()
-
-        flash = _nbytes(*[w.astype(np.float32) for w in model.weights],
-                        *[b.astype(np.float32) for b in model.biases])
-    else:
-        qsig = get_qsigmoid(opts.sigmoid)
-        qws = [_q(w, fmt) for w in model.weights]
-        qbs = [_q(b, fmt) for b in model.biases]
-
-        def predict(x):
-            h, stats = _qx_with_stats(x, fmt)
-            for i, (w, b) in enumerate(zip(qws, qbs)):
-                h, s = fxp.qmatmul_with_stats(h, w, fmt)
-                stats = stats.merge(s)
-                h = fxp.qadd(h, b[None, :], fmt)
-                if i < len(qws) - 1:
-                    h = qsig(h, fmt)
-            return jnp.argmax(h, -1).astype(jnp.int32), stats
-
-        flash = _nbytes(*[np.asarray(w) for w in qws], *[np.asarray(b) for b in qbs])
-    # One reused activation buffer (paper §III-D): the widest layer.
-    sram = max(widths) * (4 if fmt is None else fmt.total_bits // 8)
-    return EmbeddedModel("mlp", opts, {"weights": model.weights, "biases": model.biases},
-                         predict, flash, sram)
-
-
-def _convert_svm(model: SVMModel, opts: ConversionOptions) -> EmbeddedModel:
-    from repro.models.logistic import LogisticModel
-
-    fmt = opts.fmt
-    kind = f"svm-{model.kernel}"
-    if model.kernel == "linear":
-        lm = LogisticModel(np.asarray(model.coef), np.asarray(model.intercept))
-        em = _convert_logistic(lm, opts)
-        return dataclasses.replace(em, kind=kind, params={
-            "coef": model.coef, "intercept": model.intercept})
-
-    sv = np.asarray(model.support_vectors)
-    dual = np.asarray(model.dual_coef)
-    icept = np.asarray(model.intercept)
-    gamma, coef0, degree = model.gamma, model.coef0, model.degree
-
-    if fmt is None:
-        svj = jnp.asarray(sv, jnp.float32)  # NOTE: f32 — reproduces the f64→f32 drop
-        dj = jnp.asarray(dual, jnp.float32)
-        bj = jnp.asarray(icept, jnp.float32)
-
-        if model.kernel == "poly":
-            def predict(x):
-                k = (np.float32(gamma) * (x @ svj.T) + np.float32(coef0)) ** degree
-                return jnp.argmax(k @ dj + bj, -1).astype(jnp.int32), _zero_stats()
-        else:  # rbf
-            def predict(x):
-                d2 = (jnp.sum(x * x, -1, keepdims=True) - 2 * x @ svj.T
-                      + jnp.sum(svj * svj, -1)[None, :])
-                k = jnp.exp(-np.float32(gamma) * d2)
-                return jnp.argmax(k @ dj + bj, -1).astype(jnp.int32), _zero_stats()
-
-        flash = _nbytes(sv.astype(np.float32), dual.astype(np.float32),
-                        icept.astype(np.float32))
-    else:
-        qsv = _q(sv, fmt)
-        qd = _q(dual, fmt)
-        qb = _q(icept, fmt)
-        qgamma = _q(np.float32(gamma), fmt)
-        qcoef0 = _q(np.float32(coef0), fmt)
-
-        if model.kernel == "poly":
-            def predict(x):
-                qx, s0 = _qx_with_stats(x, fmt)
-                dot, s1 = fxp.qmatmul_with_stats(qx, qsv.T, fmt)
-                k = fxp.qadd(fxp.qmul(dot, qgamma, fmt), qcoef0, fmt)
-                k = fxp.qpow_int(k, degree, fmt)
-                out, s2 = fxp.qmatmul_with_stats(k, qd, fmt)
-                out = fxp.qadd(out, qb[None, :], fmt)
-                return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
-        else:  # rbf
-            def _qsq_norm(q):
-                # sum_k q_k^2 in wide precision, one rounded shift at the end
-                wide = q.astype(fmt.wide_dtype)
-                acc = jnp.sum(wide * wide, axis=-1)
-                return fxp._saturate(fxp._rshift_round(acc, fmt.frac_bits), fmt)
-
-            def predict(x):
-                qx, s0 = _qx_with_stats(x, fmt)
-                # d2 = |x|^2 - 2 x.sv + |sv|^2, all Qn.m
-                x2 = _qsq_norm(qx)
-                dot, s1 = fxp.qmatmul_with_stats(qx, qsv.T, fmt)
-                sv2 = _qsq_norm(qsv)
-                d2 = fxp.qadd(fxp.qsub(x2[:, None], fxp.qadd(dot, dot, fmt), fmt),
-                              sv2[None, :], fmt)
-                arg = fxp.qneg(fxp.qmul(d2, qgamma, fmt), fmt)
-                k = fxp.qexp(arg, fmt)
-                out, s2 = fxp.qmatmul_with_stats(k, qd, fmt)
-                out = fxp.qadd(out, qb[None, :], fmt)
-                return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
-
-        flash = _nbytes(np.asarray(qsv), np.asarray(qd), np.asarray(qb))
-    sram = (sv.shape[0] + dual.shape[1]) * (4 if fmt is None else fmt.total_bits // 8)
-    return EmbeddedModel(kind, opts, {
-        "support_vectors": sv, "dual_coef": dual, "intercept": icept,
-        "gamma": gamma, "coef0": coef0, "degree": degree}, predict, flash, sram)
-
-
-# --------------------------------------------------------------------------
-# entry point
-# --------------------------------------------------------------------------
 def convert(model: Any, options: Optional[ConversionOptions] = None,
-            **kwargs) -> EmbeddedModel:
-    """Convert a trained desktop model into an embedded inference artifact."""
-    from repro.models.decision_tree import DecisionTreeModel
-    from repro.models.logistic import LogisticModel
-    from repro.models.mlp import MLPModel
-    from repro.models.svm import SVMModel
+            **kwargs):
+    """DEPRECATED: convert a trained model into an embedded artifact.
 
+    Equivalent to ``repro.compile.compile(model, options.to_target())``.
+    """
+    from repro.compile import compile as _compile
+
+    warnings.warn(
+        "repro.core.convert.convert() is deprecated; use "
+        "repro.compile.compile(model, Target(...))", DeprecationWarning,
+        stacklevel=2)
     opts = options or ConversionOptions(**kwargs)
-    if isinstance(model, DecisionTreeModel):
-        return _convert_tree(model, opts)
-    if isinstance(model, LogisticModel):
-        return _convert_logistic(model, opts)
-    if isinstance(model, MLPModel):
-        return _convert_mlp(model, opts)
-    if isinstance(model, SVMModel):
-        return _convert_svm(model, opts)
-    raise TypeError(f"no converter for {type(model).__name__}")
+    return _compile(model, opts.to_target())
+
+
+def __getattr__(name):
+    # EmbeddedModel aliases CompiledArtifact and NUMBER_FORMATS lives in
+    # repro.compile.target; both resolved lazily to keep this module
+    # importable before repro.compile finishes initializing.
+    if name == "EmbeddedModel":
+        from repro.compile import CompiledArtifact
+        return CompiledArtifact
+    if name == "NUMBER_FORMATS":
+        return _number_formats()
+    raise AttributeError(f"module 'repro.core.convert' has no attribute '{name}'")

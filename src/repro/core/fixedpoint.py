@@ -143,6 +143,15 @@ class FxpStats:
         )
 
 
+# Pytree registration lets jitted predict programs return FxpStats directly
+# (the compile pipeline jits artifacts for the xla/pallas backends).
+jax.tree_util.register_pytree_node(
+    FxpStats,
+    lambda s: ((s.overflow, s.underflow, s.total), None),
+    lambda _, children: FxpStats(*children),
+)
+
+
 def _saturate(x_wide: jax.Array, fmt: FxpFormat) -> jax.Array:
     return jnp.clip(x_wide, fmt.qmin, fmt.qmax).astype(fmt.dtype)
 

@@ -1,23 +1,31 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
 
-Batched greedy decoding with the paper's conversion options applied to the
-artifact: weight-only int8 (per-channel or faithful global Qn.m), int8 KV
-cache, PWL gate sigmoids.  Reduced configs on CPU; `--full` for pod scale.
+Batched greedy decoding with the paper's conversion options applied through
+the unified ``repro.compile`` artifact API: weight-only int8 (per-channel or
+faithful global Qn.m), int8 KV cache, and PWL gate sigmoids are all fields
+of one :class:`~repro.compile.Target` — the gate sigmoid is threaded through
+``ArchConfig.gate_sigmoid`` (no module-global mutation).  Reduced configs on
+CPU; `--full` for pod scale.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.compile import LMModel, Target, compile as compile_model
 from repro.configs import ARCH_IDS, get_config
-from repro.core.quantize import QuantSpec, quantize_lm_params, quantized_param_bytes
 from repro.lm import model as M
+
+# CLI flag -> (Target.number_format, Target.weight_scale)
+_WEIGHT_MODES = {
+    "bf16": ("flt", "qnm"),
+    "int8": ("fxp8", "per_channel"),
+    "qnm": ("fxp8", "qnm"),
+}
 
 
 def main(argv=None):
@@ -25,7 +33,7 @@ def main(argv=None):
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--weights", choices=["bf16", "int8", "qnm"], default="bf16")
+    ap.add_argument("--weights", choices=sorted(_WEIGHT_MODES), default="bf16")
     ap.add_argument("--kv", choices=["bf16", "int8"], default="bf16")
     ap.add_argument("--gate-sigmoid", choices=["exact", "rational", "pwl2", "pwl4"],
                     default="exact")
@@ -37,31 +45,31 @@ def main(argv=None):
         cfg = cfg.reduced()
     if cfg.encoder_only:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
-    if args.kv == "int8":
-        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
-    M.GATE_SIGMOID = args.gate_sigmoid  # paper C3 at serve time
+
+    number_format, weight_scale = _WEIGHT_MODES[args.weights]
+    target = Target(
+        number_format=number_format,
+        weight_scale=weight_scale,
+        kv_cache="int8" if args.kv == "int8" else "native",
+        sigmoid=args.gate_sigmoid,
+    )
 
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    art = compile_model(LMModel(cfg, params), target)
     if args.weights != "bf16":
-        mode = "per_channel" if args.weights == "int8" else "qnm"
+        from repro.core.quantize import quantized_param_bytes
         tot, _ = quantized_param_bytes(params)
-        params = quantize_lm_params(params, QuantSpec(mode=mode, min_size=4096))
-        qtot, _ = quantized_param_bytes(params)
-        print(f"artifact: {tot / 1e6:.1f}MB -> {qtot / 1e6:.1f}MB ({mode})")
+        print(f"artifact: {tot / 1e6:.1f}MB -> "
+              f"{art.memory_report()['flash'] / 1e6:.1f}MB ({args.weights})")
+    # Serving is long-lived: drop the float tree, keep only the lowered one.
+    del params
+    art.discard_params()
 
-    max_len = args.tokens + 4
-    cache = M.init_cache(cfg, args.batch, max_len)
-    tok = jnp.asarray(np.random.RandomState(0).randint(
-        1, cfg.vocab_size, (args.batch,)), jnp.int32)
-    step = jax.jit(lambda p, c, b: M.serve_step(p, c, b, cfg))
-    out = [tok]
+    tok = np.random.RandomState(0).randint(
+        1, cfg.vocab_size, (args.batch,)).astype(np.int32)
     t0 = time.perf_counter()
-    for _ in range(args.tokens):
-        logits, cache = step(params, cache, {"token": tok})
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
+    seqs = art.extras["generate"](tok, args.tokens)
     dt = (time.perf_counter() - t0) / args.tokens * 1e3
-    seqs = np.asarray(jnp.stack(out, 1))
     print(f"{args.tokens} tokens x batch {args.batch}: {dt:.1f} ms/token")
     print("sample:", seqs[0, :16])
 

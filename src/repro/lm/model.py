@@ -42,11 +42,12 @@ from .layers import (apply_linear, apply_mlp, apply_norm, init_embed,
                      init_linear, make_norm_params, mlp_params)
 
 __all__ = ["init_params", "param_specs", "forward", "loss_fn", "init_cache",
-           "cache_specs", "serve_step", "input_specs", "abstract_params",
-           "GATE_SIGMOID"]
+           "cache_specs", "serve_step", "input_specs", "abstract_params"]
 
-# Global inference-time sigmoid selection (paper C3); configs default exact.
-GATE_SIGMOID = "exact"
+# The serve-time gate sigmoid (paper C3) is threaded through
+# ``ArchConfig.gate_sigmoid`` — the old mutable module global is
+# gone; use ``dataclasses.replace(cfg, gate_sigmoid=...)`` or compile via
+# ``repro.compile`` with ``Target(sigmoid=...)``.
 
 
 def _dtype(cfg: ArchConfig):
@@ -240,7 +241,7 @@ def _block_attn(cfg: ArchConfig, p: Dict, x: jax.Array,
 def _dense_block(cfg: ArchConfig, p: Dict, x: jax.Array) -> jax.Array:
     x = x + _block_attn(cfg, p, apply_norm(cfg.norm, p["ln1"], x))
     x = x + apply_mlp(p["mlp"], apply_norm(cfg.norm, p["ln2"], x),
-                      cfg.mlp_type, cfg.activation, GATE_SIGMOID)
+                      cfg.mlp_type, cfg.activation, cfg.gate_sigmoid)
     return x
 
 
@@ -257,14 +258,14 @@ def _moe_ffn(cfg: ArchConfig, p: Dict, x: jax.Array, rules=None) -> jax.Array:
         def body(_, xc):
             return None, moe_mod.apply_moe(xc_p, xc, cfg.moe, cfg.mlp_type,
                                            cfg.activation,
-                                           gate_sigmoid=GATE_SIGMOID,
+                                           gate_sigmoid=cfg.gate_sigmoid,
                                            rules=rules)
 
         xc_p = p
         _, ys = jax.lax.scan(body, None, xs)
         return ys.transpose(1, 0, 2, 3).reshape(b, s, d)
     return moe_mod.apply_moe(p, x, cfg.moe, cfg.mlp_type, cfg.activation,
-                             gate_sigmoid=GATE_SIGMOID, rules=rules)
+                             gate_sigmoid=cfg.gate_sigmoid, rules=rules)
 
 
 def _moe_block(cfg: ArchConfig, p: Dict, x: jax.Array, rules=None) -> jax.Array:
@@ -325,13 +326,13 @@ def forward(params: Dict, batch: Dict, cfg: ArchConfig,
 
     if cfg.block_pattern == "rwkv":
         def rwkv_block(p, h):
-            return rwkv_mod.rwkv6_forward(p, h, cfg.n_heads, GATE_SIGMOID)
+            return rwkv_mod.rwkv6_forward(p, h, cfg.n_heads, cfg.gate_sigmoid)
         x = _scan_layers(rwkv_block, params["layers"], x, cfg.remat)
     elif cfg.block_pattern == "mamba_hybrid":
         def mamba_block(p, h):
             return h + mamba_mod.mamba2_forward(
                 p["mamba"], apply_norm(cfg.norm, p["ln"], h), cfg.d_model,
-                cfg.ssm, GATE_SIGMOID)
+                cfg.ssm, cfg.gate_sigmoid)
 
         def group_block(p, h):
             h = _scan_layers(mamba_block, p, h, cfg.remat)
@@ -460,7 +461,7 @@ def _decode_dense_block(cfg, p, x, layer_cache, pos):
                                   layer_cache, pos)
     x = x + att
     x = x + apply_mlp(p["mlp"], apply_norm(cfg.norm, p["ln2"], x),
-                      cfg.mlp_type, cfg.activation, GATE_SIGMOID)
+                      cfg.mlp_type, cfg.activation, cfg.gate_sigmoid)
     return x, new_cache
 
 
@@ -470,7 +471,7 @@ def _decode_moe_block(cfg, p, x, layer_cache, pos, rules=None):
     x = x + att
     x = x + moe_mod.apply_moe(p["moe"], apply_norm(cfg.norm, p["ln2"], x),
                               cfg.moe, cfg.mlp_type, cfg.activation,
-                              gate_sigmoid=GATE_SIGMOID, rules=rules)
+                              gate_sigmoid=cfg.gate_sigmoid, rules=rules)
     return x, new_cache
 
 
@@ -485,14 +486,14 @@ def serve_step(params: Dict, cache: Dict, batch: Dict, cfg: ArchConfig,
     if cfg.block_pattern == "rwkv":
         x, new_cache["layers"] = _scan_decode(
             lambda p, h, c: rwkv_mod.rwkv6_decode(p, h, c, cfg.n_heads,
-                                                  GATE_SIGMOID),
+                                                  cfg.gate_sigmoid),
             x, params["layers"], cache["layers"])
     elif cfg.block_pattern == "mamba_hybrid":
         def mamba_body(p, h, c):
             out, nc = mamba_mod.mamba2_decode(p["mamba"],
                                               apply_norm(cfg.norm, p["ln"], h),
                                               c, cfg.d_model, cfg.ssm,
-                                              GATE_SIGMOID)
+                                              cfg.gate_sigmoid)
             return h + out, nc
 
         def group_body(gp, h, gc_ac):
@@ -505,7 +506,7 @@ def serve_step(params: Dict, cache: Dict, batch: Dict, cfg: ArchConfig,
             h = h + att
             h = h + apply_mlp(params["shared_attn"]["mlp"],
                               apply_norm(cfg.norm, params["shared_attn"]["ln2"], h),
-                              cfg.mlp_type, cfg.activation, GATE_SIGMOID)
+                              cfg.mlp_type, cfg.activation, cfg.gate_sigmoid)
             return h, (new_gc, new_ac)
 
         x, (new_cache["groups"], new_cache["shared_attn"]) = _scan_decode(

@@ -22,6 +22,8 @@ __all__ = ["DecisionTreeModel", "train_decision_tree"]
 class DecisionTreeModel:
     tree: TreeArrays
 
+    compile_kind = "tree"  # lowering registry key (repro.compile)
+
     def predict(self, x: np.ndarray) -> np.ndarray:
         """Reference (numpy) prediction — used as the desktop oracle."""
         t = self.tree

@@ -18,6 +18,8 @@ class LogisticModel:
     coef: np.ndarray  # (F, C)
     intercept: np.ndarray  # (C,)
 
+    compile_kind = "logistic"  # lowering registry key (repro.compile)
+
     def logits(self, x: jax.Array) -> jax.Array:
         return x @ jnp.asarray(self.coef) + jnp.asarray(self.intercept)
 

@@ -30,6 +30,8 @@ class MLPModel:
     biases: List[np.ndarray]  # per layer (out,)
     hidden_activation: str = "sigmoid"
 
+    compile_kind = "mlp"  # lowering registry key (repro.compile)
+
     @property
     def layer_sizes(self) -> Tuple[int, ...]:
         return tuple([self.weights[0].shape[0]] + [w.shape[1] for w in self.weights])

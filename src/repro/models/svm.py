@@ -43,6 +43,10 @@ class SVMModel:
     degree: int = 2
     dtype: str = "float64"  # training precision of the artifact
 
+    @property
+    def compile_kind(self) -> str:  # lowering registry key (repro.compile)
+        return f"svm-{self.kernel}"
+
     def decision(self, x: jax.Array) -> jax.Array:
         dt = jnp.float64 if self.dtype == "float64" else jnp.float32
         x = x.astype(dt)

@@ -1,6 +1,7 @@
 """Checkpointing: atomic, compressed, resumable (no orbax in this env).
 
-Format: a zstd-compressed msgpack of a flattened pytree — each leaf stored as
+Format: a compressed msgpack (zstd when available, zlib fallback — streams are
+self-identifying) of a flattened pytree — each leaf stored as
 ``{dtype, shape, data}`` raw bytes, non-array leaves as msgpack natives.  The
 tree structure is recorded as ``jax.tree.structure`` repr plus a path->leaf
 map, so restore validates structure and shapes before touching the model.
@@ -25,24 +26,68 @@ import os
 import re
 import shutil
 import time
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
 
-__all__ = ["save_pytree", "restore_pytree", "CheckpointManager"]
+try:  # zstd preferred; zlib is the always-available fallback
+    import zstandard
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
 
-_LEAF_KEY = "__leaf__"
+__all__ = ["save_pytree", "restore_pytree", "CheckpointManager",
+           "compress_bytes", "decompress_bytes", "encode_leaf", "decode_leaf",
+           "atomic_write_bytes", "LEAF_KEY"]
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
-def _encode_leaf(x: Any) -> Any:
+def compress_bytes(raw: bytes) -> bytes:
+    """zstd when available, else zlib.  Streams are self-identifying (zstd
+    frame magic vs zlib header), so either reader handles either file."""
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def decompress_bytes(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the 'zstandard' package "
+                "is not installed; install it or re-save with zlib")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
+
+# Sentinel key marking an encoded leaf dict; shared with the compiled-
+# artifact archive codec (repro.compile.artifact).
+LEAF_KEY = _LEAF_KEY = "__leaf__"
+
+
+def atomic_write_bytes(path: str, blob: bytes) -> None:
+    """Write-to-tmp + fsync + rename: a crash never corrupts ``path``."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def encode_leaf(x: Any) -> Any:
     if isinstance(x, (jax.Array, np.ndarray, np.generic)):
         arr = np.asarray(x)
+        # ml_dtypes types (bfloat16, fp8) stringify to '<V2'/void via
+        # .str, which would silently corrupt on restore — store the dtype
+        # *name* for those and resolve it back through ml_dtypes.
+        dtype_s = arr.dtype.name if arr.dtype.kind == "V" else arr.dtype.str
         return {
             _LEAF_KEY: "ndarray",
-            "dtype": arr.dtype.str,
+            "dtype": dtype_s,
             "shape": list(arr.shape),
             "data": arr.tobytes(),
         }
@@ -51,10 +96,26 @@ def _encode_leaf(x: Any) -> Any:
     raise TypeError(f"unsupported checkpoint leaf type {type(x)}")
 
 
-def _decode_leaf(d: Dict) -> Any:
+def _resolve_dtype(s: str) -> np.dtype:
+    if s.lstrip("<>|=").startswith("V"):
+        # A raw void spec ('<V2') comes from the old codec mangling an
+        # ml_dtypes array; the data is unrecoverable — fail loudly.  (Named
+        # ml_dtypes dtypes like 'bfloat16' also have kind 'V' but carry the
+        # name, so they resolve fine below.)
+        raise ValueError(
+            f"checkpoint leaf has void dtype '{s}' — written by a codec "
+            "version that mangled ml_dtypes arrays; re-save the source")
+    try:
+        return np.dtype(s)
+    except TypeError:
+        import ml_dtypes  # jax dependency; provides bfloat16/fp8 scalars
+        return np.dtype(getattr(ml_dtypes, s))
+
+
+def decode_leaf(d: Dict) -> Any:
     kind = d[_LEAF_KEY]
     if kind == "ndarray":
-        arr = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+        arr = np.frombuffer(d["data"], dtype=_resolve_dtype(d["dtype"]))
         return arr.reshape(d["shape"]).copy()
     if kind == "scalar":
         return d["value"]
@@ -66,29 +127,22 @@ def save_pytree(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
     leaves, treedef = jax.tree.flatten(tree)
     payload = {
         "treedef": str(treedef),
-        "leaves": [_encode_leaf(l) for l in leaves],
+        "leaves": [encode_leaf(l) for l in leaves],
         "metadata": metadata or {},
         "version": 1,
         "saved_at": time.time(),
     }
     raw = msgpack.packb(payload, use_bin_type=True)
-    compressed = zstandard.ZstdCompressor(level=3).compress(raw)
-    tmp = f"{path}.tmp-{os.getpid()}"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(compressed)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+    atomic_write_bytes(path, compress_bytes(raw))
 
 
 def restore_pytree(path: str, like: Any = None) -> Tuple[Any, Dict]:
     """Restore a pytree.  If ``like`` is given, validate structure and shapes
     and return leaves arranged in ``like``'s treedef (safe resume)."""
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = decompress_bytes(f.read())
     payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
-    leaves = [_decode_leaf(l) for l in payload["leaves"]]
+    leaves = [decode_leaf(l) for l in payload["leaves"]]
     if like is not None:
         like_leaves, like_def = jax.tree.flatten(like)
         if len(like_leaves) != len(leaves):

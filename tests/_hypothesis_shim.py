@@ -1,0 +1,95 @@
+"""Hypothesis import guard: real hypothesis when installed, otherwise a
+minimal seeded-examples fallback so the suite runs on a bare environment.
+
+The fallback implements just the strategy surface these tests use
+(``integers``, ``floats``, ``lists``, ``tuples``, ``sampled_from``) and a
+``@given``/``@settings`` pair that draws ``max_examples`` deterministic
+examples per test (seeded from the test name) — property *search* is lost,
+but every property still gets exercised over a reproducible random sweep.
+
+Usage in tests (drop-in for the hypothesis import):
+
+    from _hypothesis_shim import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False,
+                   width=64):
+            del allow_nan, allow_infinity
+
+            def draw(rng):
+                v = rng.uniform(min_value, max_value)
+                return float(np.float32(v)) if width == 32 else float(v)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size + 1))])
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(lambda rng: tuple(e.draw(rng) for e in elements))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randint(len(seq))])
+
+    st = _FallbackStrategies()
+
+    def settings(max_examples=20, deadline=None, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                # @settings may sit above @given (attr lands on wrapper) or
+                # below it (attr lands on fn) — honor both orders.
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 20))
+                seed = zlib.crc32(fn.__qualname__.encode()) & 0x7FFFFFFF
+                rng = np.random.RandomState(seed)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            # Hide the strategy-driven params from pytest's fixture resolution.
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items() if name not in strategies])
+            return wrapper
+
+        return deco

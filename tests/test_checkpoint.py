@@ -26,6 +26,20 @@ def test_save_restore_roundtrip(tmp_path):
     assert got["opt"]["step"] == 0
 
 
+def test_save_restore_bfloat16_leaf(tmp_path):
+    """ml_dtypes arrays (bf16 LM params) must round-trip bit-exactly — the
+    '.str' codec used to mangle them into void dtype."""
+    import jax.numpy as jnp
+
+    t = {"w": jnp.asarray(np.random.RandomState(0).randn(8, 4), jnp.bfloat16)}
+    p = os.path.join(tmp_path, "bf16.ckpt")
+    save_pytree(p, t)
+    got, _ = restore_pytree(p, like=t)
+    assert got["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                  np.asarray(t["w"], np.float32))
+
+
 def test_restore_validates_shapes(tmp_path):
     p = os.path.join(tmp_path, "x.ckpt")
     save_pytree(p, {"w": np.zeros((2, 2))})

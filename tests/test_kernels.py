@@ -6,7 +6,7 @@ Shape/dtype sweeps as required: parametrized grids + hypothesis randoms.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.fixedpoint import FXP8, FXP16, FXP32
 from repro.kernels import ops

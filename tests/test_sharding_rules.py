@@ -104,7 +104,10 @@ def test_analytic_flops_cross_check_unscanned():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     batch = {"tokens": jnp.ones((B, S), jnp.int32)}
     compiled = jax.jit(lambda p, b: M.forward(p, b, cfg)).lower(params, batch).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jaxlibs return [dict], newer a dict
+        ca = ca[0]
+    hlo_flops = ca["flops"]
     an = analytic_cost(cfg, shape, chips=1, tp=1, dp_in_pod=1, microbatches=1)
     ratio = an.detail["flops_fwd"] / hlo_flops
     assert 0.6 < ratio < 1.4, f"analytic/hlo = {ratio}"

@@ -1,0 +1,193 @@
+"""Serving throughput: micro-batching scheduler vs sequential submission.
+
+Measures, on synthetic blobs data (self-contained — no dataset downloads):
+
+* **classifications/s** for the tree and mlp lowerings under four serving
+  regimes: an in-process batch-1 ``art.predict`` loop (no serving layer at
+  all — the raw dispatch floor), *sequential batch-1 submission* to the
+  service (closed loop: submit one request, wait for its result, repeat),
+  *scheduler micro-batching* (open-loop single-row submissions coalesced
+  into ``max_batch``-row bucket-padded micro-batches), and one full-batch
+  predict call (the amortization upper bound);
+* **tokens/s** for the lm lowering's greedy decode through a service
+  endpoint, per weight mode.
+
+Acceptance gate (checked by ``--smoke`` and CI): scheduler micro-batching
+with ``max_batch=64`` must deliver >= 2x the classifications/s of
+sequential batch-1 submission on the tree lowering.
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
+  PYTHONPATH=src python benchmarks/serve_throughput.py --out results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.compile import Target, compile
+from repro.models import train_decision_tree, train_mlp
+from repro.serve import BatchingPolicy, InferenceService
+
+MAX_BATCH = 64
+
+
+def _make_blobs(n: int, f: int = 16, c: int = 4, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    means = rng.randn(c, f) * 4.0
+    y = rng.randint(0, c, n).astype(np.int32)
+    x = (means[y] + rng.randn(n, f)).astype(np.float32)
+    return x, y, c
+
+
+def _time_direct(art, rows: np.ndarray) -> float:
+    """Classifications/s for a bare in-process batch-1 predict loop."""
+    art.predict(rows[:1])  # warm the batch-1 trace
+    t0 = time.perf_counter()
+    for i in range(rows.shape[0]):
+        art.predict(rows[i:i + 1])
+    return rows.shape[0] / (time.perf_counter() - t0)
+
+
+def _time_service(art, rows: np.ndarray, policy: BatchingPolicy) -> dict:
+    """Sequential (closed-loop) and micro-batched (open-loop) submission
+    rates through one service endpoint, plus its stats snapshot."""
+    svc = InferenceService()
+    svc.register("seq", artifact=art, policy=policy)
+    svc.register("sched", artifact=art, policy=policy)
+    try:
+        # Warm every bucket on both endpoints outside the timed windows
+        # (the jit trace cache is shared, so the second warmup is cheap).
+        svc.predict("seq", rows[:1])
+        svc.predict("sched", rows[:1])
+        t0 = time.perf_counter()
+        for i in range(rows.shape[0]):
+            svc.predict("seq", rows[i])  # one in-flight request at a time
+        seq = rows.shape[0] / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        futs = [svc.submit("sched", rows[i]) for i in range(rows.shape[0])]
+        for f in futs:
+            f.result(timeout=600)
+        sched = rows.shape[0] / (time.perf_counter() - t0)
+        snap = svc.stats()["sched"]
+        return {"sequential_cps": seq, "scheduler_cps": sched,
+                "p50_ms": snap["p50_ms"], "p95_ms": snap["p95_ms"],
+                "batch_fill": snap["batch_fill"],
+                "mean_batch_rows": snap["mean_batch_rows"]}
+    finally:
+        svc.close()
+
+
+def _time_full_batch(art, rows: np.ndarray) -> float:
+    art.predict(rows)  # warm
+    t0 = time.perf_counter()
+    art.predict(rows)
+    return rows.shape[0] / (time.perf_counter() - t0)
+
+
+def bench_classifiers(n_requests: int, fmt: str = "fxp16") -> list:
+    x, y, c = _make_blobs(max(2048, n_requests))
+    xtr, ytr = x[:1500], y[:1500]
+    rows = x[-n_requests:]
+    models = {
+        "tree": train_decision_tree(xtr, ytr, c, max_depth=8),
+        "mlp": train_mlp(xtr, ytr, c, hidden=(32,), epochs=8),
+    }
+    out = []
+    for kind, model in models.items():
+        art = compile(model, Target(number_format=fmt, backend="xla"))
+        direct = _time_direct(art, rows)
+        svc = _time_service(
+            art, rows, BatchingPolicy(max_batch=MAX_BATCH, max_wait_ms=2.0))
+        full = _time_full_batch(art, rows)
+        row = {
+            "kind": kind, "format": fmt, "n_requests": n_requests,
+            "max_batch": MAX_BATCH,
+            "direct_batch1_cps": direct,
+            "sequential_cps": svc["sequential_cps"],
+            "scheduler_cps": svc["scheduler_cps"],
+            "full_batch_cps": full,
+            "scheduler_speedup": svc["scheduler_cps"] / svc["sequential_cps"],
+            "p50_ms": svc["p50_ms"], "p95_ms": svc["p95_ms"],
+            "batch_fill": svc["batch_fill"],
+            "mean_batch_rows": svc["mean_batch_rows"],
+        }
+        out.append(row)
+        print(f"serve/{kind}/{fmt}: sequential {svc['sequential_cps']:,.0f} "
+              f"cls/s | scheduler {svc['scheduler_cps']:,.0f} cls/s "
+              f"({row['scheduler_speedup']:.1f}x, fill {svc['batch_fill']:.2f}, "
+              f"mean batch {svc['mean_batch_rows']:.1f}) | direct batch-1 "
+              f"{direct:,.0f} | full-batch {full:,.0f} cls/s")
+    return out
+
+
+def bench_lm(n_tokens: int, batch: int = 4) -> list:
+    import jax
+
+    from repro.compile import LMModel
+    from repro.configs import get_config
+    from repro.lm import model as M
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                              d_head=32, d_ff=128, vocab_size=256)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tok = np.random.RandomState(0).randint(
+        1, cfg.vocab_size, (batch,)).astype(np.int32)
+    out = []
+    for weights, target in [
+        ("bf16", Target(number_format="flt")),
+        ("qnm", Target(number_format="fxp8", weight_scale="qnm")),
+    ]:
+        svc = InferenceService()
+        svc.register("lm", LMModel(cfg, params), target)
+        try:
+            svc.generate("lm", tok, 2)  # warm the decode step
+            t0 = time.perf_counter()
+            svc.generate("lm", tok, n_tokens)
+            tps = batch * n_tokens / (time.perf_counter() - t0)
+        finally:
+            svc.close()
+        out.append({"kind": "lm", "weights": weights, "batch": batch,
+                    "n_tokens": n_tokens, "tokens_per_s": tps})
+        print(f"serve/lm/{weights}: {tps:,.0f} tokens/s "
+              f"(batch {batch} x {n_tokens} tokens)")
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    n_requests = 512 if smoke else 4096
+    rows = bench_classifiers(n_requests)
+    rows += bench_lm(n_tokens=8 if smoke else 64)
+    tree = next(r for r in rows if r["kind"] == "tree")
+    return {"rows": rows, "smoke": smoke,
+            "tree_scheduler_speedup": tree["scheduler_speedup"]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + enforce the 2x acceptance gate")
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    args = ap.parse_args(argv)
+    result = run(smoke=args.smoke)
+    text = json.dumps(result, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    # The gate lives in the CLI, not in run(): benchmarks/run.py drives
+    # run() inside a keep-going harness that a hard exit would abort.
+    if args.smoke and result["tree_scheduler_speedup"] < 2.0:
+        raise SystemExit(
+            f"ACCEPTANCE FAIL: scheduler speedup "
+            f"{result['tree_scheduler_speedup']:.2f}x < 2x over sequential "
+            f"batch-1 submission on the tree lowering")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ through a decorator-based lowering registry (``tree``, ``logistic``, ``mlp``,
 
 from .api import compile, compile_from_params
 from .artifact import CompiledArtifact, load
+from .fingerprint import fingerprint_params
 from .registry import (Lowered, Lowering, get_lowering, lowering_kinds,
                        model_kind, register_lowering)
 from .target import BACKENDS, NUMBER_FORMATS, Target
@@ -33,6 +34,7 @@ __all__ = [
     "Target",
     "NUMBER_FORMATS",
     "BACKENDS",
+    "fingerprint_params",
     "Lowering",
     "Lowered",
     "register_lowering",

@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.fixedpoint import FxpStats
 
 from .artifact import CompiledArtifact
+from .fingerprint import fingerprint_params
 from .registry import Lowered, get_lowering, model_kind
 from .target import Target
 
@@ -92,7 +93,8 @@ def compile_from_params(kind: str, params: Any, target: Target) -> CompiledArtif
     return CompiledArtifact(kind=kind, target=target, params=params,
                             _predict=predict, flash_bytes=program.flash_bytes,
                             sram_bytes=program.sram_bytes,
-                            extras=program.extras)
+                            extras=program.extras,
+                            fingerprint=fingerprint_params(kind, params))
 
 
 def compile(model: Any, target: Optional[Target] = None, **kwargs) -> CompiledArtifact:

@@ -67,6 +67,25 @@ class CompiledArtifact:
     flash_bytes: int = 0  # read-only parameter memory (paper: flash / HBM)
     sram_bytes: int = 0  # activation scratch (paper: SRAM / VMEM working set)
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict, repr=False)
+    # sha256 of the extracted parameter tree (survives discard_params);
+    # (fingerprint, target) keys the serving-layer artifact cache.
+    fingerprint: str = ""
+
+    @property
+    def cache_key(self) -> Tuple[str, Target]:
+        return (self.fingerprint, self.target)
+
+    @property
+    def max_supported_batch(self) -> Optional[int]:
+        """Largest batch one predict call accepts (None = unbounded).
+
+        The micro-batching scheduler clamps its bucket ladder to this, so a
+        ``batch_policy='fixed'`` artifact is never fed a batch it would
+        reject.
+        """
+        if self.target.batch_policy == "fixed":
+            return self.target.batch_size
+        return None
 
     # -- inference -----------------------------------------------------------
     def predict(self, x: np.ndarray) -> np.ndarray:

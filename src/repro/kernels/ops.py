@@ -9,12 +9,8 @@ also how the dry-run lowers (Mosaic kernels only lower on real TPU).
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.fixedpoint import FxpFormat
 from repro.core.trees import TreeArrays
@@ -71,14 +67,6 @@ def pwl_activation(x: jax.Array, variant: str = "pwl4",
     return out.reshape(-1)[:n0].reshape(orig_shape)
 
 
-@functools.lru_cache(maxsize=64)
-def _packed_tree_cache(tree_id: int):
-    raise KeyError  # populated via _get_packed below
-
-
-_PACKED: dict = {}
-
-
 def tree_predict(tree: TreeArrays, x: jax.Array, impl: str = "pallas",
                  block_batch: int = 256) -> jax.Array:
     """Oblivious-tree inference.  x: (B, F) float -> (B,) int32."""
@@ -89,12 +77,12 @@ def tree_predict(tree: TreeArrays, x: jax.Array, impl: str = "pallas",
         packed = tuple(jnp.asarray(t) for t in pack_tree(tree))
         object.__setattr__(tree, "_packed_kernel", packed)
     sel, thr, ppos, pneg, plen, classes = packed
-    xp, b0 = _pad_to(x, 0, block_batch)
-    out = tree_ensemble_pallas(xp.astype(jnp.float32), sel, thr, ppos, pneg,
-                               plen, classes,
-                               block_batch=min(block_batch, xp.shape[0]),
-                               interpret=not _on_tpu())
-    return out[:b0]
+    # Ragged B is padded/sliced inside the kernel wrapper; shrinking the
+    # block to the batch keeps tiny calls on a single grid step.
+    return tree_ensemble_pallas(jnp.asarray(x, jnp.float32), sel, thr, ppos,
+                                pneg, plen, classes,
+                                block_batch=min(block_batch, max(1, x.shape[0])),
+                                interpret=not _on_tpu())
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,

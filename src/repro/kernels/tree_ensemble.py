@@ -78,12 +78,20 @@ def tree_ensemble_pallas(x: jax.Array, sel: jax.Array, thr: jax.Array,
                          classes: jax.Array, block_batch: int = 256,
                          interpret: bool = False) -> jax.Array:
     """x: (B, F) float; packed tree operands from :func:`pack_tree`.
-    Returns (B,) int32 class predictions.  B % block_batch == 0."""
-    b, f = x.shape
+    Returns (B,) int32 class predictions.
+
+    Ragged batches are handled here: B is padded up to the next multiple of
+    ``block_batch`` (zero rows — rows are independent, so padding never
+    perturbs real predictions) and the output is sliced back to B.
+    """
+    b0, f = x.shape
     n = sel.shape[1]
     l = ppos.shape[1]
-    assert b % block_batch == 0, (b, block_batch)
-    return pl.pallas_call(
+    rem = (-b0) % block_batch
+    if rem:
+        x = jnp.pad(x, ((0, rem), (0, 0)))
+    b = b0 + rem
+    out = pl.pallas_call(
         _kernel,
         grid=(b // block_batch,),
         in_specs=[
@@ -99,3 +107,4 @@ def tree_ensemble_pallas(x: jax.Array, sel: jax.Array, thr: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
         interpret=interpret,
     )(x, sel, thr, ppos, pneg, plen, classes)
+    return out[:b0]

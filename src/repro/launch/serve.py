@@ -1,11 +1,15 @@
 """Serving launcher: `python -m repro.launch.serve --arch <id> [...]`.
 
-Batched greedy decoding with the paper's conversion options applied through
-the unified ``repro.compile`` artifact API: weight-only int8 (per-channel or
-faithful global Qn.m), int8 KV cache, and PWL gate sigmoids are all fields
-of one :class:`~repro.compile.Target` — the gate sigmoid is threaded through
-``ArchConfig.gate_sigmoid`` (no module-global mutation).  Reduced configs on
-CPU; `--full` for pod scale.
+A thin CLI over :class:`repro.serve.InferenceService`: the arch is compiled
+into a :class:`~repro.compile.CompiledArtifact` through the service's
+artifact cache (dedupes recompiles by ``(fingerprint, Target)``), hosted on
+a named endpoint, and driven through the router — so the CLI exercises the
+exact code path a long-lived server would, including per-endpoint stats.
+
+The conversion options remain fields of one :class:`~repro.compile.Target`:
+weight-only int8 (per-channel or faithful global Qn.m), int8 KV cache, and
+PWL gate sigmoids (threaded through ``ArchConfig.gate_sigmoid``).  Reduced
+configs on CPU; `--full` for pod scale.
 """
 
 from __future__ import annotations
@@ -16,9 +20,10 @@ import time
 import jax
 import numpy as np
 
-from repro.compile import LMModel, Target, compile as compile_model
+from repro.compile import LMModel, Target
 from repro.configs import ARCH_IDS, get_config
 from repro.lm import model as M
+from repro.serve import InferenceService
 
 # CLI flag -> (Target.number_format, Target.weight_scale)
 _WEIGHT_MODES = {
@@ -38,6 +43,8 @@ def main(argv=None):
     ap.add_argument("--gate-sigmoid", choices=["exact", "rational", "pwl2", "pwl4"],
                     default="exact")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the endpoint's serving stats after the run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -55,23 +62,31 @@ def main(argv=None):
     )
 
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    art = compile_model(LMModel(cfg, params), target)
+    svc = InferenceService()
+    ep = svc.register(args.arch, LMModel(cfg, params), target)
+    art = ep.artifact
     if args.weights != "bf16":
         from repro.core.quantize import quantized_param_bytes
         tot, _ = quantized_param_bytes(params)
         print(f"artifact: {tot / 1e6:.1f}MB -> "
               f"{art.memory_report()['flash'] / 1e6:.1f}MB ({args.weights})")
-    # Serving is long-lived: drop the float tree, keep only the lowered one.
+    # Drop the CLI's own reference to the float tree; the artifact keeps its
+    # params because the service's cache owns it (a later cache hit for the
+    # same (fingerprint, Target) must return a saveable artifact).
     del params
-    art.discard_params()
 
     tok = np.random.RandomState(0).randint(
         1, cfg.vocab_size, (args.batch,)).astype(np.int32)
     t0 = time.perf_counter()
-    seqs = art.extras["generate"](tok, args.tokens)
+    seqs = svc.generate(args.arch, tok, args.tokens)
     dt = (time.perf_counter() - t0) / args.tokens * 1e3
     print(f"{args.tokens} tokens x batch {args.batch}: {dt:.1f} ms/token")
     print("sample:", seqs[0, :16])
+    if args.stats:
+        snap = svc.stats()[args.arch]
+        print(f"endpoint {args.arch}: {snap['rows']:.0f} tokens, "
+              f"p50 {snap['p50_ms']:.1f}ms, p95 {snap['p95_ms']:.1f}ms")
+    svc.close()
 
 
 if __name__ == "__main__":

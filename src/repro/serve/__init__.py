@@ -1,0 +1,32 @@
+"""repro.serve — production-shaped inference serving over compiled artifacts.
+
+Layers (bottom-up):
+
+* :mod:`repro.serve.batching` — :class:`BatchingPolicy` +
+  :class:`MicroBatcher`: an async request queue drained into dynamic
+  micro-batches (``max_batch`` rows / ``max_wait_ms`` delay), padded to
+  power-of-two buckets so the jit/pallas programs see a small closed set of
+  batch shapes, each bucket warmed up before the first real request.
+* :mod:`repro.serve.router` — :class:`ModelRouter`: several compiled
+  artifacts behind name-keyed :class:`Endpoint`\\ s with per-artifact stats
+  (QPS, p50/p95 latency, batch-fill ratio).
+* :mod:`repro.serve.cache` — :class:`ArtifactCache`: recompile dedupe keyed
+  by ``(model fingerprint, Target)``.
+* :mod:`repro.serve.service` — :class:`InferenceService`: the facade
+  ``launch/serve.py`` and the benchmarks drive.
+"""
+
+from .batching import BatchingPolicy, MicroBatcher
+from .cache import ArtifactCache
+from .router import Endpoint, EndpointStats, ModelRouter
+from .service import InferenceService
+
+__all__ = [
+    "BatchingPolicy",
+    "MicroBatcher",
+    "ArtifactCache",
+    "Endpoint",
+    "EndpointStats",
+    "ModelRouter",
+    "InferenceService",
+]

@@ -1,0 +1,261 @@
+"""Dynamic micro-batching: the scheduler between request queue and artifact.
+
+Requests (one or a few rows each) are enqueued from any thread; a single
+worker drains the queue into micro-batches bounded by ``max_batch`` rows and
+``max_wait_ms`` of queueing delay, pads each batch up to a power-of-two
+*bucket* so the jitted/pallas predict program only ever sees a small closed
+set of batch shapes (one trace per bucket, warmed up eagerly), runs the
+artifact once per micro-batch, and scatters the per-row results back to the
+callers' futures.
+
+Padding uses zero rows and is sliced off before results are returned —
+every lowering is row-independent, so padding can never perturb a real
+row's prediction (the batch-invariance property tests assert exactly this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["BatchingPolicy", "MicroBatcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingPolicy:
+    """Scheduler knobs for one endpoint.
+
+    * ``max_batch``   — row budget of one micro-batch (and the top bucket).
+    * ``max_wait_ms`` — how long the first request of a batch may wait for
+      company before the batch is dispatched anyway.
+    * ``eager_when_idle`` — dispatch a partial batch immediately when the
+      queue runs dry instead of idling out the full ``max_wait_ms``: under
+      load the queue stays non-empty and batches fill anyway, while a lone
+      sequential client is not taxed the wait on every request.  Disable to
+      always hold for ``max_wait_ms`` (maximum fill under slow open-loop
+      arrivals, at a latency cost).
+    * ``bucketing``   — ``pow2``: pad each micro-batch up to the next
+      power-of-two bucket (closed shape set, one jit trace per bucket);
+      ``exact``: no padding (every distinct batch size traces afresh).
+    * ``warmup``      — trace every bucket with zero rows before the first
+      micro-batch is served (triggered lazily by the first request, which
+      supplies the row shape and therefore absorbs the trace latency;
+      subsequent requests never hit an untraced bucket).
+    """
+
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    eager_when_idle: bool = True
+    bucketing: str = "pow2"
+    warmup: bool = True
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+        if self.bucketing not in ("pow2", "exact"):
+            raise ValueError("bucketing must be 'pow2' or 'exact'")
+
+    def buckets(self) -> Tuple[int, ...]:
+        """The closed set of batch shapes predict will be called with (in
+        exact mode there is no closed set; only the cap is warmed up)."""
+        if self.bucketing == "exact":
+            return (self.max_batch,)
+        out, b = [], 1
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        out.append(self.max_batch)
+        return tuple(out)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket holding ``n`` rows (``n`` itself in exact mode)."""
+        if self.bucketing == "exact":
+            return n
+        for b in self.buckets():
+            if b >= n:
+                return b
+        return self.max_batch
+
+    def clamped(self, max_supported: Optional[int]) -> "BatchingPolicy":
+        """Respect an artifact's fixed-batch ceiling (see
+        ``CompiledArtifact.max_supported_batch``)."""
+        if max_supported is None or self.max_batch <= max_supported:
+            return self
+        return dataclasses.replace(self, max_batch=max_supported)
+
+
+@dataclasses.dataclass
+class _Request:
+    x: np.ndarray  # (n, ...) rows
+    future: Future
+    t_enqueue: float
+
+
+# on_batch(n_requests, n_rows, bucket, per-request latencies in seconds)
+OnBatch = Callable[[int, int, int, Sequence[float]], None]
+
+
+class MicroBatcher:
+    """Single-worker dynamic micro-batching loop over one predict callable.
+
+    ``predict(x: (bucket, ...)) -> (bucket, ...) per-row outputs``; any
+    exception it raises is delivered to every future of that micro-batch
+    (the worker keeps serving subsequent batches).
+    """
+
+    def __init__(self, predict: Callable[[np.ndarray], np.ndarray],
+                 policy: Optional[BatchingPolicy] = None,
+                 on_batch: Optional[OnBatch] = None,
+                 name: str = "endpoint"):
+        self.predict = predict
+        self.policy = policy or BatchingPolicy()
+        self.name = name
+        self._on_batch = on_batch
+        self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
+        self._carry: Optional[_Request] = None  # didn't fit the last batch
+        self._warmed = False
+        self._closed = False
+        self._submit_lock = threading.Lock()  # orders submit() vs close()
+        self._worker = threading.Thread(
+            target=self._run, name=f"microbatch-{name}", daemon=True)
+        self._worker.start()
+
+    # -- client side ---------------------------------------------------------
+    def submit(self, x: np.ndarray) -> Future:
+        """Enqueue rows; the future resolves to the (n,) per-row outputs.
+
+        ``x`` is one row (1-D, resolves to a length-1 array) or an (n, ...)
+        row block with ``n <= max_batch``.
+        """
+        x = np.asarray(x)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.shape[0] > self.policy.max_batch:
+            raise ValueError(
+                f"request of {x.shape[0]} rows exceeds max_batch "
+                f"{self.policy.max_batch}; split it across submissions")
+        fut: Future = Future()
+        # The closed check and the enqueue must be atomic vs close(), or a
+        # racing submit could land a request in a dead queue after the final
+        # drain — a future that never resolves.
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError(f"MicroBatcher '{self.name}' is closed")
+            self._queue.put(_Request(x, fut, time.perf_counter()))
+        return fut
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the worker; ``drain`` serves queued requests first."""
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(None)  # sentinel; no submit can follow it
+        self._worker.join()
+        leftovers = []
+        if self._carry is not None:
+            leftovers.append(self._carry)
+            self._carry = None
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if req is not None:
+                leftovers.append(req)
+        for req in leftovers:
+            if drain:
+                self._serve([req])
+            else:
+                req.future.set_exception(
+                    RuntimeError(f"MicroBatcher '{self.name}' closed"))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- worker side ---------------------------------------------------------
+    def _collect(self) -> Optional[list]:
+        """Block for the first request, then gather until the batch is full
+        or the first request's ``max_wait_ms`` budget runs out.  Returns
+        None on shutdown sentinel."""
+        first = self._carry
+        self._carry = None
+        if first is None:
+            first = self._queue.get()
+            if first is None:
+                return None
+        batch, rows = [first], first.x.shape[0]
+        deadline = first.t_enqueue + self.policy.max_wait_ms / 1e3
+        while rows < self.policy.max_batch:
+            wait = deadline - time.perf_counter()
+            try:
+                if wait <= 0 or self.policy.eager_when_idle:
+                    req = self._queue.get_nowait()
+                else:
+                    req = self._queue.get(timeout=wait)
+            except queue.Empty:
+                if wait <= 0 or self.policy.eager_when_idle:
+                    break
+                continue
+            if req is None:  # shutdown: serve what we have, then exit
+                self._queue.put(None)
+                break
+            if rows + req.x.shape[0] > self.policy.max_batch:
+                self._carry = req  # head-of-line for the next batch
+                break
+            batch.append(req)
+            rows += req.x.shape[0]
+        return batch
+
+    def _warmup(self, example: np.ndarray) -> None:
+        """Trace every bucket once (zero rows shaped like the example)."""
+        for b in self.policy.buckets():
+            zeros = np.zeros((b,) + example.shape[1:], example.dtype)
+            try:
+                self.predict(zeros)
+            except Exception:
+                pass  # real traffic will surface the error with context
+        self._warmed = True
+
+    def _serve(self, batch: list) -> None:
+        rows = sum(r.x.shape[0] for r in batch)
+        bucket = self.policy.bucket_for(rows)
+        x = np.concatenate([r.x for r in batch], axis=0)
+        if bucket > rows:
+            pad = np.zeros((bucket - rows,) + x.shape[1:], x.dtype)
+            x = np.concatenate([x, pad], axis=0)
+        try:
+            y = np.asarray(self.predict(x))[:rows]
+        except Exception as e:
+            for r in batch:
+                r.future.set_exception(e)
+            return
+        done = time.perf_counter()
+        off = 0
+        for r in batch:
+            n = r.x.shape[0]
+            r.future.set_result(y[off:off + n])
+            off += n
+        if self._on_batch is not None:
+            self._on_batch(len(batch), rows, bucket,
+                           [done - r.t_enqueue for r in batch])
+
+    def _run(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            if self.policy.warmup and not self._warmed:
+                self._warmup(batch[0].x)
+            self._serve(batch)

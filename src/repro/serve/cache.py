@@ -1,0 +1,77 @@
+"""Artifact cache: dedupe recompiles by ``(model fingerprint, Target)``.
+
+Compiling is the expensive step (quantize + lower + jit warm paths); hosting
+the same model under several endpoints, or re-registering it after a config
+reload, should not pay it twice.  The cache keys on the sha256 fingerprint
+of the *extracted* parameter tree (see :mod:`repro.compile.fingerprint`)
+plus the frozen Target, so equal parameters hit regardless of which model
+object they came from.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Optional, Tuple
+
+from repro.compile import (CompiledArtifact, Target, compile_from_params,
+                           fingerprint_params, get_lowering, model_kind)
+
+__all__ = ["ArtifactCache"]
+
+
+class ArtifactCache:
+    """LRU cache of compiled artifacts keyed by ``(fingerprint, Target)``."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[Tuple[str, Target], CompiledArtifact]" = \
+            OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: Tuple[str, Target]) -> Optional[CompiledArtifact]:
+        with self._lock:
+            art = self._entries.get(key)
+            if art is not None:
+                self._entries.move_to_end(key)
+            return art
+
+    def put(self, artifact: CompiledArtifact) -> CompiledArtifact:
+        if not artifact.fingerprint:
+            raise ValueError("artifact has no fingerprint; compile it through "
+                             "repro.compile.compile")
+        with self._lock:
+            self._entries[artifact.cache_key] = artifact
+            self._entries.move_to_end(artifact.cache_key)
+            while self.capacity is not None and len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+        return artifact
+
+    def get_or_compile(self, model: Any, target: Target) -> CompiledArtifact:
+        """Return the cached artifact for (model params, target), compiling
+        on miss.  Extraction runs unconditionally (it is cheap and yields the
+        fingerprint); the quantize/lower/specialize stages are what a hit
+        skips."""
+        kind = model_kind(model)
+        params = get_lowering(kind).extract_params(model)
+        key = (fingerprint_params(kind, params), target)
+        with self._lock:
+            art = self._entries.get(key)
+            if art is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return art
+        art = compile_from_params(kind, params, target)
+        with self._lock:
+            self.misses += 1
+        return self.put(art)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._entries), "hits": self.hits,
+                    "misses": self.misses, "capacity": self.capacity}

@@ -1,0 +1,173 @@
+"""Multi-artifact router: name-keyed endpoints over compiled artifacts.
+
+Each registered :class:`~repro.compile.artifact.CompiledArtifact` gets an
+*endpoint*: its own micro-batching scheduler (classifier artifacts) and a
+rolling stats window — QPS, p50/p95 request latency, mean batch-fill ratio
+(rows per dispatched bucket).  LM artifacts (``kind == 'lm'``) are hosted
+without a batcher (decode already batches along the sequence dimension);
+their ``generate`` calls are routed and accounted through the same stats.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.compile.artifact import CompiledArtifact
+
+from .batching import BatchingPolicy, MicroBatcher
+
+__all__ = ["EndpointStats", "Endpoint", "ModelRouter"]
+
+_LATENCY_WINDOW = 4096  # most recent request latencies kept for percentiles
+
+
+class EndpointStats:
+    """Thread-safe serving statistics for one endpoint: lifetime counters
+    (requests/rows/batches, QPS averaged since registration) plus a rolling
+    window of recent request latencies for the percentiles."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.n_requests = 0
+        self.n_rows = 0
+        self.n_batches = 0
+        self._bucket_rows = 0  # sum of dispatched bucket sizes
+        self._latencies = deque(maxlen=_LATENCY_WINDOW)
+
+    def record_batch(self, n_requests, n_rows, bucket, latencies) -> None:
+        with self._lock:
+            self.n_requests += n_requests
+            self.n_rows += n_rows
+            self.n_batches += 1
+            self._bucket_rows += bucket
+            self._latencies.extend(latencies)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            elapsed = max(time.perf_counter() - self._t0, 1e-9)
+            lat = np.asarray(self._latencies, np.float64)
+            return {
+                "requests": self.n_requests,
+                "rows": self.n_rows,
+                "batches": self.n_batches,
+                "qps": self.n_requests / elapsed,
+                "rows_per_s": self.n_rows / elapsed,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+                "p95_ms": float(np.percentile(lat, 95) * 1e3) if lat.size else 0.0,
+                "batch_fill": (self.n_rows / self._bucket_rows
+                               if self._bucket_rows else 0.0),
+                "mean_batch_rows": (self.n_rows / self.n_batches
+                                    if self.n_batches else 0.0),
+            }
+
+
+class Endpoint:
+    """One hosted artifact: scheduler + stats behind a name."""
+
+    def __init__(self, name: str, artifact: CompiledArtifact,
+                 policy: Optional[BatchingPolicy] = None):
+        self.name = name
+        self.artifact = artifact
+        self.stats = EndpointStats()
+        # Never build buckets the artifact would reject (fixed batch policy).
+        self.policy = (policy or BatchingPolicy()).clamped(
+            artifact.max_supported_batch)
+        self.batcher: Optional[MicroBatcher] = None
+        if artifact.kind != "lm":
+            self.batcher = MicroBatcher(artifact.predict, self.policy,
+                                        on_batch=self.stats.record_batch,
+                                        name=name)
+
+    # -- classifier surface --------------------------------------------------
+    def submit(self, x: np.ndarray) -> Future:
+        if self.batcher is None:
+            raise TypeError(f"endpoint '{self.name}' hosts an LM artifact; "
+                            f"use generate()")
+        return self.batcher.submit(x)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Sync convenience: rows larger than one micro-batch are split
+        across submissions (pipelined through the scheduler) and re-joined."""
+        x = np.asarray(x)
+        if x.ndim >= 2 and x.shape[0] > self.policy.max_batch:
+            futs = [self.submit(x[i:i + self.policy.max_batch])
+                    for i in range(0, x.shape[0], self.policy.max_batch)]
+            return np.concatenate([f.result() for f in futs], axis=0)
+        return self.submit(x).result()
+
+    # -- lm surface ----------------------------------------------------------
+    def generate(self, tokens: np.ndarray, n_tokens: int, **kw) -> np.ndarray:
+        if "generate" not in self.artifact.extras:
+            raise TypeError(f"endpoint '{self.name}' ({self.artifact.kind}) "
+                            f"has no generate entry point")
+        t0 = time.perf_counter()
+        seqs = self.artifact.extras["generate"](tokens, n_tokens, **kw)
+        dt = time.perf_counter() - t0
+        n = int(np.asarray(tokens).shape[0])
+        self.stats.record_batch(1, n * n_tokens, n * n_tokens, [dt])
+        return seqs
+
+    def close(self) -> None:
+        if self.batcher is not None:
+            self.batcher.close()
+
+
+class ModelRouter:
+    """Hosts several compiled artifacts behind name-keyed endpoints."""
+
+    def __init__(self):
+        self._endpoints: Dict[str, Endpoint] = {}
+        self._lock = threading.Lock()
+
+    def register(self, name: str, artifact: CompiledArtifact,
+                 policy: Optional[BatchingPolicy] = None) -> Endpoint:
+        with self._lock:
+            if name in self._endpoints:
+                raise KeyError(f"endpoint '{name}' already registered")
+            ep = Endpoint(name, artifact, policy)
+            self._endpoints[name] = ep
+            return ep
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            ep = self._endpoints.pop(name)
+        ep.close()
+
+    def __getitem__(self, name: str) -> Endpoint:
+        try:
+            return self._endpoints[name]
+        except KeyError:
+            raise KeyError(f"no endpoint '{name}'; "
+                           f"registered: {sorted(self._endpoints)}")
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._endpoints
+
+    def names(self):
+        with self._lock:
+            return sorted(self._endpoints)
+
+    def submit(self, name: str, x: np.ndarray) -> Future:
+        return self[name].submit(x)
+
+    def predict(self, name: str, x: np.ndarray) -> np.ndarray:
+        return self[name].predict(x)
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            eps = sorted(self._endpoints.items())
+        return {name: ep.stats.snapshot() for name, ep in eps}
+
+    def close(self) -> None:
+        with self._lock:
+            eps = list(self._endpoints.values())
+            self._endpoints.clear()
+        for ep in eps:
+            ep.close()

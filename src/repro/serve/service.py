@@ -1,0 +1,85 @@
+"""The user-facing serving facade: cache + router + schedulers in one object.
+
+    from repro.serve import BatchingPolicy, InferenceService
+
+    svc = InferenceService()
+    svc.register("digits", model, Target(number_format="fxp16", backend="xla"),
+                 policy=BatchingPolicy(max_batch=64, max_wait_ms=2.0))
+
+    fut = svc.submit("digits", row)        # async: concurrent.futures.Future
+    preds = svc.predict("digits", rows)    # sync convenience
+    svc.stats()                            # per-endpoint QPS / p50 / p95 / fill
+    svc.close()
+
+Registration compiles through the :class:`~repro.serve.cache.ArtifactCache`,
+so registering the same parameters for the same Target twice (two endpoint
+names, a restart loop, an A/B alias) reuses the compiled artifact.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import Future
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.compile import CompiledArtifact, Target
+
+from .batching import BatchingPolicy
+from .cache import ArtifactCache
+from .router import Endpoint, ModelRouter
+
+__all__ = ["InferenceService"]
+
+
+class InferenceService:
+    def __init__(self, cache: Optional[ArtifactCache] = None):
+        self.cache = cache or ArtifactCache()
+        self.router = ModelRouter()
+
+    # -- lifecycle -----------------------------------------------------------
+    def register(self, name: str, model: Any = None,
+                 target: Optional[Target] = None,
+                 artifact: Optional[CompiledArtifact] = None,
+                 policy: Optional[BatchingPolicy] = None) -> Endpoint:
+        """Host ``model`` compiled for ``target`` (deduped through the
+        artifact cache), or a pre-compiled ``artifact``, under ``name``."""
+        if (artifact is None) == (model is None):
+            raise TypeError("pass either model (+ target) or artifact")
+        if artifact is None:
+            art = self.cache.get_or_compile(model, target or Target())
+        else:
+            art = self.cache.put(artifact) if artifact.fingerprint else artifact
+        return self.router.register(name, art, policy)
+
+    def unregister(self, name: str) -> None:
+        self.router.unregister(name)
+
+    def endpoint(self, name: str) -> Endpoint:
+        return self.router[name]
+
+    def close(self) -> None:
+        self.router.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- inference -----------------------------------------------------------
+    def submit(self, name: str, x: np.ndarray) -> Future:
+        return self.router.submit(name, x)
+
+    def predict(self, name: str, x: np.ndarray) -> np.ndarray:
+        return self.router.predict(name, x)
+
+    def generate(self, name: str, tokens: np.ndarray, n_tokens: int,
+                 **kw) -> np.ndarray:
+        return self.router[name].generate(tokens, n_tokens, **kw)
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        out = self.router.stats()
+        out["_cache"] = self.cache.stats()
+        return out

@@ -1,0 +1,140 @@
+"""Cross-backend parity suite (the deployment guarantee, paper §IV).
+
+EmbML's value proposition is that a compiled classifier behaves identically
+wherever it runs.  Here that is asserted *bit-for-bit* across every
+registered lowering: for each (lowering, number_format, sigmoid) Target,
+the ``ref`` (eager oracle), ``xla`` (jitted), and ``pallas`` (kernels, in
+interpret mode off-TPU) backends must produce identical class predictions
+on seeded inputs — not approximately equal, identical.
+
+Coverage contract (enforced by ``test_every_lowering_is_covered``): every
+kind in ``lowering_kinds()`` appears in the grid, each with >= 3 distinct
+Targets.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.compile import Target, compile, lowering_kinds
+from repro.models import (train_decision_tree, train_kernel_svm,
+                          train_linear_svm, train_logistic, train_mlp)
+
+BACKENDS = ("ref", "xla", "pallas")
+FORMATS = ("flt", "fxp32", "fxp16")
+SIGMOIDS = ("exact", "pwl4")
+CLASSIFIER_KINDS = ("tree", "logistic", "mlp", "svm-linear", "svm-poly",
+                    "svm-rbf")
+
+# lm Targets: native, weight-only int8 (both scale modes), int8 KV cache.
+LM_TARGETS = [
+    Target(number_format="flt"),
+    Target(number_format="fxp8", weight_scale="qnm", sigmoid="pwl4"),
+    Target(number_format="fxp8", weight_scale="per_channel", kv_cache="int8"),
+]
+
+
+@pytest.fixture(scope="module")
+def blobs_module():
+    rng = np.random.RandomState(0)
+    n, f, c = 600, 12, 3
+    means = rng.randn(c, f) * 4.0
+    y = rng.randint(0, c, n).astype(np.int32)
+    x = (means[y] + rng.randn(n, f)).astype(np.float32)
+    return x[:400], y[:400], x[400:], y[400:], c
+
+
+@pytest.fixture(scope="module")
+def trained(blobs_module):
+    xtr, ytr, _, _, c = blobs_module
+    return {
+        "tree": train_decision_tree(xtr, ytr, c, max_depth=6),
+        "logistic": train_logistic(xtr, ytr, c, epochs=15),
+        "mlp": train_mlp(xtr, ytr, c, hidden=(16,), epochs=10),
+        "svm-linear": train_linear_svm(xtr, ytr, c, epochs=15),
+        "svm-rbf": train_kernel_svm(xtr, ytr, c, kernel="rbf",
+                                    n_prototypes=40, epochs=10),
+        "svm-poly": train_kernel_svm(xtr, ytr, c, kernel="poly",
+                                     n_prototypes=40, epochs=10),
+    }
+
+
+@pytest.mark.parametrize("sigmoid", SIGMOIDS)
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("kind", CLASSIFIER_KINDS)
+def test_classifier_backend_parity(trained, blobs_module, kind, fmt, sigmoid):
+    """ref == xla == pallas-interpret, exactly, per Target."""
+    _, _, xte, _, _ = blobs_module
+    preds = {}
+    for backend in BACKENDS:
+        art = compile(trained[kind], Target(number_format=fmt, sigmoid=sigmoid,
+                                            backend=backend))
+        preds[backend] = art.predict(xte)
+    np.testing.assert_array_equal(
+        preds["ref"], preds["xla"],
+        err_msg=f"{kind}/{fmt}/{sigmoid}: xla diverged from ref")
+    np.testing.assert_array_equal(
+        preds["ref"], preds["pallas"],
+        err_msg=f"{kind}/{fmt}/{sigmoid}: pallas diverged from ref")
+
+
+@pytest.mark.parametrize("layout", ["iterative", "ifelse", "oblivious"])
+def test_tree_layout_backend_parity(trained, blobs_module, layout):
+    """Tree layouts (paper C4) are prediction-equivalent on every backend."""
+    _, _, xte, _, _ = blobs_module
+    ref = compile(trained["tree"], Target(tree_layout="iterative")).predict(xte)
+    for backend in BACKENDS:
+        art = compile(trained["tree"], Target(tree_layout=layout,
+                                              backend=backend))
+        np.testing.assert_array_equal(ref, art.predict(xte),
+                                      err_msg=f"{layout}/{backend}")
+
+
+# ---------------------------------------------------------------------------
+# lm lowering
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def lm_model():
+    import jax
+
+    from repro.compile import LMModel
+    from repro.configs import get_config
+    from repro.lm import model as M
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                              d_head=32, d_ff=128, vocab_size=256)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return LMModel(cfg, params)
+
+
+@pytest.mark.parametrize("tgt", LM_TARGETS, ids=lambda t: (
+    f"{t.number_format}-{t.weight_scale}-{t.kv_cache}"))
+def test_lm_backend_parity(lm_model, tgt):
+    """The lm lowering's decode path is backend-invariant: for each serving
+    Target the greedy one-step predictions and 4-token generations must be
+    identical across backends."""
+    tok = np.array([3, 7, 11], np.int32)
+    outs, seqs = [], []
+    for backend in BACKENDS:
+        art = compile(lm_model, tgt.replace(backend=backend))
+        outs.append(art.predict(tok))
+        seqs.append(np.asarray(art.extras["generate"](tok, 4)))
+    for got_out, got_seq in zip(outs[1:], seqs[1:]):
+        np.testing.assert_array_equal(outs[0], got_out)
+        np.testing.assert_array_equal(seqs[0], got_seq)
+
+
+# ---------------------------------------------------------------------------
+# coverage contract
+# ---------------------------------------------------------------------------
+def test_every_lowering_is_covered():
+    """The grid above must span every registered lowering, each with at
+    least 3 distinct Targets — new lowerings fail here until enrolled."""
+    covered = {kind: len(FORMATS) * len(SIGMOIDS) for kind in CLASSIFIER_KINDS}
+    covered["lm"] = len(LM_TARGETS)
+    assert set(covered) == set(lowering_kinds()), (
+        f"parity suite covers {sorted(covered)} but registry has "
+        f"{sorted(lowering_kinds())}; enroll the new lowering here")
+    assert all(n >= 3 for n in covered.values())

@@ -100,6 +100,24 @@ def test_tree_ensemble_matches_ref(depth, batch):
     np.testing.assert_array_equal(got, np.asarray(predict_iterative(model.tree, xq)))
 
 
+@pytest.mark.parametrize("batch,block", [(1, 16), (7, 16), (37, 16),
+                                         (100, 64), (257, 256)])
+def test_tree_ensemble_ragged_batch(batch, block):
+    """Regression: the kernel wrapper pads ragged B internally instead of
+    hard-asserting ``B % block_batch == 0``."""
+    from repro.kernels.tree_ensemble import pack_tree, tree_ensemble_pallas
+
+    rng = np.random.RandomState(batch)
+    xt = rng.randn(500, 8).astype(np.float32)
+    yt = (xt[:, 0] > 0).astype(np.int32) + (xt[:, 2] > 0.3).astype(np.int32)
+    model = train_decision_tree(xt, yt, 3, max_depth=6)
+    xq = jnp.asarray(rng.randn(batch, 8).astype(np.float32))
+    packed = tuple(jnp.asarray(t) for t in pack_tree(model.tree))
+    got = np.asarray(tree_ensemble_pallas(xq, *packed, block_batch=block,
+                                          interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(R.tree_ensemble_ref(model.tree, xq)))
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

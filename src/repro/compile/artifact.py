@@ -103,6 +103,32 @@ class CompiledArtifact:
             "underflow_rate": float(int(stats.underflow) / total),
         }
 
+    def pretune(self, example: np.ndarray,
+                batches: Optional[Tuple[int, ...]] = None) -> "CompiledArtifact":
+        """Warm the kernel block-size tuner and the jit trace cache for the
+        serving bucket ladder, ahead of traffic.
+
+        Runs ``predict`` on zero inputs shaped like ``example`` (one row) at
+        each batch size in ``batches`` — default: the power-of-two ladder up
+        to ``max_supported_batch`` (or 64).  Each call populates the
+        autotuner's shape-keyed entry (persisted to the on-disk JSON cache,
+        see ``repro.kernels.tune``) and the corresponding jit trace, so the
+        first real request in every bucket hits warm caches.  Returns self.
+        """
+        row = np.asarray(example)
+        if row.ndim > 1:
+            row = row[0]
+        if batches is None:
+            top = self.max_supported_batch or 64
+            ladder, b = [], 1
+            while b < top:
+                ladder.append(b)
+                b *= 2
+            batches = tuple(ladder) + (top,)
+        for b in batches:
+            self.predict(np.zeros((int(b),) + row.shape, row.dtype))
+        return self
+
     # -- memory model --------------------------------------------------------
     def memory_report(self) -> Dict[str, int]:
         return {"flash": self.flash_bytes, "sram": self.sram_bytes,

@@ -2,9 +2,10 @@
 delegation from the SVM lowering, linear SVMs — identical artifact math:
 ``argmax(x @ W + b)``).
 
-Backend routing for fixed-point targets: ``ref``/``xla`` use the wide-
-accumulate ``qmatmul_with_stats`` oracle; ``pallas`` routes the matmul
-through ``kernels/fxp_qmatmul`` (MXU int path, interpret mode off-TPU).
+Backend routing for fixed-point targets: the decision function is one fused
+layer op (matmul + bias in a single dispatch, activation ``none``):
+``ref``/``xla`` via the wide-accumulate ``kernels/ref.fxp_layer_ref`` oracle,
+``pallas`` via the ``kernels/fxp_layer`` kernel (interpret mode off-TPU).
 The pallas path reports quantization stats for the *input* stage only —
 kernel-internal saturation accounting stays on the reference backend.
 """
@@ -15,8 +16,6 @@ from typing import Any, Dict
 
 import jax.numpy as jnp
 import numpy as np
-
-from repro.core import fixedpoint as fxp
 
 from ..registry import Lowered, Lowering, register_lowering
 from ..target import Target
@@ -45,14 +44,15 @@ def lower_linear(coef: np.ndarray, intercept: np.ndarray, target: Target) -> Low
 
             def predict(x):
                 qx, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
-                logits = ops.fxp_qmatmul(qx, qw, fmt)
-                logits = fxp.qadd(logits, qb[None, :], fmt)
+                logits = ops.fxp_layer(qx, qw, qb, fmt, activation="none")
                 return jnp.argmax(logits, -1).astype(jnp.int32), stats
         else:
+            from repro.kernels import ref as ref_ops
+
             def predict(x):
                 qx, s1 = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
-                logits, s2 = fxp.qmatmul_with_stats(qx, qw, fmt)
-                logits = fxp.qadd(logits, qb[None, :], fmt)
+                logits, s2 = ref_ops.fxp_layer_ref_with_stats(
+                    qx, qw, qb, fmt, activation="none")
                 return jnp.argmax(logits, -1).astype(jnp.int32), s1.merge(s2)
 
         flash = nbytes(np.asarray(qw), np.asarray(qb))

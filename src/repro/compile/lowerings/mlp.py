@@ -5,10 +5,13 @@ Backend routing:
 * float targets — plain XLA matmuls; the ``pallas`` backend additionally
   routes non-exact sigmoids through the fused ``kernels/pwl_activation``
   VPU kernel.
-* fixed-point targets — ``ref``/``xla`` use the wide-accumulate
-  ``qmatmul_with_stats`` oracle per layer; ``pallas`` routes every layer
-  matmul through ``kernels/fxp_qmatmul`` (MXU int path).  Activations stay
-  in the Qn.m integer domain either way.
+* fixed-point targets — every layer is one *fused* op,
+  ``act(qadd(qmatmul(h, W), b))``: ``ref``/``xla`` via the wide-accumulate
+  ``kernels/ref.fxp_layer_ref_with_stats`` oracle, ``pallas`` via the
+  ``kernels/fxp_layer`` kernel (int32 accumulator resident in VMEM, bias +
+  shift + saturation + PWL epilogue on the VPU — one dispatch per layer
+  where the chained path took three).  Activations stay in the Qn.m
+  integer domain either way, and the two routes are bit-identical.
 """
 
 from __future__ import annotations
@@ -18,8 +21,7 @@ from typing import Any, Dict
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fixedpoint as fxp
-from repro.core.activations import get_qsigmoid, get_sigmoid
+from repro.core.activations import get_sigmoid
 
 from ..registry import Lowered, Lowering, register_lowering
 from ..target import Target
@@ -60,30 +62,29 @@ class MLPLowering(Lowering):
             flash = nbytes(*[np.asarray(w, np.float32) for w in weights],
                            *[np.asarray(b, np.float32) for b in biases])
         else:
-            qsig = get_qsigmoid(target.sigmoid)
             qws = [q(w, fmt) for w in weights]
             qbs = [q(b, fmt) for b in biases]
+            # Hidden layers fuse the sigmoid into the layer op; the output
+            # layer emits raw logits ("none").
+            acts = [target.sigmoid] * (len(qws) - 1) + ["none"]
 
             if target.backend == "pallas":
                 from repro.kernels import ops
 
                 def predict(x):
                     h, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
-                    for i, (w, b) in enumerate(zip(qws, qbs)):
-                        h = ops.fxp_qmatmul(h, w, fmt)
-                        h = fxp.qadd(h, b[None, :], fmt)
-                        if i < len(qws) - 1:
-                            h = qsig(h, fmt)
+                    for w, b, act in zip(qws, qbs, acts):
+                        h = ops.fxp_layer(h, w, b, fmt, activation=act)
                     return jnp.argmax(h, -1).astype(jnp.int32), stats
             else:
+                from repro.kernels import ref as ref_ops
+
                 def predict(x):
                     h, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
-                    for i, (w, b) in enumerate(zip(qws, qbs)):
-                        h, s = fxp.qmatmul_with_stats(h, w, fmt)
+                    for w, b, act in zip(qws, qbs, acts):
+                        h, s = ref_ops.fxp_layer_ref_with_stats(
+                            h, w, b, fmt, activation=act)
                         stats = stats.merge(s)
-                        h = fxp.qadd(h, b[None, :], fmt)
-                        if i < len(qws) - 1:
-                            h = qsig(h, fmt)
                     return jnp.argmax(h, -1).astype(jnp.int32), stats
 
             flash = nbytes(*[np.asarray(w) for w in qws],

@@ -6,9 +6,12 @@ logistic regression).  Kernel machines compute the libsvm decision function
 f64-trained artifact in f32 (reproducing the paper's poly-SVC precision-drop
 finding), the fixed-point path runs the full kernel in Qn.m integer ops.
 
-Backend routing: the two large matmuls (x @ sv.T and k @ dual) go through
-``kernels/fxp_qmatmul`` on the ``pallas`` backend; the elementwise kernel
-math (qmul/qpow/qexp) stays on the VPU-equivalent jnp ops.
+Backend routing: the first large matmul (x @ sv.T) goes through
+``kernels/fxp_qmatmul`` on the ``pallas`` backend, and the decision stage
+(k @ dual + intercept) is the *fused* layer op — one dispatch on every
+backend (``kernels/fxp_layer`` on pallas, ``kernels/ref.fxp_layer_ref`` on
+ref/xla); the elementwise kernel math (qmul/qpow/qexp) stays on the
+VPU-equivalent jnp ops.
 """
 
 from __future__ import annotations
@@ -87,9 +90,20 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
 
             def matmul(a, b):
                 return ops.fxp_qmatmul(a, b, fmt), zero_stats()
+
+            def decision(k):
+                # k @ dual + intercept, fused into one kernel dispatch.
+                return ops.fxp_layer(k, qd, qb, fmt,
+                                     activation="none"), zero_stats()
         else:
+            from repro.kernels import ref as ref_ops
+
             def matmul(a, b):
                 return fxp.qmatmul_with_stats(a, b, fmt)
+
+            def decision(k):
+                return ref_ops.fxp_layer_ref_with_stats(
+                    k, qd, qb, fmt, activation="none")
 
         if kernel == "poly":
             def predict(x):
@@ -97,8 +111,7 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
                 dot, s1 = matmul(qx, qsv.T)
                 k = fxp.qadd(fxp.qmul(dot, qgamma, fmt), qcoef0, fmt)
                 k = fxp.qpow_int(k, degree, fmt)
-                out, s2 = matmul(k, qd)
-                out = fxp.qadd(out, qb[None, :], fmt)
+                out, s2 = decision(k)
                 return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
         else:  # rbf
             def _qsq_norm(qv):
@@ -117,8 +130,7 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
                               sv2[None, :], fmt)
                 arg = fxp.qneg(fxp.qmul(d2, qgamma, fmt), fmt)
                 k = fxp.qexp(arg, fmt)
-                out, s2 = matmul(k, qd)
-                out = fxp.qadd(out, qb[None, :], fmt)
+                out, s2 = decision(k)
                 return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
 
         flash = nbytes(np.asarray(qsv), np.asarray(qd), np.asarray(qb))

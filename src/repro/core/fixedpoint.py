@@ -47,6 +47,7 @@ __all__ = [
     "qdiv",
     "qmatmul",
     "qmatmul_with_stats",
+    "rshift_round_saturate",
     "quantize_with_stats",
     "qexp",
     "qsigmoid",
@@ -212,6 +213,16 @@ def _rshift_round(x_wide: jax.Array, m: int) -> jax.Array:
     sign = jnp.where(x_wide < 0, -1, 1).astype(x_wide.dtype)
     rounded = sign * ((jnp.abs(x_wide) + half) >> m)
     return rounded
+
+
+def rshift_round_saturate(acc: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """``saturate(round_shift(acc, m))`` — the shared accumulator epilogue.
+
+    Pure jnp, so it traces both into jitted reference programs and into the
+    Pallas kernel bodies (fxp_qmatmul / fxp_layer) — one definition of the
+    rounding rule keeps the cross-backend bit-identity contract in one place.
+    """
+    return _saturate(_rshift_round(acc, fmt.frac_bits), fmt)
 
 
 def qmul(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:

@@ -1,11 +1,14 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
-wrapped by ops.py (jit + padding + interpret-mode dispatch on CPU) and
-validated against ref.py pure-jnp oracles (tests/test_kernels.py sweeps
-shapes/dtypes).
+wrapped by ops.py (jit + shared padding policy + interpret-mode dispatch on
+CPU), blocked by tune.py (shape/dtype-keyed block-size autotuner with an
+on-disk JSON cache) and validated against ref.py pure-jnp oracles
+(tests/test_kernels.py sweeps shapes/dtypes).
 
-* fxp_qmatmul     — Qn.m integer matmul on the MXU (paper C1)
+* fxp_layer       — fused Qn.m layer: matmul + bias + PWL activation in one
+                    pass, int32 accumulator resident in VMEM (the hot path)
+* fxp_qmatmul     — standalone Qn.m integer matmul on the MXU (paper C1)
 * pwl_activation  — PWL sigmoid family on the VPU (paper C3)
 * tree_ensemble   — oblivious decision trees as dense matmuls (paper C4)
 * flash_attention — streaming-softmax attention (prefill hot spot)

@@ -32,13 +32,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import fixedpoint
 from repro.core.fixedpoint import FxpFormat
 
 __all__ = ["fxp_qmatmul_pallas"]
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, *, frac_bits: int, qmin: int,
-            qmax: int, out_dtype, k_steps: int):
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, fmt: FxpFormat, k_steps: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -52,12 +52,9 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, frac_bits: int, qmin: int,
 
     @pl.when(k == k_steps - 1)
     def _finish():
-        acc = acc_ref[...]
-        if frac_bits > 0:
-            half = jnp.int32(1 << (frac_bits - 1))
-            sign = jnp.where(acc < 0, jnp.int32(-1), jnp.int32(1))
-            acc = sign * ((jnp.abs(acc) + half) >> frac_bits)
-        o_ref[...] = jnp.clip(acc, qmin, qmax).astype(out_dtype)
+        # The shared accumulator epilogue (one definition of the rounding
+        # rule across kernels and oracles), traced onto the VPU.
+        o_ref[...] = fixedpoint.rshift_round_saturate(acc_ref[...], fmt)
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "bm", "bn", "bk",
@@ -76,9 +73,7 @@ def fxp_qmatmul_pallas(a: jax.Array, b: jax.Array, fmt: FxpFormat,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, bm, bn, bk)
     k_steps = k // bk
 
-    kernel = functools.partial(
-        _kernel, frac_bits=fmt.frac_bits, qmin=fmt.qmin, qmax=fmt.qmax,
-        out_dtype=fmt.dtype, k_steps=k_steps)
+    kernel = functools.partial(_kernel, fmt=fmt, k_steps=k_steps)
 
     return pl.pallas_call(
         kernel,

@@ -5,9 +5,25 @@ mode automatically when not running on TPU — this container validates on
 CPU), and unpads.  These are the entry points the rest of the framework
 uses; swapping ``impl='xla'`` falls back to the pure-jnp reference, which is
 also how the dry-run lowers (Mosaic kernels only lower on real TPU).
+
+Block sizes are no longer fixed 128/256 defaults: matmul-shaped ops consult
+the :mod:`repro.kernels.tune` autotuner (shape/dtype-keyed, JSON disk
+cache), and every wrapper shares one padding policy — pad each axis up to
+the tuned block, slice the logical shape back off the output.  Batch-like
+axes are bucketed to powers of two (the serving ladder), so warm buckets
+reuse both the tuning entry and the jit trace.
+
+``count_dispatches()`` counts the logical kernel dispatches traced while
+active (one per wrapper call — the unit the fused layer kernel collapses
+from 3 to 1 per MLP layer).
 """
 
 from __future__ import annotations
+
+import contextlib
+import time
+import weakref
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,19 +31,55 @@ import jax.numpy as jnp
 from repro.core.fixedpoint import FxpFormat
 from repro.core.trees import TreeArrays
 from . import ref as ref_ops
+from . import tune
 from .flash_attention import flash_attention_pallas
+from .fxp_layer import fxp_layer_pallas
 from .fxp_qmatmul import fxp_qmatmul_pallas
 from .pwl_activation import pwl_activation_pallas
 from .tree_ensemble import pack_tree, tree_ensemble_pallas
 
-__all__ = ["fxp_qmatmul", "pwl_activation", "tree_predict", "flash_attention"]
+__all__ = ["fxp_qmatmul", "fxp_layer", "pwl_activation", "tree_predict",
+           "flash_attention", "count_dispatches"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+# --------------------------------------------------------------------------
+# dispatch accounting
+# --------------------------------------------------------------------------
+class DispatchCounter:
+    """Counts wrapper-level kernel dispatches (trace-time, per jit trace)."""
+
+    def __init__(self):
+        self.count = 0
+
+
+_active_counters: List[DispatchCounter] = []
+
+
+def _tick() -> None:
+    for c in _active_counters:
+        c.count += 1
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """``with count_dispatches() as c: ...`` — ``c.count`` is the number of
+    kernel dispatches issued (or traced, under jit) inside the block."""
+    c = DispatchCounter()
+    _active_counters.append(c)
+    try:
+        yield c
+    finally:
+        _active_counters.remove(c)
+
+
+# --------------------------------------------------------------------------
+# the shared padding policy
+# --------------------------------------------------------------------------
+def _pad_axis(x: jax.Array, axis: int, mult: int, value=0):
     size = x.shape[axis]
     rem = (-size) % mult
     if rem == 0:
@@ -37,59 +89,180 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
     return jnp.pad(x, pad, constant_values=value), size
 
 
+def _pad_matmul(a: jax.Array, b: jax.Array, blocks: tune.Blocks):
+    """Pad (M, K) x (K, N) operands to the tuned (bm, bn, bk) multiples."""
+    bm, bn, bk = blocks
+    ap, m0 = _pad_axis(a, 0, bm)
+    ap, _ = _pad_axis(ap, 1, bk)
+    bp, _ = _pad_axis(b, 0, bk)
+    bp, n0 = _pad_axis(bp, 1, bn)
+    return ap, bp, m0, n0
+
+
+def _timed_runner(make_call):
+    """Best-of-3 wall-time of a zero-input kernel call (on-TPU tuning only;
+    timing is shape-dependent, not value-dependent, so zeros suffice)."""
+
+    def run(blocks: tune.Blocks) -> float:
+        make_call(blocks).block_until_ready()  # compile + warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            make_call(blocks).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return run
+
+
+def _tuning_operands(m: int, k: int, n: int, fmt: FxpFormat,
+                     blocks: tune.Blocks):
+    """Zero operands shaped exactly as the kernel would see them for these
+    blocks — the same bucket-then-pad policy as the real dispatch path, kept
+    in one place so the tuner times what the kernel will actually run."""
+    bm, bn, bk = blocks
+    mb = tune.batch_bucket(m, cap=1 << 30)
+    za = jnp.zeros((-(-mb // bm) * bm, -(-k // bk) * bk), fmt.dtype)
+    zb = jnp.zeros((za.shape[1], -(-n // bn) * bn), fmt.dtype)
+    return za, zb
+
+
+def _matmul_tuning(kind: str, m: int, k: int, n: int, fmt: FxpFormat,
+                   make_call=None) -> tune.Blocks:
+    runner = None
+    if make_call is not None and _on_tpu():
+        runner = _timed_runner(make_call)
+    return tune.matmul_blocks(kind, m, k, n, fmt.total_bits, runner)
+
+
+# --------------------------------------------------------------------------
+# ops
+# --------------------------------------------------------------------------
 def fxp_qmatmul(a: jax.Array, b: jax.Array, fmt: FxpFormat,
-                impl: str = "pallas", bm: int = 128, bn: int = 128,
-                bk: int = 256) -> jax.Array:
-    """Qn.m matmul.  a: (M, K), b: (K, N) in fmt.dtype -> (M, N)."""
-    if impl == "xla":
+                impl: str = "pallas",
+                blocks: Optional[tune.Blocks] = None) -> jax.Array:
+    """Qn.m matmul.  a: (M, K), b: (K, N) in fmt.dtype -> (M, N).
+
+    ``blocks`` overrides the autotuned (bm, bn, bk); pass it to reproduce a
+    fixed blocking (e.g. the historical 128/128/256 defaults in benchmarks).
+    """
+    _tick()
+    if impl in ("xla", "ref"):
         return ref_ops.fxp_qmatmul_ref(a, b, fmt)
-    ap, m0 = _pad_to(a, 0, bm)
-    ap, _ = _pad_to(ap, 1, bk)
-    bp, _ = _pad_to(b, 0, bk)
-    bp, n0 = _pad_to(bp, 1, bn)
+    (m, k), n = a.shape, b.shape[1]
+    if blocks is None:
+        def make_call(blk):
+            za, zb = _tuning_operands(m, k, n, fmt, blk)
+            return fxp_qmatmul_pallas(za, zb, fmt, bm=blk[0], bn=blk[1],
+                                      bk=blk[2])
+
+        blocks = _matmul_tuning("qmatmul", m, k, n, fmt, make_call)
+    bm, bn, bk = blocks
+    ap, bp, m0, n0 = _pad_matmul(a, b, blocks)
     out = fxp_qmatmul_pallas(ap, bp, fmt, bm=bm, bn=bn, bk=bk,
                              interpret=not _on_tpu())
     return out[:m0, :n0]
 
 
+def fxp_layer(a: jax.Array, w: jax.Array, bias: jax.Array, fmt: FxpFormat,
+              activation: str = "none", impl: str = "pallas",
+              blocks: Optional[tune.Blocks] = None) -> jax.Array:
+    """Fused fixed-point layer: ``act(qadd(qmatmul(a, w), bias))`` in one
+    kernel dispatch.  a: (M, K), w: (K, N), bias: (N,) -> (M, N), all in
+    ``fmt``; ``activation`` is a Qn.m sigmoid name or ``"none"`` (logits).
+
+    Bit-identical to the chained ``fxp_qmatmul`` -> ``qadd`` -> ``qsigmoid``
+    path (same epilogue math, traced from the same activation functions);
+    on the pallas backend the int32 accumulator stays in VMEM across K and
+    the epilogue runs on the VPU — the activations never round-trip HBM.
+    """
+    _tick()
+    if impl in ("xla", "ref"):
+        return ref_ops.fxp_layer_ref(a, w, bias, fmt, activation)
+    (m, k), n = a.shape, w.shape[1]
+    if blocks is None:
+        def make_call(blk):
+            za, zw = _tuning_operands(m, k, n, fmt, blk)
+            zb = jnp.zeros((zw.shape[1],), fmt.dtype)
+            return fxp_layer_pallas(za, zw, zb, fmt, activation,
+                                    bm=blk[0], bn=blk[1], bk=blk[2])
+
+        blocks = _matmul_tuning("layer", m, k, n, fmt, make_call)
+    bm, bn, bk = blocks
+    ap, wp, m0, n0 = _pad_matmul(a, w, blocks)
+    biasp, _ = _pad_axis(bias, 0, bn)
+    out = fxp_layer_pallas(ap, wp, biasp, fmt, activation,
+                           bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())
+    return out[:m0, :n0]
+
+
 def pwl_activation(x: jax.Array, variant: str = "pwl4",
                    impl: str = "pallas") -> jax.Array:
-    """Fused PWL sigmoid/silu over any-shaped input."""
-    if impl == "xla":
+    """Fused PWL sigmoid/silu over any-shaped input.
+
+    The block shape follows the actual input size (a batch-1 MLP call pads
+    to at most one 128-lane row), instead of the historical fixed 256x512
+    grid that padded every input to 131k elements.
+    """
+    _tick()
+    if impl in ("xla", "ref"):
         return ref_ops.pwl_activation_ref(x, variant)
     orig_shape = x.shape
     flat = x.reshape(-1)
-    cols = 512
-    flat, n0 = _pad_to(flat, 0, 256 * cols)
+    block_rows, cols = tune.pwl_blocks(flat.shape[0])
+    flat, n0 = _pad_axis(flat, 0, block_rows * cols)
     x2 = flat.reshape(-1, cols)
-    out = pwl_activation_pallas(x2, variant, block_rows=min(256, x2.shape[0]),
+    out = pwl_activation_pallas(x2, variant, block_rows=block_rows,
                                 block_cols=cols, interpret=not _on_tpu())
     return out.reshape(-1)[:n0].reshape(orig_shape)
+
+
+# Packed-kernel operand cache: id-keyed weak entries instead of the old
+# ``object.__setattr__(tree, "_packed_kernel", ...)`` mutation of user-owned
+# model objects.  The weakref keeps identity honest across id() reuse and
+# evicts the entry when the tree is collected.
+_PACKED_TREES: Dict[int, Tuple[weakref.ref, tuple]] = {}
+
+
+def _packed_operands(tree: TreeArrays) -> tuple:
+    key = id(tree)
+    hit = _PACKED_TREES.get(key)
+    if hit is not None and hit[0]() is tree:
+        return hit[1]
+    packed = tuple(jnp.asarray(t) for t in pack_tree(tree))
+    try:
+        ref = weakref.ref(tree, lambda _, k=key: _PACKED_TREES.pop(k, None))
+    except TypeError:  # unexpected weakref-less tree type: just don't cache
+        return packed
+    _PACKED_TREES[key] = (ref, packed)
+    return packed
 
 
 def tree_predict(tree: TreeArrays, x: jax.Array, impl: str = "pallas",
                  block_batch: int = 256) -> jax.Array:
     """Oblivious-tree inference.  x: (B, F) float -> (B,) int32."""
-    if impl == "xla":
+    _tick()
+    if impl in ("xla", "ref"):
         return ref_ops.tree_ensemble_ref(tree, x)
-    packed = getattr(tree, "_packed_kernel", None)
-    if packed is None:
-        packed = tuple(jnp.asarray(t) for t in pack_tree(tree))
-        object.__setattr__(tree, "_packed_kernel", packed)
-    sel, thr, ppos, pneg, plen, classes = packed
-    # Ragged B is padded/sliced inside the kernel wrapper; shrinking the
-    # block to the batch keeps tiny calls on a single grid step.
-    return tree_ensemble_pallas(jnp.asarray(x, jnp.float32), sel, thr, ppos,
-                                pneg, plen, classes,
-                                block_batch=min(block_batch, max(1, x.shape[0])),
-                                interpret=not _on_tpu())
+    sel, thr, ppos, pneg, plen, classes = _packed_operands(tree)
+    # The block shrinks with the batch so tiny calls stay on one grid step,
+    # but only to the batch's pow2 *bucket* (the serve/batching.py ladder),
+    # and ragged batches are padded up to the bucket *here* — the jitted
+    # kernel only ever sees bucket-shaped inputs, so a warm bucket hits the
+    # jit cache instead of recompiling per distinct B.
+    bb = tune.batch_bucket(x.shape[0], cap=block_batch)
+    xp, b0 = _pad_axis(jnp.asarray(x, jnp.float32), 0, bb)
+    out = tree_ensemble_pallas(xp, sel, thr, ppos, pneg, plen, classes,
+                               block_batch=bb, interpret=not _on_tpu())
+    return out[:b0]
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, impl: str = "pallas",
                     bq: int = 512, bk: int = 512) -> jax.Array:
     """(BH, S, dh) attention; S must be a multiple of the block size."""
-    if impl == "xla":
+    _tick()
+    if impl in ("xla", "ref"):
         return ref_ops.flash_attention_ref(q, k, v, causal)
     return flash_attention_pallas(q, k, v, causal=causal, bq=bq, bk=bk,
                                   interpret=not _on_tpu())

@@ -12,12 +12,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fixedpoint as fxp
-from repro.core.activations import (sigmoid_pwl2, sigmoid_pwl4,
+from repro.core.activations import (get_qsigmoid, sigmoid_pwl2, sigmoid_pwl4,
                                     sigmoid_rational)
 from repro.core.trees import TreeArrays, predict_oblivious
 
-__all__ = ["fxp_qmatmul_ref", "pwl_activation_ref", "tree_ensemble_ref",
-           "flash_attention_ref"]
+__all__ = ["fxp_qmatmul_ref", "fxp_layer_ref", "fxp_layer_ref_with_stats",
+           "pwl_activation_ref", "tree_ensemble_ref", "flash_attention_ref"]
 
 
 def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat) -> jax.Array:
@@ -25,12 +25,34 @@ def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat) -> jax.Array
     acc = jax.lax.dot_general(a.astype(jnp.int64), b.astype(jnp.int64),
                               (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.int64)
-    m = fmt.frac_bits
-    if m > 0:
-        half = jnp.int64(1 << (m - 1))
-        sign = jnp.where(acc < 0, -1, 1).astype(jnp.int64)
-        acc = sign * ((jnp.abs(acc) + half) >> m)
-    return jnp.clip(acc, fmt.qmin, fmt.qmax).astype(fmt.dtype)
+    return fxp.rshift_round_saturate(acc, fmt)
+
+
+def fxp_layer_ref(a: jax.Array, b: jax.Array, bias: jax.Array,
+                  fmt: fxp.FxpFormat, activation: str = "none") -> jax.Array:
+    """Fused-layer oracle: the chained ops, composed.
+
+    ``act(qadd(fxp_qmatmul_ref(a, b), bias))`` — by construction bit-identical
+    to the historical three-dispatch path, which is the fused kernel's
+    correctness contract (modulo the documented int32-vs-int64 accumulator
+    range for extreme inputs).
+    """
+    h = fxp_qmatmul_ref(a, b, fmt)
+    h = fxp.qadd(h, bias[None, :], fmt)
+    if activation != "none":
+        h = get_qsigmoid(activation)(h, fmt)
+    return h
+
+
+def fxp_layer_ref_with_stats(a: jax.Array, b: jax.Array, bias: jax.Array,
+                             fmt: fxp.FxpFormat, activation: str = "none"):
+    """Fused-layer oracle with the matmul stage's overflow/underflow stats
+    (the same accounting the chained ref/xla lowerings reported)."""
+    h, stats = fxp.qmatmul_with_stats(a, b, fmt)
+    h = fxp.qadd(h, bias[None, :], fmt)
+    if activation != "none":
+        h = get_qsigmoid(activation)(h, fmt)
+    return h, stats
 
 
 def pwl_activation_ref(x: jax.Array, variant: str) -> jax.Array:

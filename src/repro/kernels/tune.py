@@ -1,0 +1,251 @@
+"""Block-size autotuner for the Pallas kernels (shape/dtype-keyed, disk-cached).
+
+The kernels historically ran with fixed 128/256 block defaults — MXU-aligned,
+but hugely wasteful for the paper-scale problems this repo actually serves
+(a batch-8 call on a 16-wide MLP layer was padded to a 128x256x128 matmul).
+This module picks (bm, bn, bk) per *problem shape bucket* instead:
+
+* **Key** — ``kind|MxKxN|w<bits>|<device>`` where M is rounded up to its
+  power-of-two bucket (matching the serving layer's pow2 batch buckets in
+  ``serve/batching.py``), so every warm serving bucket shares one cache entry
+  and one jit trace.
+* **Selection** — on TPU, candidates are swept with a caller-provided
+  ``runner`` (wall-time of the real kernel on zero inputs of the padded
+  shape; timing is shape- not value-dependent) and the fastest wins.  Off
+  TPU (interpret mode — CI, laptops) timing is meaningless, so a
+  deterministic cost model picks the candidate minimizing padded MACs plus
+  a small per-grid-step overhead charge.
+* **Cache** — two layers: a process-wide dict, and an on-disk JSON file
+  (``$REPRO_TUNE_CACHE`` or ``~/.cache/repro/tune_cache.json``) written
+  atomically on every new entry, so tuning survives process restarts and a
+  serving fleet can ship a pre-tuned cache.  Delete the file (or point the
+  env var elsewhere) to invalidate; ``CompiledArtifact.pretune`` fills it
+  ahead of traffic.
+
+Candidates respect TPU tiling floors (sublane x lane = {8,16,32} x 128 by
+container width) when tuning for a real TPU; interpret mode may shrink
+blocks all the way to the problem size, since only padded-work waste
+matters there.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+__all__ = ["matmul_blocks", "batch_bucket", "pwl_blocks", "pow2ceil",
+           "cache_path", "clear_memory_cache", "cache_snapshot"]
+
+Blocks = Tuple[int, int, int]
+Runner = Callable[[Blocks], float]
+
+# Per-grid-step overhead charge (in MAC-equivalents) for the off-TPU cost
+# model: breaks ties toward fewer, larger grid steps.
+_STEP_COST = 4096
+# VMEM budget for one grid step's working set (a + b + int32 acc + out).
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+# Minimum sublane tile per container width on real TPU (lane is always 128).
+_TPU_SUBLANE = {32: 8, 16: 16, 8: 32}
+
+_lock = threading.RLock()
+_memory: Dict[str, Blocks] = {}
+_disk_loaded_from: Optional[str] = None
+
+
+# --------------------------------------------------------------------------
+# shape bucketing
+# --------------------------------------------------------------------------
+def pow2ceil(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def batch_bucket(b: int, cap: int = 256) -> int:
+    """Round a batch up to its power-of-two bucket, capped.
+
+    Matches ``serve/batching.py``'s pow2 bucket ladder so a kernel blocked
+    on the bucketed batch is only ever traced once per warm bucket.
+    """
+    return min(int(cap), pow2ceil(max(1, int(b))))
+
+
+def pwl_blocks(n_elements: int) -> Tuple[int, int]:
+    """(block_rows, block_cols) for an n-element flattened PWL activation.
+
+    Sized to the input: small calls get one small grid step (a batch-1 MLP
+    activation pads to at most one 128-lane row, not the historical fixed
+    256x512 = 131k-element grid), large calls get the full 256x512 tile.
+    """
+    n = max(1, int(n_elements))
+    cols = 512 if n >= 4096 else 128
+    rows = -(-n // cols)
+    return min(256, pow2ceil(rows)), cols
+
+
+# --------------------------------------------------------------------------
+# disk cache
+# --------------------------------------------------------------------------
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "tune_cache.json"))
+
+
+def _merge_disk_into_memory(path: str) -> None:
+    """Fold valid on-disk entries into memory (in-memory entries win)."""
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return  # absent or corrupt cache: retune from scratch
+    for key, val in raw.items():
+        if (isinstance(val, list) and len(val) == 3
+                and all(isinstance(v, int) and v > 0 for v in val)):
+            _memory.setdefault(key, tuple(val))
+
+
+def _load_disk() -> None:
+    """Merge the on-disk cache into memory (once per distinct path)."""
+    global _disk_loaded_from
+    path = cache_path()
+    if _disk_loaded_from == path:
+        return
+    _disk_loaded_from = path
+    _merge_disk_into_memory(path)
+
+
+def _save_disk() -> None:
+    """Best-effort atomic rewrite of the disk cache from memory.
+
+    Re-merges the current on-disk content first, so concurrent processes
+    tuning disjoint keys union their entries instead of clobbering each
+    other (last-writer-wins only applies per key, which is harmless —
+    both writers tuned the same shape).
+    """
+    path = cache_path()
+    try:
+        _merge_disk_into_memory(path)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({k: list(v) for k, v in sorted(_memory.items())}, f,
+                      indent=0)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS etc.: tuning still works, just not persisted
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process cache (tests; forces a disk reload / retune)."""
+    global _disk_loaded_from
+    with _lock:
+        _memory.clear()
+        _disk_loaded_from = None
+
+
+def cache_snapshot() -> Dict[str, Blocks]:
+    with _lock:
+        return dict(_memory)
+
+
+# --------------------------------------------------------------------------
+# candidate generation + selection
+# --------------------------------------------------------------------------
+def _pow2s_upto(cap: int, floor: int) -> List[int]:
+    out, v = [], floor
+    while v <= cap:
+        out.append(v)
+        v *= 2
+    return out or [floor]
+
+
+def candidates(m: int, k: int, n: int, bits: int,
+               on_tpu: bool) -> List[Blocks]:
+    """Feasible (bm, bn, bk) sets for an MxKxN matmul in a ``bits`` container.
+
+    Off TPU blocks may shrink to the (pow2-bucketed) problem dims; on TPU
+    they are floored at the Mosaic sublane/lane tile for the dtype.
+    """
+    ebytes = bits // 8
+    if on_tpu:
+        bm_floor, lane = _TPU_SUBLANE[bits], 128
+    else:
+        bm_floor, lane = 1, 1
+    bms = _pow2s_upto(min(128, pow2ceil(m)), min(bm_floor, 128))
+    bns = _pow2s_upto(min(256, pow2ceil(n)), min(lane, 256))
+    bks = _pow2s_upto(min(512, pow2ceil(k)), min(lane, 512))
+    out = []
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                vmem = (bm * bk + bk * bn) * ebytes + bm * bn * (4 + ebytes)
+                if vmem <= _VMEM_BUDGET:
+                    out.append((bm, bn, bk))
+    return out
+
+
+def _model_cost(m: int, k: int, n: int, blocks: Blocks) -> float:
+    bm, bn, bk = blocks
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    steps = (mp // bm) * (np_ // bn) * (kp // bk)
+    return mp * kp * np_ + steps * _STEP_COST
+
+
+def _choose(m: int, k: int, n: int, bits: int,
+            runner: Optional[Runner]) -> Blocks:
+    on_tpu = jax.default_backend() == "tpu"
+    cands = candidates(m, k, n, bits, on_tpu)
+    if on_tpu and runner is not None:
+        best, best_t = None, float("inf")
+        for blocks in cands:
+            try:
+                t = runner(blocks)
+            except Exception:
+                continue  # candidate rejected by the compiler: skip
+            if t < best_t:
+                best, best_t = blocks, t
+        if best is not None:
+            return best
+    # Deterministic fallback (and the only path off-TPU).
+    return min(cands, key=lambda blk: (_model_cost(m, k, n, blk),
+                                       -blk[0] * blk[1] * blk[2]))
+
+
+# --------------------------------------------------------------------------
+# public lookup
+# --------------------------------------------------------------------------
+def matmul_blocks(kind: str, m: int, k: int, n: int, bits: int,
+                  runner: Optional[Runner] = None) -> Blocks:
+    """Tuned (bm, bn, bk) for a ``kind`` matmul of logical shape MxKxN.
+
+    M is bucketed to its power of two (serving batch ladder) before keying;
+    the first lookup per key tunes and persists, later lookups are a dict
+    hit — including across processes via the JSON disk cache.
+    """
+    mb = batch_bucket(m, cap=1 << 30)
+    key = f"{kind}|{mb}x{int(k)}x{int(n)}|w{int(bits)}|{jax.default_backend()}"
+    with _lock:
+        hit = _memory.get(key)
+        if hit is not None:
+            return hit
+        _load_disk()
+        hit = _memory.get(key)
+        if hit is not None:
+            return hit
+    # Tune outside the lock: an on-TPU sweep compiles and times dozens of
+    # candidates, and holding the lock through it would stall every other
+    # thread's warm dict hit.  A concurrent miss on the same key tunes
+    # twice and stores the same (deterministic off-TPU) answer — harmless.
+    blocks = _choose(mb, int(k), int(n), int(bits), runner)
+    with _lock:
+        blocks = _memory.setdefault(key, blocks)
+        _save_disk()
+    return blocks

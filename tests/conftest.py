@@ -6,6 +6,26 @@ import pytest
 warnings.filterwarnings("ignore", message=".*int64.*")
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_tune_cache(tmp_path_factory):
+    """Keep the kernel block-size tuner hermetic: the suite must neither
+    read a developer's warm ~/.cache entries nor write into them."""
+    import os
+
+    from repro.kernels import tune
+
+    path = str(tmp_path_factory.mktemp("tune") / "tune_cache.json")
+    old = os.environ.get("REPRO_TUNE_CACHE")
+    os.environ["REPRO_TUNE_CACHE"] = path
+    tune.clear_memory_cache()
+    yield
+    if old is None:
+        os.environ.pop("REPRO_TUNE_CACHE", None)
+    else:
+        os.environ["REPRO_TUNE_CACHE"] = old
+    tune.clear_memory_cache()
+
+
 @pytest.fixture(scope="session")
 def blobs():
     """Small, clearly separable 3-class dataset for fast pipeline tests."""

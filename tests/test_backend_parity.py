@@ -127,6 +127,64 @@ def test_lm_backend_parity(lm_model, tgt):
 
 
 # ---------------------------------------------------------------------------
+# fused layer op (kernels/fxp_layer): the hot-path primitive every
+# fixed-point lowering now emits.  ref == xla == pallas-interpret,
+# bit-identical, across >= 3 Targets (all registered Qn.m formats x
+# sigmoid variants).
+# ---------------------------------------------------------------------------
+FUSED_LAYER_TARGETS = [("fxp32", "exact"), ("fxp32", "pwl4"),
+                       ("fxp16", "pwl4"), ("fxp16", "pwl2"),
+                       ("fxp8", "rational"), ("fxp8", "none")]
+
+
+@pytest.mark.parametrize("fmt_name,activation", FUSED_LAYER_TARGETS)
+def test_fused_layer_op_backend_parity(fmt_name, activation):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compile.target import NUMBER_FORMATS
+    from repro.kernels import ops
+    from repro.kernels import ref as R
+
+    import zlib
+
+    fmt = NUMBER_FORMATS[fmt_name]
+    # crc32, not hash(): str hashes are salted per process, and the parity
+    # contract needs reproducible inputs.
+    rng = np.random.RandomState(zlib.crc32(f"{fmt_name}|{activation}".encode()))
+    lim = min(1000, fmt.qmax // 2)
+    a = jnp.asarray(rng.randint(-lim, lim, (17, 33)).astype(np.dtype(fmt.dtype)))
+    w = jnp.asarray(rng.randint(-lim, lim, (33, 9)).astype(np.dtype(fmt.dtype)))
+    b = jnp.asarray(rng.randint(-lim, lim, (9,)).astype(np.dtype(fmt.dtype)))
+
+    ref = np.asarray(R.fxp_layer_ref(a, w, b, fmt, activation))
+    xla = np.asarray(jax.jit(
+        lambda a, w, b: R.fxp_layer_ref(a, w, b, fmt, activation))(a, w, b))
+    pallas = np.asarray(ops.fxp_layer(a, w, b, fmt, activation))
+    np.testing.assert_array_equal(
+        ref, xla, err_msg=f"fxp_layer/{fmt_name}/{activation}: xla diverged")
+    np.testing.assert_array_equal(
+        ref, pallas,
+        err_msg=f"fxp_layer/{fmt_name}/{activation}: pallas diverged")
+
+
+@pytest.mark.parametrize("fmt", ["fxp32", "fxp16"])
+def test_fused_mlp_artifact_parity_with_stats(trained, blobs_module, fmt):
+    """The artifact-level guarantee for the fused emission: predictions AND
+    the overflow/underflow accounting agree between ref and xla (the pallas
+    backend reports input-stage stats only, predictions must still match)."""
+    _, _, xte, _, _ = blobs_module
+    arts = {b: compile(trained["mlp"], Target(number_format=fmt, sigmoid="pwl4",
+                                              backend=b)) for b in BACKENDS}
+    outs, stats = {}, {}
+    for b, art in arts.items():
+        outs[b], stats[b] = art.predict_with_stats(xte)
+    np.testing.assert_array_equal(outs["ref"], outs["xla"])
+    np.testing.assert_array_equal(outs["ref"], outs["pallas"])
+    assert stats["ref"] == stats["xla"]
+
+
+# ---------------------------------------------------------------------------
 # coverage contract
 # ---------------------------------------------------------------------------
 def test_every_lowering_is_covered():

@@ -68,6 +68,96 @@ def test_property_fxp_qmatmul(m, k, n, seed):
 
 
 # ---------------------------------------------------------------------------
+# fxp_layer — the fused hot-path kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", [FXP32, FXP16, FXP8], ids=str)
+@pytest.mark.parametrize("activation", ["none", "pwl2", "pwl4", "rational",
+                                        "exact"])
+@pytest.mark.parametrize("shape", [(1, 12, 16), (8, 16, 3), (37, 129, 65),
+                                   (64, 256, 32)])
+def test_fxp_layer_matches_ref(fmt, activation, shape):
+    import zlib
+
+    m, k, n = shape
+    # crc32, not hash(): str hashes are salted per process, and the parity
+    # contract needs reproducible inputs.
+    rng = np.random.RandomState(zlib.crc32(repr((shape, activation)).encode()))
+    lim = min(2000, fmt.qmax // 2)
+    a = rng.randint(-lim, lim, (m, k)).astype(np.dtype(fmt.dtype))
+    w = rng.randint(-lim, lim, (k, n)).astype(np.dtype(fmt.dtype))
+    b = rng.randint(-lim, lim, (n,)).astype(np.dtype(fmt.dtype))
+    got = np.asarray(ops.fxp_layer(jnp.asarray(a), jnp.asarray(w),
+                                   jnp.asarray(b), fmt, activation))
+    want = np.asarray(R.fxp_layer_ref(jnp.asarray(a), jnp.asarray(w),
+                                      jnp.asarray(b), fmt, activation))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fmt", [FXP32, FXP16, FXP8], ids=str)
+def test_fxp_layer_equals_chained_ops(fmt):
+    """The fused kernel's contract: bit-identical to the historical
+    three-dispatch chain (qmatmul -> qadd -> qsigmoid) in every format."""
+    from repro.core import fixedpoint as fxp
+    from repro.core.activations import get_qsigmoid
+
+    rng = np.random.RandomState(fmt.total_bits)
+    lim = min(1500, fmt.qmax // 2)
+    a = jnp.asarray(rng.randint(-lim, lim, (9, 40)).astype(np.dtype(fmt.dtype)))
+    w = jnp.asarray(rng.randint(-lim, lim, (40, 7)).astype(np.dtype(fmt.dtype)))
+    b = jnp.asarray(rng.randint(-lim, lim, (7,)).astype(np.dtype(fmt.dtype)))
+    for activation in ("none", "pwl4", "exact"):
+        chained = fxp.qadd(ops.fxp_qmatmul(a, w, fmt), b[None, :], fmt)
+        if activation != "none":
+            chained = get_qsigmoid(activation)(chained, fmt)
+        fused = ops.fxp_layer(a, w, b, fmt, activation)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(chained))
+        # and the ref oracle agrees with the chained *ref* ops identically
+        ref_fused = R.fxp_layer_ref(a, w, b, fmt, activation)
+        ref_chained = fxp.qadd(R.fxp_qmatmul_ref(a, w, fmt), b[None, :], fmt)
+        if activation != "none":
+            ref_chained = get_qsigmoid(activation)(ref_chained, fmt)
+        np.testing.assert_array_equal(np.asarray(ref_fused),
+                                      np.asarray(ref_chained))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 48), k=st.integers(1, 96), n=st.integers(1, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_fxp_layer_fused_vs_chained(m, k, n, seed):
+    from repro.core import fixedpoint as fxp
+    from repro.core.activations import get_qsigmoid
+
+    fmt = FXP16
+    rng = np.random.RandomState(seed)
+    a = jnp.asarray(rng.randint(-3000, 3000, (m, k)).astype(np.int16))
+    w = jnp.asarray(rng.randint(-3000, 3000, (k, n)).astype(np.int16))
+    b = jnp.asarray(rng.randint(-3000, 3000, (n,)).astype(np.int16))
+    fused = ops.fxp_layer(a, w, b, fmt, "pwl4")
+    chained = get_qsigmoid("pwl4")(
+        fxp.qadd(ops.fxp_qmatmul(a, w, fmt), b[None, :], fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(chained))
+    np.testing.assert_array_equal(
+        np.asarray(fused),
+        np.asarray(R.fxp_layer_ref(a, w, b, fmt, "pwl4")))
+
+
+def test_fxp_layer_dispatch_count():
+    """A fused L-layer forward issues L kernel dispatches (the chained form
+    issued one *matmul* dispatch plus two elementwise stages per layer)."""
+    fmt = FXP16
+    rng = np.random.RandomState(0)
+    h = jnp.asarray(rng.randint(-500, 500, (8, 16)).astype(np.int16))
+    layers = [(jnp.asarray(rng.randint(-500, 500, (16, 16)).astype(np.int16)),
+               jnp.asarray(rng.randint(-500, 500, (16,)).astype(np.int16)))
+              for _ in range(3)]
+    with ops.count_dispatches() as c:
+        out = h
+        for w, b in layers:
+            out = ops.fxp_layer(out, w, b, fmt, "pwl4")
+    assert c.count == 3
+
+
+# ---------------------------------------------------------------------------
 # pwl_activation
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("variant", ["pwl2", "pwl4", "rational", "silu_pwl4"])

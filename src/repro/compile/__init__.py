@@ -18,7 +18,8 @@ through a decorator-based lowering registry (``tree``, ``logistic``, ``mlp``,
 ``ConversionOptions`` API is a thin deprecation shim over this package.
 """
 
-from .api import compile, compile_from_params
+from .api import (compile, compile_from_params, resolve_mesh_strategy,
+                  specialize_mesh)
 from .artifact import CompiledArtifact, load
 from .fingerprint import fingerprint_params
 from .registry import (Lowered, Lowering, get_lowering, lowering_kinds,
@@ -29,6 +30,8 @@ from . import lowerings as _lowerings  # noqa: F401  (registration side effects)
 __all__ = [
     "compile",
     "compile_from_params",
+    "specialize_mesh",
+    "resolve_mesh_strategy",
     "CompiledArtifact",
     "load",
     "Target",

@@ -25,7 +25,47 @@ from .fingerprint import fingerprint_params
 from .registry import Lowered, get_lowering, model_kind
 from .target import Target
 
-__all__ = ["compile", "compile_from_params"]
+__all__ = ["compile", "compile_from_params", "specialize_mesh",
+           "resolve_mesh_strategy"]
+
+
+def resolve_mesh_strategy(mesh: Any, strategy: str = "auto") -> str:
+    """Resolve ``'auto'`` to the concrete mesh execution strategy.
+
+    ``fused`` on host-emulated (all-CPU) meshes — every "device" shares one
+    physical host, so per-replica dispatch is pure overhead — and ``spmd``
+    (one shard_map-partitioned program) on real accelerator meshes.  The
+    single place this policy lives; the artifact cache and specialize_mesh
+    both key off it.
+    """
+    if strategy == "auto":
+        from repro.sharding import rules as shrules
+
+        return "fused" if shrules.is_host_emulated(mesh) else "spmd"
+    return strategy
+
+
+def _subtract_phantom_rows(stats: FxpStats, k: int, pad_row_cache: list,
+                           probe: Callable) -> FxpStats:
+    """Remove ``k`` phantom zero-pad rows' contribution from ``stats``.
+
+    Every stats counter is an elementwise count, so rows are independent and
+    an all-zeros batch yields exactly N copies of one phantom row's events
+    (zero rows are *not* silent — biases make them nonzero downstream).
+    ``probe()`` runs such a batch once, returning ``(n_rows, FxpStats)``;
+    the per-row contribution is memoized in ``pad_row_cache`` (a one-slot
+    list owned by the calling wrapper).  Shared by the fixed-batch wrapper
+    and the mesh-replica wrapper — one definition of the correction rule.
+    """
+    if not pad_row_cache:
+        n, zstats = probe()
+        pad_row_cache.append(FxpStats(
+            *(np.asarray(v) // n
+              for v in (zstats.overflow, zstats.underflow, zstats.total))))
+    per = pad_row_cache[0]
+    return FxpStats(np.asarray(stats.overflow) - k * per.overflow,
+                    np.asarray(stats.underflow) - k * per.underflow,
+                    np.asarray(stats.total) - k * per.total)
 
 
 def _specialize(program: Lowered, target: Target) -> Callable:
@@ -44,11 +84,6 @@ def _specialize(program: Lowered, target: Target) -> Callable:
     if target.batch_policy == "fixed":
         inner = predict
         batch_size = target.batch_size
-        # Per-zero-row stat contribution, probed lazily on first partial
-        # batch: every stats counter is an elementwise count, so rows are
-        # independent and an all-zeros batch yields exactly batch_size
-        # copies of one phantom row's events (zero rows are *not* silent —
-        # biases make them nonzero downstream).
         pad_row_stats: list = []
 
         def predict(x):
@@ -64,17 +99,10 @@ def _specialize(program: Lowered, target: Target) -> Callable:
             out, stats = inner(np.pad(x, pad))
             if target.fmt is None:
                 return out[:n], stats  # float stats are structurally zero
-            if not pad_row_stats:
-                zeros = np.zeros((batch_size,) + x.shape[1:], x.dtype)
-                _, zstats = inner(zeros)
-                pad_row_stats.append(FxpStats(
-                    *(np.asarray(v) // batch_size
-                      for v in (zstats.overflow, zstats.underflow, zstats.total))))
-            per = pad_row_stats[0]
-            k = batch_size - n
-            stats = FxpStats(stats.overflow - k * per.overflow,
-                             stats.underflow - k * per.underflow,
-                             stats.total - k * per.total)
+            stats = _subtract_phantom_rows(
+                stats, batch_size - n, pad_row_stats,
+                lambda: (batch_size, inner(np.zeros(
+                    (batch_size,) + x.shape[1:], x.dtype))[1]))
             return out[:n], stats
 
     return predict
@@ -94,7 +122,119 @@ def compile_from_params(kind: str, params: Any, target: Target) -> CompiledArtif
                             _predict=predict, flash_bytes=program.flash_bytes,
                             sram_bytes=program.sram_bytes,
                             extras=program.extras,
-                            fingerprint=fingerprint_params(kind, params))
+                            fingerprint=fingerprint_params(kind, params),
+                            _program=program)
+
+
+def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
+                    strategy: str = "auto") -> CompiledArtifact:
+    """Stage 5 (optional): replica-aware data-parallel predict over a mesh.
+
+    Returns a new artifact whose predict shards the batch axis across the
+    mesh's data-parallel replicas (see :mod:`repro.sharding.rules`), with
+    *replica-aware padding*: every replica always sees the same power-of-two
+    shard, so each device serves from the same tuned block-size entry and
+    warm jit trace as single-device serving — which is also why the sharded
+    predictions are bit-identical to single-device ones (row independence;
+    the parity suite is the oracle).
+
+    Execution strategy:
+
+    * ``spmd``  — one ``shard_map``-partitioned program; each device runs the
+      lowered predict on its shard, overflow/underflow stats are ``psum``-ed.
+      The real-mesh path (TPU/GPU pods).
+    * ``fused`` — the replica shards execute as one fused host-level batch on
+      the artifact's own specialized predict.  Chosen automatically for
+      host-emulated meshes (``--xla_force_host_platform_device_count``),
+      where all "devices" share one physical host and per-replica dispatch
+      is pure overhead; bit-identical to ``spmd`` by row independence.
+    * ``auto``  — ``fused`` on host-emulated meshes, ``spmd`` otherwise.
+    """
+    import dataclasses as _dc
+
+    from repro.sharding import rules as shrules
+
+    if artifact.kind == "lm":
+        raise TypeError(
+            "specialize_mesh supports classifier artifacts only; LM decode "
+            "shards via the model-parallel LM stack, not batch replicas")
+    if artifact.mesh is not None:
+        raise ValueError(
+            f"artifact is already specialized for mesh {artifact.mesh_key}; "
+            f"nesting mesh wrappers would double-pad every batch — "
+            f"specialize the base (single-device) artifact instead")
+    program = artifact._program
+    if program is None:
+        raise ValueError(
+            "artifact carries no lowered program (legacy pickle?); recompile "
+            "via repro.compile.compile or load() to specialize a mesh")
+    if strategy not in ("auto", "spmd", "fused"):
+        raise ValueError("strategy must be 'auto', 'spmd' or 'fused'")
+    strategy = resolve_mesh_strategy(mesh, strategy)
+    replicas = shrules.dp_size(mesh)
+    target = artifact.target
+    fixed_shard = target.batch_size if target.batch_policy == "fixed" else None
+
+    if strategy == "spmd":
+        if not program.jittable:
+            raise TypeError(
+                f"'{artifact.kind}' program is not jittable; spmd mesh "
+                f"specialization needs a traceable predict")
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        axes = shrules.batch_axes(mesh)
+        spec = shrules.batch_spec(mesh)
+
+        def _shard_fn(xs):
+            out, stats = program.predict(xs)
+            if axes:  # no batch axes -> single replica, nothing to reduce
+                stats = jax.tree_util.tree_map(
+                    lambda s: jax.lax.psum(s, axes), stats)
+            return out, stats
+
+        inner = jax.jit(shard_map(_shard_fn, mesh=mesh, in_specs=(spec,),
+                                  out_specs=(spec, P()), check_rep=False))
+    else:
+        inner = artifact._predict  # already specialized (jit + batch policy)
+
+    # Replica-aware padding must not leak phantom overflow/underflow counts
+    # into predict_with_stats — shares the fixed-batch wrapper's correction.
+    pad_row_stats: list = []
+
+    def predict(x):
+        x = np.asarray(x)
+        n = x.shape[0]
+        shard, total = shrules.replica_bucket(n, replicas)
+        if fixed_shard is not None:
+            if n > fixed_shard * replicas:
+                raise ValueError(
+                    f"batch {n} exceeds the mesh capacity "
+                    f"{fixed_shard * replicas} ({replicas} replicas x fixed "
+                    f"batch_size {fixed_shard}); recompile or grow the mesh")
+            shard, total = fixed_shard, fixed_shard * replicas
+        if total > n:
+            pad = [(0, total - n)] + [(0, 0)] * (x.ndim - 1)
+            x = np.pad(x, pad)
+        if strategy == "fused" and fixed_shard is not None:
+            outs, stats = [], None
+            for r in range(replicas):
+                o, s = inner(x[r * shard:(r + 1) * shard])
+                outs.append(np.asarray(o))
+                stats = s if stats is None else stats.merge(s)
+            out = np.concatenate(outs, axis=0)
+        else:
+            out, stats = inner(x)
+        if total == n or target.fmt is None:
+            return out[:n], stats
+        stats = _subtract_phantom_rows(
+            stats, total - n, pad_row_stats,
+            lambda: (total,
+                     predict(np.zeros((total,) + x.shape[1:], x.dtype))[1]))
+        return out[:n], stats
+
+    return _dc.replace(artifact, _predict=predict, mesh=mesh,
+                       replicas=replicas, mesh_strategy=strategy)
 
 
 def compile(model: Any, target: Optional[Target] = None, **kwargs) -> CompiledArtifact:

@@ -25,7 +25,24 @@ from repro.train.checkpoint import (LEAF_KEY as _LEAF_KEY,
 
 from .target import Target
 
-__all__ = ["CompiledArtifact", "load"]
+__all__ = ["CompiledArtifact", "load", "mesh_descriptor"]
+
+
+def mesh_descriptor(mesh: Optional[Any], strategy: Optional[str]) -> Optional[Tuple]:
+    """Hashable (axes, device ids, strategy) descriptor of a mesh
+    specialization — the cache-key component for mesh-specialized artifacts.
+
+    Device identity is part of the key: two same-shaped meshes over
+    *disjoint* device sets (splitting a host's devices between endpoints)
+    must not alias to one artifact, or the second endpoint would silently
+    serve on the first mesh's devices.  ``None`` for single-device
+    artifacts."""
+    if mesh is None:
+        return None
+    devs = list(mesh.devices.flat)
+    return (tuple((a, int(mesh.shape[a])) for a in mesh.axis_names),
+            devs[0].platform if devs else "cpu",
+            tuple(int(d.id) for d in devs), strategy)
 
 _ARCHIVE_FORMAT = "repro-compiled-artifact"
 _ARCHIVE_VERSION = 1
@@ -68,12 +85,24 @@ class CompiledArtifact:
     sram_bytes: int = 0  # activation scratch (paper: SRAM / VMEM working set)
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict, repr=False)
     # sha256 of the extracted parameter tree (survives discard_params);
-    # (fingerprint, target) keys the serving-layer artifact cache.
+    # (fingerprint, target, mesh_key) keys the serving-layer artifact cache.
     fingerprint: str = ""
+    # The lowered program (repro.compile.registry.Lowered) the predict was
+    # specialized from; specialize_mesh re-specializes it for a device mesh.
+    _program: Optional[Any] = dataclasses.field(default=None, repr=False)
+    # Mesh specialization (None / 1 / None for single-device artifacts).
+    mesh: Optional[Any] = dataclasses.field(default=None, repr=False)
+    replicas: int = 1
+    mesh_strategy: Optional[str] = None
 
     @property
-    def cache_key(self) -> Tuple[str, Target]:
-        return (self.fingerprint, self.target)
+    def mesh_key(self) -> Optional[Tuple]:
+        """Hashable mesh descriptor for cache keying (None = single-device)."""
+        return mesh_descriptor(self.mesh, self.mesh_strategy)
+
+    @property
+    def cache_key(self) -> Tuple[str, Target, Optional[Tuple]]:
+        return (self.fingerprint, self.target, self.mesh_key)
 
     @property
     def max_supported_batch(self) -> Optional[int]:
@@ -81,11 +110,19 @@ class CompiledArtifact:
 
         The micro-batching scheduler clamps its bucket ladder to this, so a
         ``batch_policy='fixed'`` artifact is never fed a batch it would
-        reject.
+        reject.  A mesh-specialized artifact serves one fixed batch *per
+        replica*, so its ceiling scales with the replica count.
         """
         if self.target.batch_policy == "fixed":
-            return self.target.batch_size
+            return self.target.batch_size * max(1, self.replicas)
         return None
+
+    def specialize_mesh(self, mesh: Any, strategy: str = "auto") -> "CompiledArtifact":
+        """Replica-aware data-parallel artifact over ``mesh`` (new artifact;
+        see :func:`repro.compile.api.specialize_mesh` for the strategies)."""
+        from .api import specialize_mesh as _specialize_mesh
+
+        return _specialize_mesh(self, mesh, strategy)
 
     # -- inference -----------------------------------------------------------
     def predict(self, x: np.ndarray) -> np.ndarray:
@@ -112,15 +149,21 @@ class CompiledArtifact:
         each batch size in ``batches`` — default: the power-of-two ladder up
         to ``max_supported_batch`` (or 64).  Each call populates the
         autotuner's shape-keyed entry (persisted to the on-disk JSON cache,
-        see ``repro.kernels.tune``) and the corresponding jit trace, so the
-        first real request in every bucket hits warm caches.  Returns self.
+        see ``repro.kernels.tune``, device-keyed) and the corresponding jit
+        trace, so the first real request in every bucket hits warm caches.
+
+        A mesh-specialized artifact walks the *mesh-level* ladder — replicas
+        x the per-replica power-of-two shard ladder (up to the per-replica
+        cap) — so every device's shard shape is tuned and every mesh bucket's
+        program is traced before traffic.  Returns self.
         """
         row = np.asarray(example)
         if row.ndim > 1:
             row = row[0]
         if batches is None:
-            top = self.max_supported_batch or 64
-            ladder, b = [], 1
+            r = max(1, self.replicas)
+            top = self.max_supported_batch or 64 * r
+            ladder, b = [], r
             while b < top:
                 ladder.append(b)
                 b *= 2

@@ -9,6 +9,14 @@ Pallas TPU kernels) and the batch policy the artifact is specialized for.
 Replaces the old ``repro.core.convert.ConversionOptions`` (which only knew
 the three paper axes and hard-coded the backend); ``ConversionOptions`` is
 kept as a deprecation shim over this class.
+
+Deliberately NOT a Target axis: device-mesh placement.  A Target describes
+*what program* to build (its bytes are placement-invariant — the golden
+vectors pin this); which mesh the artifact serves on is a runtime decision
+applied afterwards via ``CompiledArtifact.specialize_mesh`` and keyed
+separately in the serving cache as ``(fingerprint, Target, mesh
+descriptor)``, so one Target compiles once and fans out to any replica
+count without recompiling the lowering.
 """
 
 from __future__ import annotations

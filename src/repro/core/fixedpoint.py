@@ -202,17 +202,23 @@ def _rshift_round(x_wide: jax.Array, m: int) -> jax.Array:
     """Arithmetic right shift by ``m`` with round-to-nearest (ties away from 0).
 
     Matches the MCU semantics ``(x + (1 << (m-1))) >> m`` for positive x and
-    its symmetric form for negative x, implemented branch-free.
+    its symmetric form for negative x, implemented branch-free.  Computed via
+    floor-shift + remainder so no intermediate (``abs(x)`` or ``x + half``)
+    can overflow the container: the result is exact for every representable
+    ``x`` including the dtype's min/max, which the fused-kernel epilogue
+    relies on when the int32 accumulator sits at a saturation boundary.
     """
     if m == 0:
         return x_wide
     half = jnp.asarray(1, x_wide.dtype) << (m - 1)
-    # Round half away from zero: add +half for x>=0, subtract (half-1)... use
-    # the standard symmetric trick: (x + sign(x)*half) >> m via floor division
-    # on the absolute value.
-    sign = jnp.where(x_wide < 0, -1, 1).astype(x_wide.dtype)
-    rounded = sign * ((jnp.abs(x_wide) + half) >> m)
-    return rounded
+    floor_q = x_wide >> m  # floor(x / 2^m): arithmetic shift
+    rem = x_wide - (floor_q << m)  # remainder in [0, 2^m)
+    # Ties round away from zero: for x >= 0 bump on rem >= half, for x < 0
+    # (where floor sits one below the truncated quotient) on rem > half.
+    # Compared as rem > half - (x >= 0): rem itself can be the dtype max
+    # (x = max, m = width - 1), so nothing may be added to it.
+    bump = rem > (half - (x_wide >= 0))
+    return floor_q + bump.astype(x_wide.dtype)
 
 
 def rshift_round_saturate(acc: jax.Array, fmt: FxpFormat) -> jax.Array:

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.fixedpoint import FxpFormat
 from repro.core.trees import TreeArrays
@@ -221,21 +222,34 @@ def pwl_activation(x: jax.Array, variant: str = "pwl4",
 # ``object.__setattr__(tree, "_packed_kernel", ...)`` mutation of user-owned
 # model objects.  The weakref keeps identity honest across id() reuse and
 # evicts the entry when the tree is collected.
-_PACKED_TREES: Dict[int, Tuple[weakref.ref, tuple]] = {}
+_PACKED_TREES: Dict[int, Tuple[weakref.ref, dict]] = {}
 
 
 def _packed_operands(tree: TreeArrays) -> tuple:
     key = id(tree)
     hit = _PACKED_TREES.get(key)
     if hit is not None and hit[0]() is tree:
-        return hit[1]
-    packed = tuple(jnp.asarray(t) for t in pack_tree(tree))
-    try:
-        ref = weakref.ref(tree, lambda _, k=key: _PACKED_TREES.pop(k, None))
-    except TypeError:  # unexpected weakref-less tree type: just don't cache
-        return packed
-    _PACKED_TREES[key] = (ref, packed)
-    return packed
+        entry = hit[1]
+    else:
+        # numpy first: the first call may happen inside a jit/shard_map
+        # trace, and a jnp constant created there is a tracer — caching it
+        # leaks the trace and poisons every later call (seen as
+        # UnexpectedTracerError when a mesh-specialized artifact traced the
+        # tree kernel first).
+        entry = {"np": tuple(np.asarray(t) for t in pack_tree(tree))}
+        try:
+            ref = weakref.ref(tree,
+                              lambda _, k=key: _PACKED_TREES.pop(k, None))
+            _PACKED_TREES[key] = (ref, entry)
+        except TypeError:  # unexpected weakref-less tree type: don't cache
+            pass
+    # Memoize device-resident copies once we are outside any trace (a
+    # concrete device array is a legal jit constant, so later traced calls
+    # reuse it too); the eager serving hot path then never re-uploads the
+    # packed operands per dispatch.
+    if "dev" not in entry and jax.core.trace_state_clean():
+        entry["dev"] = tuple(jnp.asarray(t) for t in entry["np"])
+    return entry.get("dev", entry["np"])
 
 
 def tree_predict(tree: TreeArrays, x: jax.Array, impl: str = "pallas",

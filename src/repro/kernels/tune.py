@@ -30,6 +30,7 @@ matters there.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import threading
@@ -38,7 +39,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 
 __all__ = ["matmul_blocks", "batch_bucket", "pwl_blocks", "pow2ceil",
-           "cache_path", "clear_memory_cache", "cache_snapshot"]
+           "cache_path", "clear_memory_cache", "cache_snapshot", "device_key"]
 
 Blocks = Tuple[int, int, int]
 Runner = Callable[[Blocks], float]
@@ -63,6 +64,22 @@ _disk_loaded_from: Optional[str] = None
 def pow2ceil(n: int) -> int:
     """Smallest power of two >= n (n >= 1)."""
     return 1 << max(0, (int(n) - 1).bit_length())
+
+
+def device_key(device=None) -> str:
+    """Cache-key component naming the hardware a tuning entry was measured on.
+
+    ``platform:device_kind`` (e.g. ``cpu:cpu``, ``tpu:TPU_v4``) — block
+    timings transfer between devices of the same kind but not across
+    hardware generations, so a mesh of mixed fleets (or a pre-tuned cache
+    shipped to a different pod) never serves a foreign device's blocks.
+    ``device`` defaults to the default jax device — the one the kernels
+    dispatch (and the tuner times) on.
+    """
+    if device is None:
+        device = jax.devices()[0]
+    kind = getattr(device, "device_kind", "") or device.platform
+    return f"{device.platform}:{kind}".replace(" ", "_")
 
 
 def batch_bucket(b: int, cap: int = 256) -> int:
@@ -120,23 +137,53 @@ def _load_disk() -> None:
     _merge_disk_into_memory(path)
 
 
+@contextlib.contextmanager
+def _save_lock(path: str):
+    """Advisory cross-process lock serializing read-merge-replace cycles.
+
+    ``os.replace`` alone makes each write atomic, but the *union* needs the
+    whole read-merge-write window exclusive: a sibling process whose entries
+    land between our read and our replace would be clobbered.  Posix flock
+    on a sidecar file; platforms without fcntl fall back to lock-free
+    best-effort (the pre-existing behavior)."""
+    try:
+        import fcntl
+    except ImportError:  # non-posix: keep best-effort semantics
+        yield
+        return
+    with open(f"{path}.lock", "a+") as lockf:
+        fcntl.flock(lockf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lockf, fcntl.LOCK_UN)
+
+
 def _save_disk() -> None:
     """Best-effort atomic rewrite of the disk cache from memory.
 
-    Re-merges the current on-disk content first, so concurrent processes
-    tuning disjoint keys union their entries instead of clobbering each
-    other (last-writer-wins only applies per key, which is harmless —
-    both writers tuned the same shape).
+    Re-merges the current on-disk content first — under a cross-process
+    file lock — so concurrent writers (sibling processes in a serving
+    fleet) union their entries instead of clobbering each other
+    (last-writer-wins only applies per key, which is harmless — both
+    writers tuned the same shape).
+
+    Must be called WITHOUT ``_lock`` held: the flock can block on a slow
+    sibling's disk I/O, and warm in-memory lookups must never wait behind
+    it.  ``_lock`` is taken only for the brief merge + snapshot.
     """
     path = cache_path()
     try:
-        _merge_disk_into_memory(path)
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        with open(tmp, "w") as f:
-            json.dump({k: list(v) for k, v in sorted(_memory.items())}, f,
-                      indent=0)
-        os.replace(tmp, path)
+        with _save_lock(path):
+            with _lock:
+                _merge_disk_into_memory(path)
+                snapshot = dict(_memory)
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump({k: list(v) for k, v in sorted(snapshot.items())},
+                          f, indent=0)
+            os.replace(tmp, path)
     except OSError:
         pass  # read-only FS etc.: tuning still works, just not persisted
 
@@ -228,10 +275,16 @@ def matmul_blocks(kind: str, m: int, k: int, n: int, bits: int,
 
     M is bucketed to its power of two (serving batch ladder) before keying;
     the first lookup per key tunes and persists, later lookups are a dict
-    hit — including across processes via the JSON disk cache.
+    hit — including across processes via the JSON disk cache.  Entries are
+    keyed by the *dispatching* device's hardware kind (see
+    :func:`device_key`): replica-sharded serving on a homogeneous mesh
+    tunes once per shard shape, and a cache shipped to different hardware
+    never serves a foreign generation's blocks.  (There is deliberately no
+    way to tune *for* another device than the one the runner measures on —
+    a mislabeled timing is worse than a retune.)
     """
     mb = batch_bucket(m, cap=1 << 30)
-    key = f"{kind}|{mb}x{int(k)}x{int(n)}|w{int(bits)}|{jax.default_backend()}"
+    key = f"{kind}|{mb}x{int(k)}x{int(n)}|w{int(bits)}|{device_key()}"
     with _lock:
         hit = _memory.get(key)
         if hit is not None:
@@ -247,5 +300,5 @@ def matmul_blocks(kind: str, m: int, k: int, n: int, bits: int,
     blocks = _choose(mb, int(k), int(n), int(bits), runner)
     with _lock:
         blocks = _memory.setdefault(key, blocks)
-        _save_disk()
+    _save_disk()  # outside _lock: the cross-process flock must not stall hits
     return blocks

@@ -2,14 +2,22 @@
 
 A thin CLI over :class:`repro.serve.InferenceService`: the arch is compiled
 into a :class:`~repro.compile.CompiledArtifact` through the service's
-artifact cache (dedupes recompiles by ``(fingerprint, Target)``), hosted on
-a named endpoint, and driven through the router — so the CLI exercises the
-exact code path a long-lived server would, including per-endpoint stats.
+artifact cache (dedupes recompiles by ``(fingerprint, Target, mesh)``),
+hosted on a named endpoint, and driven through the router — so the CLI
+exercises the exact code path a long-lived server would, including
+per-endpoint stats.
 
 The conversion options remain fields of one :class:`~repro.compile.Target`:
 weight-only int8 (per-channel or faithful global Qn.m), int8 KV cache, and
 PWL gate sigmoids (threaded through ``ArchConfig.gate_sigmoid``).  Reduced
 configs on CPU; `--full` for pod scale.
+
+``--classifier {tree,mlp,logistic}`` serves a paper-style classifier
+endpoint instead of an LM arch; ``--dp N`` shards it data-parallel across an
+N-replica serving mesh (``repro.sharding.rules.make_serving_mesh``) with
+replica-aware buckets — on CPU, export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first to emulate the
+mesh.
 """
 
 from __future__ import annotations
@@ -23,7 +31,7 @@ import numpy as np
 from repro.compile import LMModel, Target
 from repro.configs import ARCH_IDS, get_config
 from repro.lm import model as M
-from repro.serve import InferenceService
+from repro.serve import BatchingPolicy, InferenceService
 
 # CLI flag -> (Target.number_format, Target.weight_scale)
 _WEIGHT_MODES = {
@@ -33,9 +41,52 @@ _WEIGHT_MODES = {
 }
 
 
+def serve_classifier(args) -> None:
+    """Serve a synthetic-blobs classifier endpoint, optionally DP-sharded."""
+    from repro.models import (synthetic_blobs, train_decision_tree,
+                              train_logistic, train_mlp)
+    from repro.sharding.rules import make_serving_mesh
+
+    x, y, c = synthetic_blobs(2048)
+    trainers = {
+        "tree": lambda: train_decision_tree(x[:1024], y[:1024], c, max_depth=8),
+        "mlp": lambda: train_mlp(x[:1024], y[:1024], c, hidden=(32,), epochs=8),
+        "logistic": lambda: train_logistic(x[:1024], y[:1024], c, epochs=15),
+    }
+    model = trainers[args.classifier]()
+    target = Target(number_format=args.format, backend=args.backend)
+    mesh = make_serving_mesh(args.dp) if args.dp > 1 else None
+
+    svc = InferenceService()
+    try:
+        ep = svc.register(args.classifier, model, target, mesh=mesh,
+                          policy=BatchingPolicy(max_batch=64 * max(1, args.dp)))
+        art = ep.artifact
+        print(f"endpoint {args.classifier}: {target.number_format}/"
+              f"{target.backend}, replicas={art.replicas}"
+              + (f" ({art.mesh_strategy})" if art.mesh is not None else "")
+              + f", buckets={ep.policy.buckets()}")
+        rows = x[-args.requests:]
+        svc.predict(args.classifier, rows[:1])  # absorb warmup
+        t0 = time.perf_counter()
+        preds = svc.predict(args.classifier, rows)
+        dt = time.perf_counter() - t0
+        print(f"{rows.shape[0]} rows: {rows.shape[0] / dt:,.0f} rows/s "
+              f"(accuracy {float(np.mean(preds == y[-args.requests:])):.3f})")
+        if args.stats:
+            snap = svc.stats()[args.classifier]
+            print(f"endpoint {args.classifier}: {snap['rows']:.0f} rows, "
+                  f"p50 {snap['p50_ms']:.1f}ms, p95 {snap['p95_ms']:.1f}ms, "
+                  f"fill {snap['batch_fill']:.2f}")
+    finally:
+        svc.close()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--classifier", choices=["tree", "mlp", "logistic"],
+                    help="serve a classifier endpoint instead of an LM arch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--weights", choices=sorted(_WEIGHT_MODES), default="bf16")
@@ -45,7 +96,22 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--stats", action="store_true",
                     help="print the endpoint's serving stats after the run")
+    # classifier-mode knobs
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel serving replicas (classifier mode); "
+                         "requires >= dp jax devices")
+    ap.add_argument("--format", choices=["flt", "fxp32", "fxp16", "fxp8"],
+                    default="fxp16", help="classifier serving number format")
+    ap.add_argument("--backend", choices=["ref", "xla", "pallas"],
+                    default="xla", help="classifier serving backend")
+    ap.add_argument("--requests", type=int, default=512,
+                    help="rows of traffic to drive in classifier mode")
     args = ap.parse_args(argv)
+
+    if (args.arch is None) == (args.classifier is None):
+        ap.error("pass exactly one of --arch or --classifier")
+    if args.classifier:
+        return serve_classifier(args)
 
     cfg = get_config(args.arch)
     if not args.full:

@@ -6,6 +6,7 @@ semantics: J48/CART decision trees, multinomial logistic regression, MLP with
 sigmoid hidden units, and SVMs with linear / polynomial / RBF kernels.
 """
 
+from .blobs import synthetic_blobs
 from .decision_tree import DecisionTreeModel, train_decision_tree
 from .logistic import LogisticModel, train_logistic
 from .mlp import MLPModel, train_mlp
@@ -21,4 +22,5 @@ __all__ = [
     "SVMModel",
     "train_linear_svm",
     "train_kernel_svm",
+    "synthetic_blobs",
 ]

@@ -10,8 +10,8 @@ Layers (bottom-up):
 * :mod:`repro.serve.router` — :class:`ModelRouter`: several compiled
   artifacts behind name-keyed :class:`Endpoint`\\ s with per-artifact stats
   (QPS, p50/p95 latency, batch-fill ratio).
-* :mod:`repro.serve.cache` — :class:`ArtifactCache`: recompile dedupe keyed
-  by ``(model fingerprint, Target)``.
+* :mod:`repro.serve.cache` — :class:`ArtifactCache`: single-flight recompile
+  dedupe keyed by ``(model fingerprint, Target, mesh)``.
 * :mod:`repro.serve.service` — :class:`InferenceService`: the facade
   ``launch/serve.py`` and the benchmarks drive.
 """

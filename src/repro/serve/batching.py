@@ -47,6 +47,12 @@ class BatchingPolicy:
       micro-batch is served (triggered lazily by the first request, which
       supplies the row shape and therefore absorbs the trace latency;
       subsequent requests never hit an untraced bucket).
+    * ``replicas``    — data-parallel replica count of the endpoint's
+      artifact (set automatically by :class:`repro.serve.router.Endpoint`
+      from ``CompiledArtifact.replicas``).  The bucket ladder becomes
+      *replica-aware*: every bucket is ``replicas`` x a power-of-two shard,
+      so a mesh-specialized artifact always hands each device the same
+      tuned pow2 shard the single-device path serves.
     """
 
     max_batch: int = 64
@@ -54,6 +60,7 @@ class BatchingPolicy:
     eager_when_idle: bool = True
     bucketing: str = "pow2"
     warmup: bool = True
+    replicas: int = 1
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -62,13 +69,15 @@ class BatchingPolicy:
             raise ValueError("max_wait_ms must be >= 0")
         if self.bucketing not in ("pow2", "exact"):
             raise ValueError("bucketing must be 'pow2' or 'exact'")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
 
     def buckets(self) -> Tuple[int, ...]:
         """The closed set of batch shapes predict will be called with (in
         exact mode there is no closed set; only the cap is warmed up)."""
         if self.bucketing == "exact":
             return (self.max_batch,)
-        out, b = [], 1
+        out, b = [], min(self.replicas, self.max_batch)
         while b < self.max_batch:
             out.append(b)
             b *= 2
@@ -90,6 +99,29 @@ class BatchingPolicy:
         if max_supported is None or self.max_batch <= max_supported:
             return self
         return dataclasses.replace(self, max_batch=max_supported)
+
+    def with_replicas(self, replicas: int,
+                      align_top: bool = True) -> "BatchingPolicy":
+        """Replica-aware variant of this policy (no-op when it matches).
+
+        ``align_top`` rounds ``max_batch`` up to ``replicas * pow2`` so the
+        top bucket is exactly a replica-aligned shard set — otherwise a full
+        dispatch on a non-power-of-two replica count would be silently
+        re-padded inside the mesh artifact (e.g. 64 rows on 6 replicas pad
+        to 96: computed shape 96, warmed/traced shape 64, up to ~50% padded
+        work on the busiest bucket).  Callers whose artifact has a hard
+        batch ceiling (fixed batch policy — already replica-aligned by
+        construction) pass ``align_top=False``.
+        """
+        replicas = max(1, int(replicas))
+        if replicas == self.replicas:
+            return self
+        max_batch = self.max_batch
+        if align_top and replicas > 1:
+            per = -(-max_batch // replicas)
+            max_batch = replicas * (1 << max(0, (per - 1).bit_length()))
+        return dataclasses.replace(self, replicas=replicas,
+                                   max_batch=max_batch)
 
 
 @dataclasses.dataclass

@@ -1,40 +1,54 @@
-"""Artifact cache: dedupe recompiles by ``(model fingerprint, Target)``.
+"""Artifact cache: dedupe recompiles by ``(fingerprint, Target, mesh)``.
 
 Compiling is the expensive step (quantize + lower + jit warm paths); hosting
 the same model under several endpoints, or re-registering it after a config
 reload, should not pay it twice.  The cache keys on the sha256 fingerprint
 of the *extracted* parameter tree (see :mod:`repro.compile.fingerprint`)
-plus the frozen Target, so equal parameters hit regardless of which model
+plus the frozen Target plus the mesh descriptor (axes/platform/strategy) for
+replica-sharded artifacts, so equal parameters hit regardless of which model
 object they came from.
+
+Compilation is *single-flight*: when N threads race a miss on the same key
+(a restart storm re-registering every endpoint at once), exactly one thread
+compiles while the others block on its result — N racing registrations
+yield one artifact object, not N identical compiles with a last-writer-wins
+cache entry.
 """
 
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Any, Optional, Tuple
+from concurrent.futures import Future
+from typing import Any, Dict, Optional, Tuple
 
 from repro.compile import (CompiledArtifact, Target, compile_from_params,
-                           fingerprint_params, get_lowering, model_kind)
+                           fingerprint_params, get_lowering, model_kind,
+                           resolve_mesh_strategy, specialize_mesh)
+from repro.compile.artifact import mesh_descriptor
 
 __all__ = ["ArtifactCache"]
 
+# (fingerprint, Target, mesh descriptor or None)
+CacheKey = Tuple[str, Target, Optional[Tuple]]
+
 
 class ArtifactCache:
-    """LRU cache of compiled artifacts keyed by ``(fingerprint, Target)``."""
+    """LRU cache of compiled artifacts keyed by ``(fingerprint, Target,
+    mesh)``, with single-flight compilation under concurrency."""
 
     def __init__(self, capacity: Optional[int] = None):
         self.capacity = capacity
         self.hits = 0
         self.misses = 0
         self._lock = threading.Lock()
-        self._entries: "OrderedDict[Tuple[str, Target], CompiledArtifact]" = \
-            OrderedDict()
+        self._entries: "OrderedDict[CacheKey, CompiledArtifact]" = OrderedDict()
+        self._inflight: Dict[CacheKey, Future] = {}
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, key: Tuple[str, Target]) -> Optional[CompiledArtifact]:
+    def get(self, key: CacheKey) -> Optional[CompiledArtifact]:
         with self._lock:
             art = self._entries.get(key)
             if art is not None:
@@ -52,24 +66,55 @@ class ArtifactCache:
                 self._entries.popitem(last=False)
         return artifact
 
-    def get_or_compile(self, model: Any, target: Target) -> CompiledArtifact:
-        """Return the cached artifact for (model params, target), compiling
-        on miss.  Extraction runs unconditionally (it is cheap and yields the
-        fingerprint); the quantize/lower/specialize stages are what a hit
-        skips."""
+    def get_or_compile(self, model: Any, target: Target,
+                       mesh: Any = None,
+                       strategy: str = "auto") -> CompiledArtifact:
+        """Return the cached artifact for (model params, target, mesh),
+        compiling on miss.  Extraction runs unconditionally (it is cheap and
+        yields the fingerprint); the quantize/lower/specialize stages are
+        what a hit skips.  Concurrent misses on one key compile once
+        (single-flight); the racing callers receive the winner's artifact.
+        """
         kind = model_kind(model)
         params = get_lowering(kind).extract_params(model)
-        key = (fingerprint_params(kind, params), target)
+        mesh_key = None
+        if mesh is not None:
+            mesh_key = mesh_descriptor(mesh, resolve_mesh_strategy(mesh, strategy))
+        key: CacheKey = (fingerprint_params(kind, params), target, mesh_key)
         with self._lock:
             art = self._entries.get(key)
             if art is not None:
                 self._entries.move_to_end(key)
                 self.hits += 1
                 return art
-        art = compile_from_params(kind, params, target)
+            fut = self._inflight.get(key)
+            if fut is None:
+                fut = Future()
+                self._inflight[key] = fut
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            art = fut.result()
+            with self._lock:
+                self.hits += 1
+            return art
+        try:
+            art = compile_from_params(kind, params, target)
+            if mesh is not None:
+                art = specialize_mesh(art, mesh, strategy)
+        except BaseException as e:
+            with self._lock:
+                self._inflight.pop(key, None)
+            fut.set_exception(e)
+            raise
         with self._lock:
             self.misses += 1
-        return self.put(art)
+        self.put(art)
+        with self._lock:
+            self._inflight.pop(key, None)
+        fut.set_result(art)
+        return art
 
     def stats(self) -> dict:
         with self._lock:

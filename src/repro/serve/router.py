@@ -53,16 +53,27 @@ class EndpointStats:
         with self._lock:
             elapsed = max(time.perf_counter() - self._t0, 1e-9)
             lat = np.asarray(self._latencies, np.float64)
+            # Percentiles need at least two samples to interpolate between;
+            # below that, report the lone observation (or 0.0 when idle)
+            # rather than percentile-ing a near-empty history.  Batch fill is
+            # likewise only defined once a bucket has actually been
+            # dispatched: an idle endpoint reports fill 1.0 (no padding has
+            # been wasted), not a spurious 0% that trips dashboards.
+            if lat.size >= 2:
+                p50 = float(np.percentile(lat, 50) * 1e3)
+                p95 = float(np.percentile(lat, 95) * 1e3)
+            else:
+                p50 = p95 = float(lat[0] * 1e3) if lat.size else 0.0
             return {
                 "requests": self.n_requests,
                 "rows": self.n_rows,
                 "batches": self.n_batches,
                 "qps": self.n_requests / elapsed,
                 "rows_per_s": self.n_rows / elapsed,
-                "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
-                "p95_ms": float(np.percentile(lat, 95) * 1e3) if lat.size else 0.0,
+                "p50_ms": p50,
+                "p95_ms": p95,
                 "batch_fill": (self.n_rows / self._bucket_rows
-                               if self._bucket_rows else 0.0),
+                               if self._bucket_rows else 1.0),
                 "mean_batch_rows": (self.n_rows / self.n_batches
                                     if self.n_batches else 0.0),
             }
@@ -76,9 +87,15 @@ class Endpoint:
         self.name = name
         self.artifact = artifact
         self.stats = EndpointStats()
-        # Never build buckets the artifact would reject (fixed batch policy).
+        # Never build buckets the artifact would reject (fixed batch policy),
+        # and make the bucket ladder replica-aware for mesh-specialized
+        # artifacts (each bucket = replicas x a pow2 per-device shard; the
+        # top bucket only rounds up to alignment when the artifact has no
+        # hard ceiling to respect).
         self.policy = (policy or BatchingPolicy()).clamped(
-            artifact.max_supported_batch)
+            artifact.max_supported_batch).with_replicas(
+            getattr(artifact, "replicas", 1),
+            align_top=artifact.max_supported_batch is None)
         self.batcher: Optional[MicroBatcher] = None
         if artifact.kind != "lm":
             self.batcher = MicroBatcher(artifact.predict, self.policy,

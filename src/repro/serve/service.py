@@ -41,14 +41,38 @@ class InferenceService:
     def register(self, name: str, model: Any = None,
                  target: Optional[Target] = None,
                  artifact: Optional[CompiledArtifact] = None,
-                 policy: Optional[BatchingPolicy] = None) -> Endpoint:
+                 policy: Optional[BatchingPolicy] = None,
+                 mesh: Any = None, mesh_strategy: str = "auto") -> Endpoint:
         """Host ``model`` compiled for ``target`` (deduped through the
-        artifact cache), or a pre-compiled ``artifact``, under ``name``."""
+        artifact cache), or a pre-compiled ``artifact``, under ``name``.
+
+        ``mesh`` shards the endpoint data-parallel across the mesh's
+        replicas (``CompiledArtifact.specialize_mesh``): the scheduler's
+        buckets become replica-aware and each device serves a tuned pow2
+        shard.  Mesh-specialized artifacts are cached per (fingerprint,
+        Target, mesh descriptor), so single-device and sharded endpoints of
+        one model coexist without recompiling the lowering.
+        """
         if (artifact is None) == (model is None):
             raise TypeError("pass either model (+ target) or artifact")
         if artifact is None:
-            art = self.cache.get_or_compile(model, target or Target())
+            art = self.cache.get_or_compile(model, target or Target(),
+                                            mesh=mesh, strategy=mesh_strategy)
         else:
+            if mesh is not None:
+                from repro.compile import resolve_mesh_strategy
+                from repro.compile.artifact import mesh_descriptor
+
+                want = mesh_descriptor(
+                    mesh, resolve_mesh_strategy(mesh, mesh_strategy))
+                if artifact.mesh is None:
+                    artifact = artifact.specialize_mesh(mesh, mesh_strategy)
+                elif artifact.mesh_key != want:
+                    raise ValueError(
+                        f"artifact is already specialized for mesh "
+                        f"{artifact.mesh_key} but register() was asked for "
+                        f"{want}; pass the unspecialized artifact (or drop "
+                        f"the mesh argument to host it as-is)")
             art = self.cache.put(artifact) if artifact.fingerprint else artifact
         return self.router.register(name, art, policy)
 

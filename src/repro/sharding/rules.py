@@ -23,7 +23,9 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["batch_axes", "model_axis", "spec_for", "shard", "Rules"]
+__all__ = ["batch_axes", "model_axis", "spec_for", "shard", "Rules",
+           "make_serving_mesh", "dp_size", "batch_spec", "replica_bucket",
+           "is_host_emulated"]
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -100,3 +102,79 @@ def shard(x: jax.Array, logical_axes: Sequence[Optional[str]],
     spec = rules.spec(logical_axes, x.shape)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# serving meshes: batch-axis placement for data-parallel inference
+# --------------------------------------------------------------------------
+# The classifier serving path (repro.serve + CompiledArtifact.specialize_mesh)
+# is pure data parallelism: every replica holds the full (tiny) model and
+# serves a batch shard.  These helpers are the single source of truth for
+# "which mesh axes carry the batch" — consumed by serve (replica-aware
+# buckets), compile (mesh-specialized predict programs), and launch (--dp).
+
+
+def make_serving_mesh(n_devices: Optional[int] = None,
+                      devices: Optional[Sequence] = None) -> Mesh:
+    """A 1-D pure-DP ``('data',)`` mesh over ``n_devices`` (default: all).
+
+    The canonical mesh for replica-sharded classifier serving; the LM stack's
+    2-D/3-D meshes (see :func:`repro.launch.mesh.make_production_mesh`) also
+    work with the serving layer — only their batch axes carry shards.
+    """
+    if devices is None:
+        devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"requested {n_devices} devices but only {len(devices)} "
+                f"are available (on CPU, set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=<n> before importing "
+                f"jax to emulate a host mesh)")
+        devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), ("data",))
+
+
+def dp_size(mesh: Mesh) -> int:
+    """Number of data-parallel replicas the mesh serves batch shards on.
+
+    The product of the batch axes' sizes (``pod`` x ``data``); a mesh with
+    no batch axis (pure model parallelism) has one replica.
+    """
+    axes = batch_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """PartitionSpec placing a leading batch dimension on the batch axes."""
+    axes = batch_axes(mesh)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def replica_bucket(n: int, replicas: int) -> Tuple[int, int]:
+    """Replica-aware padding: ``(shard, total)`` for ``n`` rows on ``replicas``.
+
+    Every replica must see the same power-of-two shard (one tuned block-size
+    entry, one jit trace per bucket — the serve ladder, now per device), so
+    ``n`` rows pad up to ``replicas * pow2ceil(ceil(n / replicas))``.  Uses
+    the tuner's own ``pow2ceil`` so the replica shards and the tune-cache
+    buckets can never disagree on the rounding rule.
+    """
+    from repro.kernels.tune import pow2ceil
+
+    n = max(1, int(n))
+    replicas = max(1, int(replicas))
+    shard = pow2ceil(-(-n // replicas))
+    return shard, shard * replicas
+
+
+def is_host_emulated(mesh: Mesh) -> bool:
+    """True when every mesh device is a host-platform (CPU) device.
+
+    Such meshes (``--xla_force_host_platform_device_count``) emulate
+    placement semantics but share one physical host, where per-replica
+    dispatch is pure overhead — the mesh-specialized predict then runs the
+    replica shards as one fused host batch (bit-identical by row
+    independence) instead of a real SPMD program.
+    """
+    return all(d.platform == "cpu" for d in mesh.devices.flat)

@@ -1,0 +1,155 @@
+"""Golden prediction vectors: stored bytes every backend must reproduce.
+
+The cross-backend parity suite proves ref == xla == pallas *within one jax
+version on one machine*; a silent behavior shift that moves all three
+together (a jax upgrade changing rounding, a refactor of the shared
+epilogue, an accidental retrain) would sail through it.  These golden
+vectors anchor the contract to bytes checked into the repo: for every
+registered lowering, the predictions of the canonical serving Targets on a
+fixed seeded dataset, at a fixed training seed.
+
+Layout: one ``golden_<kind>.npz`` per lowering kind, arrays keyed by a
+Target tag (e.g. ``fxp16``, ``flt``); the ``lm`` archive also stores the
+greedy 4-token generations per Target.
+
+Regenerate (only when an *intentional* numerics change lands — the diff in
+bytes is the review artifact):
+
+    PYTHONPATH=src python tests/golden/regenerate.py
+
+The test suite (``tests/test_golden_vectors.py``) imports the case builders
+below, so the stored bytes and the checked expectations can never drift
+apart structurally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# Canonical serving Targets per classifier kind (tag -> Target kwargs).
+# The ref backend generates the bytes; parity (ref == xla == pallas) and
+# mesh bit-identity extend them to every backend and mesh size.
+CLASSIFIER_TARGETS = {
+    "flt": dict(number_format="flt"),
+    "fxp32": dict(number_format="fxp32"),
+    "fxp16": dict(number_format="fxp16"),
+    "fxp16_pwl4": dict(number_format="fxp16", sigmoid="pwl4"),
+}
+
+LM_TARGETS = {
+    "flt": dict(number_format="flt"),
+    "fxp8_qnm_pwl4": dict(number_format="fxp8", weight_scale="qnm",
+                          sigmoid="pwl4"),
+    "fxp8_perchannel_kv8": dict(number_format="fxp8",
+                                weight_scale="per_channel", kv_cache="int8"),
+}
+
+N_EVAL_ROWS = 128  # rows of the seeded dataset predicted into the archive
+LM_PROMPT = (3, 7, 11)
+LM_GEN_TOKENS = 4
+
+
+def golden_path(kind: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"golden_{kind}.npz")
+
+
+def make_dataset():
+    """The fixed seeded blobs dataset every golden vector is computed on."""
+    rng = np.random.RandomState(0)
+    n, f, c = 600, 12, 3
+    means = rng.randn(c, f) * 4.0
+    y = rng.randint(0, c, n).astype(np.int32)
+    x = (means[y] + rng.randn(n, f)).astype(np.float32)
+    return x[:400], y[:400], x[400:400 + N_EVAL_ROWS], c
+
+
+def train_classifiers(xtr, ytr, c):
+    """Fixed-seed trainers, one model per classifier lowering kind."""
+    from repro.models import (train_decision_tree, train_kernel_svm,
+                              train_linear_svm, train_logistic, train_mlp)
+
+    return {
+        "tree": train_decision_tree(xtr, ytr, c, max_depth=6, seed=0),
+        "logistic": train_logistic(xtr, ytr, c, epochs=15, seed=0),
+        "mlp": train_mlp(xtr, ytr, c, hidden=(16,), epochs=10, seed=0),
+        "svm-linear": train_linear_svm(xtr, ytr, c, epochs=15, seed=0),
+        "svm-rbf": train_kernel_svm(xtr, ytr, c, kernel="rbf",
+                                    n_prototypes=40, epochs=10, seed=0),
+        "svm-poly": train_kernel_svm(xtr, ytr, c, kernel="poly",
+                                     n_prototypes=40, epochs=10, seed=0),
+    }
+
+
+def make_lm_model():
+    """The fixed tiny LM config + seed-0 params used for the lm goldens."""
+    import jax
+
+    from repro.compile import LMModel
+    from repro.configs import get_config
+    from repro.lm import model as M
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+                              d_head=32, d_ff=128, vocab_size=256)
+    return LMModel(cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def compute_classifier_vectors(kind: str, model, xte) -> dict:
+    """tag -> (N_EVAL_ROWS,) int32 predictions on the ref backend."""
+    from repro.compile import Target, compile
+
+    out = {}
+    for tag, kw in CLASSIFIER_TARGETS.items():
+        art = compile(model, Target(backend="ref", **kw))
+        out[tag] = np.asarray(art.predict(xte), np.int32)
+    return out
+
+
+def compute_lm_vectors() -> dict:
+    """tag -> next-token predictions and tag__gen -> greedy generations."""
+    from repro.compile import Target, compile
+
+    model = make_lm_model()
+    tok = np.asarray(LM_PROMPT, np.int32)
+    out = {}
+    for tag, kw in LM_TARGETS.items():
+        art = compile(model, Target(backend="ref", **kw))
+        out[tag] = np.asarray(art.predict(tok), np.int32)
+        out[f"{tag}__gen"] = np.asarray(
+            art.extras["generate"](tok, LM_GEN_TOKENS), np.int32)
+    return out
+
+
+def regenerate(kinds=None) -> dict:
+    """Recompute and write every golden archive; returns {kind: path}."""
+    from repro.compile import lowering_kinds
+
+    xtr, ytr, xte, c = make_dataset()
+    classifiers = train_classifiers(xtr, ytr, c)
+    assert set(classifiers) | {"lm"} == set(lowering_kinds()), (
+        "golden coverage out of date: registry has "
+        f"{sorted(lowering_kinds())}, goldens cover "
+        f"{sorted(set(classifiers) | {'lm'})} — add the new lowering here")
+    written = {}
+    for kind, model in classifiers.items():
+        if kinds and kind not in kinds:
+            continue
+        vecs = compute_classifier_vectors(kind, model, xte)
+        np.savez(golden_path(kind), **vecs)
+        written[kind] = golden_path(kind)
+    if not kinds or "lm" in kinds:
+        np.savez(golden_path("lm"), **compute_lm_vectors())
+        written["lm"] = golden_path("lm")
+    return written
+
+
+if __name__ == "__main__":
+    for kind, path in regenerate().items():
+        with np.load(path) as z:
+            tags = ", ".join(sorted(z.files))
+        print(f"{kind}: wrote {os.path.relpath(path)} [{tags}]")

@@ -1,0 +1,126 @@
+"""Golden-vector conformance: stored bytes anchor every backend and mesh.
+
+Layered on the parity suite: parity proves the backends agree with each
+other *today*; the goldens (``tests/golden/*.npz``, regenerated only by an
+intentional ``tests/golden/regenerate.py`` run) prove they agree with the
+bytes that shipped.  A jax upgrade or refactor that shifts all backends
+together fails here, not in production.
+
+Also the acceptance home of the sharded serving contract: a mesh-specialized
+artifact must reproduce the single-device golden bytes for every lowering,
+every strategy, and every mesh size the host can build (sizes above
+``jax.device_count()`` skip — the 8-device CI job runs them all).
+"""
+
+import numpy as np
+import pytest
+
+from golden import regenerate as G
+
+from repro.compile import Target, compile, lowering_kinds
+
+CLASSIFIER_KINDS = ("tree", "logistic", "mlp", "svm-linear", "svm-poly",
+                    "svm-rbf")
+MESH_SIZES = (1, 2, 8)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return G.make_dataset()
+
+
+@pytest.fixture(scope="module")
+def classifiers(dataset):
+    xtr, ytr, _, c = dataset
+    return G.train_classifiers(xtr, ytr, c)
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    out = {}
+    for kind in lowering_kinds():
+        with np.load(G.golden_path(kind)) as z:
+            out[kind] = {tag: z[tag] for tag in z.files}
+    return out
+
+
+def test_every_lowering_has_goldens(goldens):
+    """Coverage contract: a new lowering fails here until it ships bytes."""
+    assert set(goldens) == set(lowering_kinds())
+    for kind, vecs in goldens.items():
+        tags = G.LM_TARGETS if kind == "lm" else G.CLASSIFIER_TARGETS
+        assert set(tags) <= set(vecs), f"{kind}: missing golden tags"
+        assert all(v.dtype == np.int32 for v in vecs.values())
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+@pytest.mark.parametrize("kind", CLASSIFIER_KINDS)
+def test_classifier_backends_match_goldens(classifiers, dataset, goldens,
+                                           kind, backend):
+    """Every backend reproduces the stored bytes for every canonical Target."""
+    _, _, xte, _ = dataset
+    for tag, kw in G.CLASSIFIER_TARGETS.items():
+        art = compile(classifiers[kind], Target(backend=backend, **kw))
+        np.testing.assert_array_equal(
+            art.predict(xte), goldens[kind][tag],
+            err_msg=f"{kind}/{tag}/{backend} diverged from golden bytes")
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+def test_lm_matches_goldens(goldens, backend):
+    model = G.make_lm_model()
+    tok = np.asarray(G.LM_PROMPT, np.int32)
+    for tag, kw in G.LM_TARGETS.items():
+        art = compile(model, Target(backend=backend, **kw))
+        np.testing.assert_array_equal(
+            art.predict(tok), goldens["lm"][tag],
+            err_msg=f"lm/{tag}/{backend} next-token diverged from golden")
+        np.testing.assert_array_equal(
+            np.asarray(art.extras["generate"](tok, G.LM_GEN_TOKENS)),
+            goldens["lm"][f"{tag}__gen"],
+            err_msg=f"lm/{tag}/{backend} generation diverged from golden")
+
+
+# ---------------------------------------------------------------------------
+# sharded serving bit-identity (ISSUE 4 acceptance): mesh predictions ==
+# single-device golden bytes, every lowering x mesh size x strategy.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mesh_size", MESH_SIZES)
+@pytest.mark.parametrize("kind", CLASSIFIER_KINDS)
+def test_sharded_classifier_matches_goldens(classifiers, dataset, goldens,
+                                            kind, mesh_size):
+    import jax
+
+    from repro.sharding.rules import make_serving_mesh
+
+    if jax.device_count() < mesh_size:
+        pytest.skip(f"needs {mesh_size} devices (run under "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{mesh_size})")
+    mesh = make_serving_mesh(mesh_size)
+    for tag, kw in G.CLASSIFIER_TARGETS.items():
+        art = compile(classifiers[kind], Target(backend="xla", **kw))
+        for strategy in ("fused", "spmd"):
+            sharded = art.specialize_mesh(mesh, strategy)
+            _, _, xte, _ = dataset
+            np.testing.assert_array_equal(
+                sharded.predict(xte), goldens[kind][tag],
+                err_msg=f"{kind}/{tag}/mesh{mesh_size}/{strategy} diverged "
+                        f"from single-device golden bytes")
+
+
+def test_sharded_ragged_batches_match_goldens(classifiers, dataset, goldens):
+    """Replica-aware padding at awkward sizes (n not divisible by replicas,
+    n < replicas) still reproduces the golden bytes row-for-row."""
+    import jax
+
+    from repro.sharding.rules import make_serving_mesh
+
+    _, _, xte, _ = dataset
+    mesh = make_serving_mesh(jax.device_count())
+    art = compile(classifiers["tree"], Target(number_format="fxp16",
+                                              backend="xla"))
+    sharded = art.specialize_mesh(mesh)
+    want = goldens["tree"]["fxp16"]
+    for n in (1, 3, jax.device_count() * 3 + 1, 97):
+        np.testing.assert_array_equal(sharded.predict(xte[:n]), want[:n])

@@ -417,6 +417,62 @@ def test_pallas_tree_artifact_ragged_batch(trained, blobs_module, batch):
 
 
 # ---------------------------------------------------------------------------
+# stats edge cases: endpoints with fewer than 2 completed requests must
+# report well-defined percentiles and batch fill, not artifacts of
+# percentile-interpolating or dividing near-empty histories.
+# ---------------------------------------------------------------------------
+def test_stats_idle_endpoint_is_well_defined():
+    import warnings
+
+    from repro.serve.router import EndpointStats
+
+    stats = EndpointStats()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no RuntimeWarnings from numpy
+        snap = stats.snapshot()
+    assert snap["requests"] == 0 and snap["batches"] == 0
+    assert snap["p50_ms"] == 0.0 and snap["p95_ms"] == 0.0
+    assert snap["batch_fill"] == 1.0  # no padding wasted yet, not "0% full"
+    assert snap["mean_batch_rows"] == 0.0
+    assert all(np.isfinite(v) for v in snap.values())
+
+
+def test_stats_single_request_reports_its_latency(artifacts, blobs_module):
+    """With one completed request, p50 == p95 == that request's latency
+    (there is nothing to interpolate between)."""
+    import warnings
+
+    _, _, xte, _, _ = blobs_module
+    svc = InferenceService()
+    svc.register("one", artifact=artifacts["tree"])
+    try:
+        svc.predict("one", xte[0])
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            snap = svc.stats()["one"]
+    finally:
+        svc.close()
+    assert snap["requests"] == 1
+    assert snap["p50_ms"] == snap["p95_ms"] > 0.0
+    assert 0 < snap["batch_fill"] <= 1.0
+    assert all(np.isfinite(v) for v in snap.values())
+
+
+def test_stats_two_requests_percentiles_ordered(artifacts, blobs_module):
+    _, _, xte, _, _ = blobs_module
+    svc = InferenceService()
+    svc.register("two", artifact=artifacts["tree"])
+    try:
+        svc.predict("two", xte[0])
+        svc.predict("two", xte[1])
+        snap = svc.stats()["two"]
+    finally:
+        svc.close()
+    assert snap["requests"] == 2
+    assert snap["p95_ms"] >= snap["p50_ms"] > 0.0
+
+
+# ---------------------------------------------------------------------------
 # launch/serve.py CLI smoke test (previously untested)
 # ---------------------------------------------------------------------------
 def test_serve_cli_smoke(capsys):
@@ -427,3 +483,20 @@ def test_serve_cli_smoke(capsys):
     out = capsys.readouterr().out
     assert "ms/token" in out
     assert "endpoint qwen2-0.5b" in out
+
+
+def test_serve_cli_classifier_mode(capsys):
+    from repro.launch import serve as serve_cli
+
+    serve_cli.main(["--classifier", "tree", "--requests", "64", "--stats"])
+    out = capsys.readouterr().out
+    assert "rows/s" in out and "replicas=1" in out
+
+
+def test_serve_cli_rejects_ambiguous_mode():
+    from repro.launch import serve as serve_cli
+
+    with pytest.raises(SystemExit):
+        serve_cli.main(["--arch", "qwen2-0.5b", "--classifier", "tree"])
+    with pytest.raises(SystemExit):
+        serve_cli.main([])

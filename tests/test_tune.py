@@ -206,6 +206,27 @@ def test_packed_tree_cache_reuses_operands(small_tree):
     assert all(a is b for a, b in zip(first, second))
 
 
+def test_packed_tree_cache_survives_trace_first_call(small_tree):
+    """Regression: when the FIRST tree_predict for a model happens inside a
+    jit/shard_map trace (mesh-specialized artifacts do this), the cache must
+    not capture tracers — later calls under new traces used to die with
+    UnexpectedTracerError."""
+    import jax
+
+    ops._PACKED_TREES.pop(id(small_tree.tree), None)  # force a cold cache
+    rng = np.random.RandomState(5)
+    jitted = jax.jit(lambda x: ops.tree_predict(small_tree.tree, x))
+    first = np.asarray(jitted(jnp.asarray(rng.randn(4, 8), jnp.float32)))
+    # a different batch shape forces a second, fresh trace over the cache
+    second = np.asarray(ops.tree_predict(
+        small_tree.tree, jnp.asarray(rng.randn(16, 8), jnp.float32)))
+    assert first.shape == (4,) and second.shape == (16,)
+    # and the eager path memoizes device-resident operands (no per-dispatch
+    # host-to-device upload of the packed tree)
+    entry = ops._PACKED_TREES[id(small_tree.tree)][1]
+    assert "dev" in entry
+
+
 def test_packed_tree_cache_evicts_on_gc():
     rng = np.random.RandomState(4)
     xt = rng.randn(200, 5).astype(np.float32)

@@ -4,9 +4,11 @@ Train a classifier on a 'desktop' (this process), serialize it, compile it
 to an embedded fixed-point artifact with the unified ``repro.compile`` API,
 and compare accuracy/memory — the paper's Fig. 1 workflow.
 
-Migration note: the old ``convert(model, ConversionOptions(...))`` API still
-works as a deprecation shim; new code uses ``compile(model, Target(...))``,
-where the backend (ref / xla / pallas) is a Target field, not a code path.
+The old ``convert(model, ConversionOptions(...))`` shim is gone: everything
+goes through ``compile(model, Target(...))``, where the backend (ref / xla /
+pallas) is a Target field, not a code path.  Calibrated per-tensor formats
+(``auto16``/``auto8``) additionally take a calibration batch:
+``compile(model, Target(number_format="auto16"), calibration=x_train)``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -43,6 +45,15 @@ def main():
               f"backend={target.backend:6s} acc={acc:.4f} "
               f"(Δ{acc - desktop_acc:+.4f}) "
               f"flash={mem['flash']:6d}B sram={mem['sram']}B")
+
+    # Step 2b — calibrated per-tensor formats (the paper's §IX future work):
+    # same container width as fxp16, but every tensor gets its own Qn.m
+    # split from ranges observed on a calibration batch.
+    art = compile(model, Target(number_format="auto16"),
+                  calibration=ds.x_train[:256])
+    acc = (art.predict(ds.x_test) == ds.y_test).mean()
+    print(f"  auto16 (calibrated, {len(art.quant_plan.formats)} planned "
+          f"tensors) acc={acc:.4f} (Δ{acc - desktop_acc:+.4f})")
 
     # Step 3 — save / load the self-contained archive (the paper's "output
     # file"): the loaded artifact predicts identically.

@@ -1,7 +1,7 @@
 """Case study (paper §VIII): the intelligent mosquito trap, end to end.
 
 Replays the paper's deployment: train on the wingbeat dataset (D1 analogue),
-grid-search the classifier family, convert the winner to FXP32, then run the
+grid-search the classifier family, compile the winner to FXP32, then run the
 trap loop — classify streaming insect crossings and decide capture (female)
 vs expel (male) — reporting capture statistics like the paper's Table IX.
 
@@ -12,7 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core import convert
+from repro.compile import compile
 from repro.data import load_dataset
 from repro.models import train_decision_tree, train_logistic, train_mlp
 
@@ -34,12 +34,12 @@ def main():
     }
     scores = {}
     for name, model in candidates.items():
-        em = convert(model, number_format="fxp32",
+        em = compile(model, number_format="fxp32",
                      tree_layout="ifelse" if name == "tree" else "iterative")
         scores[name] = (em.predict(ds.x_test) == ds.y_test).mean()
         print(f"  {name:10s} fxp32 accuracy {scores[name]:.4f}")
     best = max(scores, key=scores.get)
-    em = convert(candidates[best], number_format="fxp32",
+    em = compile(candidates[best], number_format="fxp32",
                  tree_layout="ifelse" if best == "tree" else "iterative")
     mem = em.memory_bytes()
     print(f"deployed: {best} / FXP32 — flash {mem['flash']}B, sram {mem['sram']}B"

@@ -12,10 +12,13 @@ out) as a staged, extensible API:
     art.save("model.embml")             # self-contained archive
     art2 = load("model.embml")          # predicts identically
 
-Stages: ``extract_params -> quantize -> lower -> specialize/jit``, dispatched
-through a decorator-based lowering registry (``tree``, ``logistic``, ``mlp``,
-``svm-*``, ``lm``).  The legacy ``repro.core.convert.convert()`` /
-``ConversionOptions`` API is a thin deprecation shim over this package.
+Stages: ``extract_params -> calibrate -> quantize -> lower -> specialize/
+jit``, dispatched through a decorator-based lowering registry (``tree``,
+``logistic``, ``mlp``, ``svm-*``, ``lm``).  The calibrate stage only runs
+for ``auto*`` number formats: ``compile(model, Target(number_format=
+"auto16"), calibration=x_sample)`` freezes a per-tensor
+:class:`repro.quant.QuantPlan` onto the artifact.  (The legacy
+``repro.core.convert`` shim is deleted; this package is the only entry.)
 """
 
 from .api import (compile, compile_from_params, resolve_mesh_strategy,
@@ -24,7 +27,7 @@ from .artifact import CompiledArtifact, load
 from .fingerprint import fingerprint_params
 from .registry import (Lowered, Lowering, get_lowering, lowering_kinds,
                        model_kind, register_lowering)
-from .target import BACKENDS, NUMBER_FORMATS, Target
+from .target import BACKENDS, CALIBRATED_FORMATS, NUMBER_FORMATS, Target
 from . import lowerings as _lowerings  # noqa: F401  (registration side effects)
 
 __all__ = [
@@ -36,6 +39,7 @@ __all__ = [
     "load",
     "Target",
     "NUMBER_FORMATS",
+    "CALIBRATED_FORMATS",
     "BACKENDS",
     "fingerprint_params",
     "Lowering",

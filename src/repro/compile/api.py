@@ -2,13 +2,18 @@
 
 Pipeline (replaces the closure monolith in ``core/convert.py``):
 
-    extract_params -> quantize -> lower -> specialize/jit
+    extract_params -> calibrate -> quantize -> lower -> specialize/jit
 
 Each registered lowering (see :mod:`repro.compile.registry`) implements the
-first three stages for one model kind; ``specialize`` is shared: it applies
-the Target's backend (eager reference / ``jax.jit`` / Pallas programs are
-already built by ``lower``) and batch policy, producing the final callable
-wrapped into a :class:`repro.compile.artifact.CompiledArtifact`.
+model-specific stages for one kind.  ``calibrate`` only runs for calibrated
+(``auto*``) Targets: the lowering replays its program in float over the
+caller-supplied ``calibration`` batch and the planner freezes a per-tensor
+:class:`repro.quant.QuantPlan`, which the quantize/lower stages then resolve
+tensor formats through (fixed formats skip the stage; plan is None).
+``specialize`` is shared: it applies the Target's backend (eager reference /
+``jax.jit`` / Pallas programs are already built by ``lower``) and batch
+policy, producing the final callable wrapped into a
+:class:`repro.compile.artifact.CompiledArtifact`.
 """
 
 from __future__ import annotations
@@ -97,7 +102,7 @@ def _specialize(program: Lowered, target: Target) -> Callable:
                 return inner(x)
             pad = [(0, batch_size - n)] + [(0, 0)] * (x.ndim - 1)
             out, stats = inner(np.pad(x, pad))
-            if target.fmt is None:
+            if not target.is_quantized:
                 return out[:n], stats  # float stats are structurally zero
             stats = _subtract_phantom_rows(
                 stats, batch_size - n, pad_row_stats,
@@ -108,22 +113,36 @@ def _specialize(program: Lowered, target: Target) -> Callable:
     return predict
 
 
-def compile_from_params(kind: str, params: Any, target: Target) -> CompiledArtifact:
-    """Run the quantize/lower/specialize stages on already-extracted params.
+def compile_from_params(kind: str, params: Any, target: Target,
+                        calibration: Any = None,
+                        plan: Any = None) -> CompiledArtifact:
+    """Run the calibrate/quantize/lower/specialize stages on already-extracted
+    params.
 
     This is the shared tail of :func:`compile` and of
     :func:`repro.compile.artifact.load` (archives store extracted params).
+    For calibrated targets either a ``calibration`` batch (a plan is derived
+    from it) or an already-frozen ``plan`` (the archive-load and cache paths,
+    which must reproduce the original artifact bit-for-bit without the
+    original batch) must be supplied.
     """
+    from repro.quant import make_plan
+
     lowering = get_lowering(kind)
-    qparams = lowering.quantize(params, target)
-    program = lowering.lower(qparams, target)
+    if target.is_calibrated:
+        if plan is None:
+            plan = make_plan(lowering, params, target, calibration)
+    else:
+        plan = None  # fixed/float targets ignore stray plans
+    qparams = lowering.quantize(params, target, plan)
+    program = lowering.lower(qparams, target, plan)
     predict = _specialize(program, target)
     return CompiledArtifact(kind=kind, target=target, params=params,
                             _predict=predict, flash_bytes=program.flash_bytes,
                             sram_bytes=program.sram_bytes,
                             extras=program.extras,
                             fingerprint=fingerprint_params(kind, params),
-                            _program=program)
+                            _program=program, quant_plan=plan)
 
 
 def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
@@ -225,7 +244,7 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
             out = np.concatenate(outs, axis=0)
         else:
             out, stats = inner(x)
-        if total == n or target.fmt is None:
+        if total == n or not target.is_quantized:
             return out[:n], stats
         stats = _subtract_phantom_rows(
             stats, total - n, pad_row_stats,
@@ -237,11 +256,16 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
                        replicas=replicas, mesh_strategy=strategy)
 
 
-def compile(model: Any, target: Optional[Target] = None, **kwargs) -> CompiledArtifact:
+def compile(model: Any, target: Optional[Target] = None,
+            calibration: Any = None, **kwargs) -> CompiledArtifact:
     """Compile a trained model into an embedded inference artifact.
 
     ``target`` may be omitted and given as keyword fields instead:
     ``compile(model, number_format="fxp16", backend="pallas")``.
+
+    ``calibration`` is a sample input batch, required by calibrated
+    (``auto*``) number formats: the compiler observes per-tensor ranges on
+    it and freezes a :class:`repro.quant.QuantPlan` onto the artifact.
     """
     tgt = target if target is not None else Target(**kwargs)
     if target is not None and kwargs:
@@ -249,4 +273,4 @@ def compile(model: Any, target: Optional[Target] = None, **kwargs) -> CompiledAr
     kind = model_kind(model)
     lowering = get_lowering(kind)
     params = lowering.extract_params(model)
-    return compile_from_params(kind, params, tgt)
+    return compile_from_params(kind, params, tgt, calibration=calibration)

@@ -3,10 +3,12 @@
 A :class:`CompiledArtifact` is the frozen, self-contained result of
 :func:`repro.compile.compile`: extracted parameters + a specialized predict
 program + the memory model.  ``save(path)`` writes a single-file archive
-(compressed msgpack: kind + Target + parameter tree) and ``load(path)``
-re-runs the lowering pipeline on the stored parameters, so an archive
-round-trips to an artifact that predicts identically — including across
-machines that pick a different kernel execution mode (interpret vs TPU).
+(compressed msgpack: kind + Target + parameter tree + the frozen QuantPlan
+for calibrated targets) and ``load(path)`` re-runs the lowering pipeline on
+the stored parameters, so an archive round-trips to an artifact that
+predicts identically — including across machines that pick a different
+kernel execution mode (interpret vs TPU), and without needing the original
+calibration batch.
 """
 
 from __future__ import annotations
@@ -45,7 +47,9 @@ def mesh_descriptor(mesh: Optional[Any], strategy: Optional[str]) -> Optional[Tu
             tuple(int(d.id) for d in devs), strategy)
 
 _ARCHIVE_FORMAT = "repro-compiled-artifact"
-_ARCHIVE_VERSION = 1
+# v2: optional ``quant_plan`` payload (calibrated per-tensor formats); v1
+# archives (no plan) still load.
+_ARCHIVE_VERSION = 2
 
 
 # --------------------------------------------------------------------------
@@ -94,6 +98,9 @@ class CompiledArtifact:
     mesh: Optional[Any] = dataclasses.field(default=None, repr=False)
     replicas: int = 1
     mesh_strategy: Optional[str] = None
+    # Calibrated per-tensor formats (repro.quant.QuantPlan); None for fixed
+    # and float targets.  Rides in the archive and keys the serving cache.
+    quant_plan: Optional[Any] = dataclasses.field(default=None, repr=False)
 
     @property
     def mesh_key(self) -> Optional[Tuple]:
@@ -101,8 +108,19 @@ class CompiledArtifact:
         return mesh_descriptor(self.mesh, self.mesh_strategy)
 
     @property
-    def cache_key(self) -> Tuple[str, Target, Optional[Tuple]]:
-        return (self.fingerprint, self.target, self.mesh_key)
+    def plan_key(self) -> Optional[Tuple]:
+        """Hashable QuantPlan descriptor (None = no calibrated plan).
+
+        Part of ``cache_key``: one model compiled for one calibrated Target
+        under two *different* calibration batches may legitimately yield two
+        different plans — and therefore two different programs — so the plan
+        identity must key the serving cache alongside Target and mesh.
+        """
+        return None if self.quant_plan is None else self.quant_plan.descriptor()
+
+    @property
+    def cache_key(self) -> Tuple[str, Target, Optional[Tuple], Optional[Tuple]]:
+        return (self.fingerprint, self.target, self.mesh_key, self.plan_key)
 
     @property
     def max_supported_batch(self) -> Optional[int]:
@@ -181,14 +199,53 @@ class CompiledArtifact:
         """Legacy alias for :meth:`memory_report` (EmbeddedModel API)."""
         return self.memory_report()
 
-    # -- legacy compat -------------------------------------------------------
-    @property
-    def options(self):
-        """Legacy ``ConversionOptions`` view of the target (deprecated)."""
-        from repro.core.convert import ConversionOptions
-        return ConversionOptions(number_format=self.target.number_format,
-                                 sigmoid=self.target.sigmoid,
-                                 tree_layout=self.target.tree_layout)
+    def report(self, x: Optional[np.ndarray] = None,
+               y: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Paper-style resource report for this artifact.
+
+        Always includes the memory model and the per-tensor number formats
+        (the QuantPlan table for calibrated targets, the single global
+        format otherwise).  Given an evaluation batch ``x``, adds the
+        observed saturation/underflow counts (paper §V-A); given labels
+        ``y`` as well, adds accuracy and the delta vs a float recompile of
+        the same parameters (paper Tables V-VII) — that comparison needs
+        the retained parameter tree, so it is skipped after
+        :meth:`discard_params`.
+        """
+        rep: Dict[str, Any] = {
+            "kind": self.kind,
+            "number_format": self.target.number_format,
+            "backend": self.target.backend,
+            "model_bytes": self.flash_bytes,
+            "sram_bytes": self.sram_bytes,
+        }
+        if self.quant_plan is not None:
+            rep["formats"] = {
+                path: repr(self.quant_plan.fmt(path))
+                for path in self.quant_plan.paths()}
+            rep["calibration_ranges"] = dict(self.quant_plan.ranges)
+        elif self.target.is_quantized:
+            rep["formats"] = {"*": repr(self.target.fmt)}
+        else:
+            rep["formats"] = {}
+        if x is not None:
+            out, stats = self.predict_with_stats(x)
+            rep["saturation"] = stats
+            if y is not None:
+                y = np.asarray(y)
+                rep["accuracy"] = float((out == y).mean())
+                if self.params is not None and self.target.is_quantized:
+                    from .api import compile_from_params
+
+                    flt = compile_from_params(
+                        self.kind, self.params,
+                        self.target.replace(number_format="flt",
+                                            backend="ref"))
+                    rep["accuracy_float"] = float(
+                        (flt.predict(x) == y).mean())
+                    rep["accuracy_delta"] = (rep["accuracy"]
+                                             - rep["accuracy_float"])
+        return rep
 
     def discard_params(self) -> "CompiledArtifact":
         """Drop the retained (unquantized) parameter tree to free memory.
@@ -214,10 +271,17 @@ class CompiledArtifact:
                 "recompile the model to obtain a saveable artifact")
         payload = {
             "format": _ARCHIVE_FORMAT,
-            "version": _ARCHIVE_VERSION,
+            # Version-stamp what the payload actually needs: a plan-less
+            # archive is fully v1-compatible, so stamping it v2 would only
+            # lock out older readers for nothing.
+            "version": _ARCHIVE_VERSION if self.quant_plan is not None else 1,
             "kind": self.kind,
             "target": dataclasses.asdict(self.target),
             "params": _encode(self.params),
+            # The frozen plan (not the calibration batch): load() must
+            # reproduce this artifact bit-for-bit without re-calibrating.
+            "quant_plan": (None if self.quant_plan is None
+                           else self.quant_plan.to_dict()),
             "metadata": metadata or {},
             "saved_at": time.time(),
         }
@@ -246,4 +310,9 @@ def load(path: str) -> CompiledArtifact:
                          f"this reader ({_ARCHIVE_VERSION})")
     target = Target(**payload["target"])
     params = _decode(payload["params"])
-    return compile_from_params(payload["kind"], params, target)
+    plan = None
+    if payload.get("quant_plan") is not None:
+        from repro.quant import QuantPlan
+
+        plan = QuantPlan.from_dict(payload["quant_plan"])
+    return compile_from_params(payload["kind"], params, target, plan=plan)

@@ -2,20 +2,24 @@
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fixedpoint as fxp
-from repro.core.fixedpoint import FxpFormat, FxpStats
+from repro.core.fixedpoint import STATS_DTYPE, FxpFormat, FxpStats
 
-__all__ = ["zero_stats", "q", "qx_with_stats", "nbytes", "elem_bytes"]
+__all__ = ["zero_stats", "q", "qx_with_stats", "nbytes", "elem_bytes",
+           "resolve_formats"]
 
 
 def zero_stats() -> FxpStats:
-    z = jnp.zeros((), jnp.int64)
+    # Explicitly the shared counter dtype: the old ``jnp.int64`` spelling
+    # silently downgraded to int32 with x64 disabled (see
+    # fixedpoint.STATS_DTYPE for the portability contract).
+    z = jnp.zeros((), STATS_DTYPE)
     return FxpStats(z, z, z)
 
 
@@ -34,3 +38,28 @@ def nbytes(*arrays) -> int:
 
 def elem_bytes(fmt: FxpFormat | None) -> int:
     return 4 if fmt is None else fmt.total_bits // 8
+
+
+def resolve_formats(target, plan) -> Optional[Callable[[str], FxpFormat]]:
+    """Per-tensor format lookup for a lowering: ``F(path) -> FxpFormat``.
+
+    Calibrated targets resolve each path through the QuantPlan (KeyError on
+    a path calibration never recorded — a lowering/calibrate drift bug);
+    fixed targets serve the Target's single global format for every path,
+    which keeps each lowering to ONE code path for both worlds.  Returns
+    None for float targets.
+    """
+    if target.is_calibrated:
+        if plan is None:
+            raise ValueError(
+                f"Target '{target.number_format}' needs a QuantPlan; compile "
+                f"through repro.compile with a calibration batch")
+        if plan.total_bits != target.container_bits:
+            raise ValueError(
+                f"QuantPlan container width {plan.total_bits} does not match "
+                f"Target '{target.number_format}'")
+        return plan.fmt
+    fixed = target.fmt
+    if fixed is None:
+        return None
+    return lambda path: fixed

@@ -72,7 +72,8 @@ class LMLowering(Lowering):
     def extract_params(self, model: Any) -> Dict[str, Any]:
         return {"cfg": cfg_to_dict(model.cfg), "params": model.params}
 
-    def quantize(self, params: Dict[str, Any], target: Target) -> Dict[str, Any]:
+    def quantize(self, params: Dict[str, Any], target: Target,
+                 plan: Optional[Any] = None) -> Dict[str, Any]:
         from repro.core.quantize import QuantSpec, quantize_lm_params
 
         cfg = cfg_from_dict(params["cfg"])
@@ -90,14 +91,17 @@ class LMLowering(Lowering):
             if target.number_format not in _LM_BITS:
                 raise ValueError(
                     "lm lowering supports number_format flt/fxp8/fxp16 "
-                    f"(weight-only), got '{target.number_format}'")
+                    f"(weight-only), got '{target.number_format}'"
+                    + (" — calibrated (auto*) formats are classifier-only"
+                       if target.is_calibrated else ""))
             spec = QuantSpec(bits=_LM_BITS[target.number_format],
                              mode=target.weight_scale,
                              min_size=_QUANT_MIN_SIZE)
             p = quantize_lm_params(p, spec)
         return {"cfg": cfg, "params": p}
 
-    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+    def lower(self, qparams: Dict[str, Any], target: Target,
+              plan: Optional[Any] = None) -> Lowered:
         from repro.core.quantize import quantized_param_bytes
         from repro.lm import model as M
 

@@ -12,20 +12,33 @@ Backend routing:
   shift + saturation + PWL epilogue on the VPU — one dispatch per layer
   where the chained path took three).  Activations stay in the Qn.m
   integer domain either way, and the two routes are bit-identical.
+
+Quantized tensor paths (calibrated targets give each its own Qn.m format;
+fixed targets resolve all of them to the global one):
+
+* ``input``            — the feature vector, quantized at call time;
+* ``layers/{i}/w``     — layer weights;
+* ``layers/{i}/out``   — the layer's pre/post-activation value; the bias
+  (``layers/{i}/b``) is added at this scale, so the two share a group.
+  Layer ``i+1`` consumes ``layers/{i}/out`` directly — activations never
+  requantize between layers; each layer's epilogue shift
+  (``m_in + m_w - m_out``) does the rescaling inside the fused op.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.activations import get_sigmoid
+from repro.quant import Calibration, activation_range, amax
 
 from ..registry import Lowered, Lowering, register_lowering
 from ..target import Target
-from .common import elem_bytes, nbytes, q, qx_with_stats, zero_stats
+from .common import (elem_bytes, nbytes, q, qx_with_stats, resolve_formats,
+                     zero_stats)
 
 
 @register_lowering("mlp")
@@ -34,13 +47,41 @@ class MLPLowering(Lowering):
         return {"weights": [np.asarray(w) for w in model.weights],
                 "biases": [np.asarray(b) for b in model.biases]}
 
-    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
-        fmt = target.fmt
+    def calibrate(self, params: Dict[str, Any], x: Any,
+                  target: Target) -> Calibration:
+        weights = [np.asarray(w, np.float32) for w in params["weights"]]
+        biases = [np.asarray(b, np.float32) for b in params["biases"]]
+        sig = get_sigmoid(target.sigmoid)
+        h = np.asarray(x, np.float32)
+        ranges = {"input": amax(h)}
+        groups, matmuls, acc_ranges = [], [], {}
+        prev = "input"
+        for i, (w, b) in enumerate(zip(weights, biases)):
+            wp, bp, op = f"layers/{i}/w", f"layers/{i}/b", f"layers/{i}/out"
+            acc = h @ w
+            h = acc + b
+            last = i == len(weights) - 1
+            ranges[wp] = amax(w)
+            ranges[bp] = amax(b)
+            # The out format also hosts the sigmoid's in-format constants.
+            ranges[op] = activation_range(target.sigmoid, amax(h), last)
+            groups.append((bp, op))
+            matmuls.append((prev, wp, op))
+            acc_ranges[op] = amax(acc)
+            if not last:
+                h = np.asarray(sig(jnp.asarray(h)), np.float32)
+            prev = op
+        return Calibration(ranges=ranges, groups=tuple(groups),
+                           matmuls=tuple(matmuls), acc_ranges=acc_ranges)
+
+    def lower(self, qparams: Dict[str, Any], target: Target,
+              plan: Optional[Any] = None) -> Lowered:
+        F = resolve_formats(target, plan)
         weights = qparams["weights"]
         biases = qparams["biases"]
         widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
 
-        if fmt is None:
+        if F is None:
             ws = [jnp.asarray(w, jnp.float32) for w in weights]
             bs = [jnp.asarray(b, jnp.float32) for b in biases]
             if target.backend == "pallas" and target.sigmoid in (
@@ -61,9 +102,18 @@ class MLPLowering(Lowering):
 
             flash = nbytes(*[np.asarray(w, np.float32) for w in weights],
                            *[np.asarray(b, np.float32) for b in biases])
+            sram = max(widths) * elem_bytes(None)
         else:
-            qws = [q(w, fmt) for w in weights]
-            qbs = [q(b, fmt) for b in biases]
+            in_fmt = F("input")
+            w_fmts = [F(f"layers/{i}/w") for i in range(len(weights))]
+            out_fmts = [F(f"layers/{i}/out") for i in range(len(weights))]
+            qws = [q(w, f) for w, f in zip(weights, w_fmts)]
+            # biases ride at the layer-out scale (grouped by the planner)
+            qbs = [q(b, F(f"layers/{i}/b"))
+                   for i, b in enumerate(biases)]
+            in_fracs = [in_fmt.frac_bits] + [f.frac_bits for f in out_fmts[:-1]]
+            shifts = [fi + fw.frac_bits - fo.frac_bits
+                      for fi, fw, fo in zip(in_fracs, w_fmts, out_fmts)]
             # Hidden layers fuse the sigmoid into the layer op; the output
             # layer emits raw logits ("none").
             acts = [target.sigmoid] * (len(qws) - 1) + ["none"]
@@ -72,23 +122,28 @@ class MLPLowering(Lowering):
                 from repro.kernels import ops
 
                 def predict(x):
-                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
-                    for w, b, act in zip(qws, qbs, acts):
-                        h = ops.fxp_layer(h, w, b, fmt, activation=act)
+                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32),
+                                             in_fmt)
+                    for w, b, act, fo, sh in zip(qws, qbs, acts, out_fmts,
+                                                 shifts):
+                        h = ops.fxp_layer(h, w, b, fo, activation=act,
+                                          shift=sh)
                     return jnp.argmax(h, -1).astype(jnp.int32), stats
             else:
                 from repro.kernels import ref as ref_ops
 
                 def predict(x):
-                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
-                    for w, b, act in zip(qws, qbs, acts):
+                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32),
+                                             in_fmt)
+                    for w, b, act, fo, sh in zip(qws, qbs, acts, out_fmts,
+                                                 shifts):
                         h, s = ref_ops.fxp_layer_ref_with_stats(
-                            h, w, b, fmt, activation=act)
+                            h, w, b, fo, activation=act, shift=sh)
                         stats = stats.merge(s)
                     return jnp.argmax(h, -1).astype(jnp.int32), stats
 
             flash = nbytes(*[np.asarray(w) for w in qws],
                            *[np.asarray(b) for b in qbs])
-        # One reused activation buffer (paper §III-D): the widest layer.
-        sram = max(widths) * elem_bytes(fmt)
+            # One reused activation buffer (paper §III-D): the widest layer.
+            sram = max(widths) * elem_bytes(in_fmt)
         return Lowered(predict, flash, sram)

@@ -12,21 +12,31 @@ Backend routing: the first large matmul (x @ sv.T) goes through
 backend (``kernels/fxp_layer`` on pallas, ``kernels/ref.fxp_layer_ref`` on
 ref/xla); the elementwise kernel math (qmul/qpow/qexp) stays on the
 VPU-equivalent jnp ops.
+
+Quantized tensor paths: the whole feature/kernel domain — ``input``,
+``support_vectors``, and every elementwise intermediate up to the kernel
+value ``kernel`` — shares ONE scale group (the d2 / qpow algebra adds and
+multiplies them against each other, so mixed scales there would need a
+requantize per elementwise op); the decision stage then crosses formats:
+``dual_coef`` gets its own, and ``out`` (grouped with ``intercept``)
+receives the ``m_k + m_dual - m_out`` epilogue shift.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fixedpoint as fxp
+from repro.quant import Calibration, amax
 
 from ..registry import Lowered, Lowering, register_lowering
 from ..target import Target
-from .common import elem_bytes, nbytes, q, qx_with_stats, zero_stats
-from .linear import lower_linear
+from .common import (elem_bytes, nbytes, q, qx_with_stats, resolve_formats,
+                     zero_stats)
+from .linear import calibrate_linear, lower_linear
 
 
 @register_lowering("svm-linear", "svm-poly", "svm-rbf")
@@ -44,21 +54,90 @@ class SVMLowering(Lowering):
                 "coef0": float(model.coef0),
                 "degree": int(model.degree)}
 
-    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+    def calibrate(self, params: Dict[str, Any], x: Any,
+                  target: Target) -> Calibration:
+        if params["kernel"] == "linear":
+            return calibrate_linear(
+                np.asarray(params["coef"], np.float32),
+                np.asarray(params["intercept"], np.float32),
+                np.asarray(x, np.float32))
+        return _calibrate_kernel_svm(params, np.asarray(x, np.float32))
+
+    def lower(self, qparams: Dict[str, Any], target: Target,
+              plan: Optional[Any] = None) -> Lowered:
         if qparams["kernel"] == "linear":
-            return lower_linear(qparams["coef"], qparams["intercept"], target)
-        return _lower_kernel_svm(qparams, target)
+            return lower_linear(qparams["coef"], qparams["intercept"],
+                                target, plan)
+        return _lower_kernel_svm(qparams, target, plan)
 
 
-def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
-    fmt = target.fmt
+def _calibrate_kernel_svm(p: Dict[str, Any], x: np.ndarray) -> Calibration:
+    """Float replay of the quantized kernel-SVM op sequence.
+
+    Every elementwise intermediate lives in the shared feature-domain format
+    (see the module docstring), so its peak folds into the ``kernel`` range.
+    """
+    sv = np.asarray(p["support_vectors"], np.float32)
+    dual = np.asarray(p["dual_coef"], np.float32)
+    icept = np.asarray(p["intercept"], np.float32)
+    gamma, coef0, degree = p["gamma"], p["coef0"], int(p["degree"])
+
+    dot = x @ sv.T
+    # Constants quantized into the feature-domain format, plus 1.0 (qpow's
+    # multiplicative identity / the RBF kernel's k <= 1 output).
+    kdom = amax(np.float32(gamma), np.float32(coef0), 1.0)
+    if p["kernel"] == "poly":
+        base = np.float32(gamma) * dot + np.float32(coef0)
+        kdom = max(kdom, amax(dot, base))
+        # qpow_int's square-and-multiply intermediates all live in-format.
+        k, b, d = np.ones_like(base), base, degree
+        while d:
+            if d & 1:
+                k = k * b
+                kdom = max(kdom, amax(k))
+            b = b * b
+            d >>= 1
+            if d:
+                kdom = max(kdom, amax(b))
+    else:  # rbf
+        x2 = np.sum(x * x, axis=-1)
+        sv2 = np.sum(sv * sv, axis=-1)
+        d2 = x2[:, None] - 2.0 * dot + sv2[None, :]
+        arg = -np.float32(gamma) * d2
+        k = np.exp(arg)
+        kdom = max(kdom, amax(x2, sv2, dot, d2, arg, k))
+
+    acc = k @ dual
+    out = acc + icept
+    matmuls = [("input", "support_vectors", "kernel"),
+               ("kernel", "dual_coef", "out")]
+    acc_ranges = {"kernel": amax(dot), "out": amax(acc)}
+    if p["kernel"] == "rbf":
+        # _qsq_norm accumulates sum(q^2) with the same shift epilogue.
+        matmuls += [("input", "input", "kernel"),
+                    ("support_vectors", "support_vectors", "kernel")]
+        acc_ranges["kernel"] = amax(dot, x2, sv2)
+    return Calibration(
+        ranges={"input": amax(x), "support_vectors": amax(sv),
+                "kernel": kdom, "dual_coef": amax(dual),
+                "intercept": amax(icept), "out": amax(out, icept)},
+        groups=(("input", "support_vectors", "kernel"),
+                ("intercept", "out")),
+        matmuls=tuple(matmuls),
+        acc_ranges=acc_ranges,
+    )
+
+
+def _lower_kernel_svm(p: Dict[str, Any], target: Target,
+                      plan: Optional[Any] = None) -> Lowered:
+    F = resolve_formats(target, plan)
     kernel = p["kernel"]
     sv = np.asarray(p["support_vectors"])
     dual = np.asarray(p["dual_coef"])
     icept = np.asarray(p["intercept"])
     gamma, coef0, degree = p["gamma"], p["coef0"], p["degree"]
 
-    if fmt is None:
+    if F is None:
         svj = jnp.asarray(sv, jnp.float32)  # f32 serve of the f64 artifact
         dj = jnp.asarray(dual, jnp.float32)
         bj = jnp.asarray(icept, jnp.float32)
@@ -78,12 +157,19 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
 
         flash = nbytes(sv.astype(np.float32), dual.astype(np.float32),
                        icept.astype(np.float32))
+        sram = (sv.shape[0] + dual.shape[1]) * elem_bytes(None)
     else:
-        qsv = q(sv, fmt)
-        qd = q(dual, fmt)
-        qb = q(icept, fmt)
+        # One feature/kernel-domain format (grouped with the input by the
+        # planner), distinct dual/out formats across the decision matmul.
+        fmt = F("kernel")
+        out_fmt = F("out")
+        qsv = q(sv, F("support_vectors"))
+        qd = q(dual, F("dual_coef"))
+        qb = q(icept, F("intercept"))  # grouped with 'out'
         qgamma = q(np.float32(gamma), fmt)
         qcoef0 = q(np.float32(coef0), fmt)
+        dec_shift = (fmt.frac_bits + F("dual_coef").frac_bits
+                     - out_fmt.frac_bits)
 
         if target.backend == "pallas":
             from repro.kernels import ops
@@ -93,8 +179,8 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
 
             def decision(k):
                 # k @ dual + intercept, fused into one kernel dispatch.
-                return ops.fxp_layer(k, qd, qb, fmt,
-                                     activation="none"), zero_stats()
+                return ops.fxp_layer(k, qd, qb, out_fmt, activation="none",
+                                     shift=dec_shift), zero_stats()
         else:
             from repro.kernels import ref as ref_ops
 
@@ -103,7 +189,7 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
 
             def decision(k):
                 return ref_ops.fxp_layer_ref_with_stats(
-                    k, qd, qb, fmt, activation="none")
+                    k, qd, qb, out_fmt, activation="none", shift=dec_shift)
 
         if kernel == "poly":
             def predict(x):
@@ -118,7 +204,7 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
                 # sum_k q_k^2 in wide precision, one rounded shift at the end
                 wide = qv.astype(fmt.wide_dtype)
                 acc = jnp.sum(wide * wide, axis=-1)
-                return fxp._saturate(fxp._rshift_round(acc, fmt.frac_bits), fmt)
+                return fxp.rshift_round_saturate(acc, fmt)
 
             def predict(x):
                 qx, s0 = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
@@ -134,5 +220,5 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target) -> Lowered:
                 return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
 
         flash = nbytes(np.asarray(qsv), np.asarray(qd), np.asarray(qb))
-    sram = (sv.shape[0] + dual.shape[1]) * elem_bytes(fmt)
+        sram = (sv.shape[0] + dual.shape[1]) * elem_bytes(fmt)
     return Lowered(predict, flash, sram)

@@ -17,17 +17,18 @@ far above any paper-scale tree threshold).
 
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import trees as trees_mod
 from repro.core.trees import TreeArrays
+from repro.quant import Calibration, amax
 
 from ..registry import Lowered, Lowering, register_lowering
 from ..target import Target
-from .common import qx_with_stats, zero_stats
+from .common import qx_with_stats, resolve_formats, zero_stats
 
 _LAYOUT_FNS = {
     "iterative": trees_mod.predict_iterative,
@@ -51,7 +52,19 @@ class TreeLowering(Lowering):
             "n_features": int(t.n_features),
         }
 
-    def quantize(self, params: Dict[str, Any], target: Target) -> Dict[str, Any]:
+    def calibrate(self, params: Dict[str, Any], x: Any,
+                  target: Target) -> Calibration:
+        # Tree inference is one integer comparison per node: q(x) <= q(thr)
+        # is only order-preserving when both sides share a scale, so the two
+        # paths are one group (the planner takes the min fractional bits).
+        return Calibration(
+            ranges={"input": amax(x),
+                    "threshold": amax(params["threshold"])},
+            groups=(("input", "threshold"),),
+        )
+
+    def quantize(self, params: Dict[str, Any], target: Target,
+                 plan: Optional[Any] = None) -> Dict[str, Any]:
         tree = TreeArrays(
             feature=np.asarray(params["feature"], np.int32),
             threshold=np.asarray(params["threshold"], np.float32),
@@ -62,13 +75,16 @@ class TreeLowering(Lowering):
             n_classes=int(params["n_classes"]),
             n_features=int(params["n_features"]),
         )
-        if target.fmt is not None:
-            tree = tree.quantized(target.fmt)
+        F = resolve_formats(target, plan)
+        if F is not None:
+            tree = tree.quantized(F("threshold"))
         return {"tree": tree}
 
-    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+    def lower(self, qparams: Dict[str, Any], target: Target,
+              plan: Optional[Any] = None) -> Lowered:
         tree: TreeArrays = qparams["tree"]
-        fmt = target.fmt
+        F = resolve_formats(target, plan)
+        fmt = None if F is None else F("input")  # == threshold fmt (grouped)
 
         if target.backend == "pallas":
             from repro.kernels import ops

@@ -49,17 +49,33 @@ class Lowered:
 
 
 class Lowering:
-    """Base class: one registered compiler per model kind."""
+    """Base class: one registered compiler per model kind.
+
+    The staged pipeline is ``extract_params -> calibrate (auto formats only)
+    -> quantize -> lower``.  ``calibrate`` replays the program in float over
+    a sample batch, returning the :class:`repro.quant.Calibration` evidence
+    the planner turns into a per-tensor :class:`repro.quant.QuantPlan`;
+    ``quantize``/``lower`` receive that plan (None for fixed/float targets)
+    and resolve each tensor's format through it.
+    """
 
     kinds: Tuple[str, ...] = ()
 
     def extract_params(self, model: Any) -> Dict[str, Any]:
         raise NotImplementedError
 
-    def quantize(self, params: Dict[str, Any], target: Target) -> Dict[str, Any]:
+    def calibrate(self, params: Dict[str, Any], x: Any, target: Target):
+        """Observed tensor ranges for calibrated targets (see repro.quant)."""
+        raise NotImplementedError(
+            f"the '{type(self).__name__}' lowering does not support "
+            f"calibrated (auto*) number formats")
+
+    def quantize(self, params: Dict[str, Any], target: Target,
+                 plan: Optional[Any] = None) -> Dict[str, Any]:
         return params
 
-    def lower(self, qparams: Dict[str, Any], target: Target) -> Lowered:
+    def lower(self, qparams: Dict[str, Any], target: Target,
+              plan: Optional[Any] = None) -> Lowered:
         raise NotImplementedError
 
 

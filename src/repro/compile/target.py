@@ -7,10 +7,16 @@ which *backend* executes the artifact (pure-jnp reference, jitted XLA, or the
 Pallas TPU kernels) and the batch policy the artifact is specialized for.
 
 Replaces the old ``repro.core.convert.ConversionOptions`` (which only knew
-the three paper axes and hard-coded the backend); ``ConversionOptions`` is
-kept as a deprecation shim over this class.
+the three paper axes and hard-coded the backend); the shim is gone as of the
+quantization-subsystem refactor — ``Target`` is the only spelling.
 
-Deliberately NOT a Target axis: device-mesh placement.  A Target describes
+Deliberately NOT a Target axis: the per-tensor :class:`repro.quant.QuantPlan`
+of a calibrated (``auto*``) format.  A Target is a model-independent request
+("16-bit containers, formats from calibration"); the plan is derived from
+the model parameters *and* the calibration batch, so it lives on the
+compiled artifact and is keyed separately in ``CompiledArtifact.cache_key``.
+
+Also deliberately NOT a Target axis: device-mesh placement.  A Target describes
 *what program* to build (its bytes are placement-invariant — the golden
 vectors pin this); which mesh the artifact serves on is a runtime decision
 applied afterwards via ``CompiledArtifact.specialize_mesh`` and keyed
@@ -28,13 +34,24 @@ from repro.core.activations import SIGMOID_NAMES
 from repro.core.fixedpoint import FXP8, FXP16, FXP32, FxpFormat
 from repro.core.trees import TREE_LAYOUTS
 
-__all__ = ["Target", "NUMBER_FORMATS", "BACKENDS", "BATCH_POLICIES"]
+__all__ = ["Target", "NUMBER_FORMATS", "CALIBRATED_FORMATS", "BACKENDS",
+           "BATCH_POLICIES"]
 
 NUMBER_FORMATS: Dict[str, Optional[FxpFormat]] = {
     "flt": None,
     "fxp32": FXP32,
     "fxp16": FXP16,
     "fxp8": FXP8,
+}
+
+# Calibrated ("auto") formats: the name fixes only the container width; the
+# per-tensor Qn.m split comes from a calibration-derived
+# :class:`repro.quant.QuantPlan` (the paper's §IX future work).  Compiling
+# one requires a calibration batch: ``compile(model, target, calibration=x)``.
+CALIBRATED_FORMATS: Dict[str, int] = {
+    "auto32": 32,
+    "auto16": 16,
+    "auto8": 8,
 }
 
 BACKENDS = ("ref", "xla", "pallas")
@@ -46,8 +63,11 @@ class Target:
     """Frozen compilation target for :func:`repro.compile.compile`.
 
     * ``number_format`` — ``flt`` | ``fxp32`` (Q22.10) | ``fxp16`` (Q12.4) |
-      ``fxp8`` (Q5.2).  For the ``lm`` lowering, ``fxp8``/``fxp16`` select
-      int8/int16 weight-only quantization.
+      ``fxp8`` (Q5.2) | ``auto32``/``auto16``/``auto8`` (calibrated:
+      per-tensor Qn.m chosen from a sample batch via
+      ``compile(..., calibration=x)``; see :mod:`repro.quant`).  For the
+      ``lm`` lowering, ``fxp8``/``fxp16`` select int8/int16 weight-only
+      quantization (calibrated formats are classifier-only).
     * ``sigmoid`` — ``exact`` | ``rational`` | ``pwl2`` | ``pwl4``.  MLP
       hidden activation (paper C3); for LMs, the gate sigmoid/SiLU variant.
     * ``tree_layout`` — ``iterative`` | ``ifelse`` | ``oblivious`` (paper C4).
@@ -74,9 +94,11 @@ class Target:
     kv_cache: str = "native"
 
     def __post_init__(self):
-        if self.number_format not in NUMBER_FORMATS:
+        if (self.number_format not in NUMBER_FORMATS
+                and self.number_format not in CALIBRATED_FORMATS):
             raise KeyError(
-                f"number_format must be one of {list(NUMBER_FORMATS)}")
+                f"number_format must be one of "
+                f"{list(NUMBER_FORMATS) + list(CALIBRATED_FORMATS)}")
         if self.sigmoid not in SIGMOID_NAMES:
             raise KeyError(f"sigmoid must be one of {SIGMOID_NAMES}")
         if self.tree_layout not in TREE_LAYOUTS:
@@ -94,8 +116,36 @@ class Target:
 
     @property
     def fmt(self) -> Optional[FxpFormat]:
-        """The fixed-point format, or None for float serving."""
+        """The *global* fixed-point format, or None for float serving.
+
+        Calibrated targets have no single format — their per-tensor formats
+        live in the artifact's :class:`repro.quant.QuantPlan` — so asking
+        for one is a bug, not a lookup.
+        """
+        if self.is_calibrated:
+            raise ValueError(
+                f"'{self.number_format}' is a calibrated format: per-tensor "
+                f"formats live in the QuantPlan, not on the Target (branch "
+                f"on Target.is_quantized / resolve via the plan)")
         return NUMBER_FORMATS[self.number_format]
+
+    @property
+    def is_calibrated(self) -> bool:
+        """True for ``auto*`` formats (per-tensor plan from calibration)."""
+        return self.number_format in CALIBRATED_FORMATS
+
+    @property
+    def is_quantized(self) -> bool:
+        """True for any integer serving format (fixed or calibrated)."""
+        return self.number_format != "flt"
+
+    @property
+    def container_bits(self) -> Optional[int]:
+        """Integer container width in bits (None for float serving)."""
+        if self.is_calibrated:
+            return CALIBRATED_FORMATS[self.number_format]
+        fmt = NUMBER_FORMATS[self.number_format]
+        return None if fmt is None else fmt.total_bits
 
     def replace(self, **kwargs) -> "Target":
         return dataclasses.replace(self, **kwargs)

@@ -3,22 +3,14 @@
 * :mod:`repro.core.fixedpoint` — Qn.m arithmetic (C1)
 * :mod:`repro.core.activations` — sigmoid approximations (C3)
 * :mod:`repro.core.trees` — tree inference layouts (C4)
-* :mod:`repro.core.convert` — DEPRECATED shim over :mod:`repro.compile` (C5/C6)
 * :mod:`repro.core.quantize` — beyond-paper per-channel Qn.m for LM serving
+
+The conversion pipeline (C5/C6) lives in :mod:`repro.compile`; the old
+``repro.core.convert`` shim (``ConversionOptions`` / ``convert()`` /
+``EmbeddedModel``) is gone — use ``repro.compile.compile(model,
+Target(...))`` and :class:`repro.compile.CompiledArtifact`.
 """
 
-from .convert import ConversionOptions, convert
 from .fixedpoint import FXP8, FXP16, FXP32, FxpFormat
 
-__all__ = ["ConversionOptions", "EmbeddedModel", "convert",
-           "FXP8", "FXP16", "FXP32", "FxpFormat"]
-
-
-def __getattr__(name):
-    # EmbeddedModel aliases repro.compile.CompiledArtifact; resolving it
-    # lazily keeps repro.core importable from inside repro.compile's own
-    # initialization (registry -> core.fixedpoint -> core.__init__).
-    if name == "EmbeddedModel":
-        from .convert import EmbeddedModel
-        return EmbeddedModel
-    raise AttributeError(f"module 'repro.core' has no attribute '{name}'")
+__all__ = ["FXP8", "FXP16", "FXP32", "FxpFormat"]

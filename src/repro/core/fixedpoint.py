@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,7 @@ __all__ = [
     "FXP32",
     "FXP16",
     "FXP8",
+    "STATS_DTYPE",
     "quantize",
     "dequantize",
     "qadd",
@@ -47,6 +48,7 @@ __all__ = [
     "qdiv",
     "qmatmul",
     "qmatmul_with_stats",
+    "requantize",
     "rshift_round_saturate",
     "quantize_with_stats",
     "qexp",
@@ -128,6 +130,23 @@ FXP16 = FxpFormat(16, 4, "FXP16(Q12.4)")
 FXP8 = FxpFormat(8, 2, "FXP8(Q5.2)")
 
 
+# Counter dtype for in-program overflow/underflow accounting.  Explicitly
+# int32: the old ``jnp.int64`` spelling silently downgraded to int32 whenever
+# jax x64 was disabled (the default), so it was an int32 counter wearing a
+# wide label — and worse, flipped width under ``jax.config.update``.  One
+# predict call cannot overflow int32 (it would need > 2^31 observed elements
+# in a single batch); cross-call accumulation happens on the host through
+# :meth:`FxpStats.merge`, which promotes concrete counters to numpy int64 so
+# long serving runs never wrap.
+STATS_DTYPE = jnp.int32
+
+
+def _is_concrete(x) -> bool:
+    """True when ``x`` is a host value (numpy / python / committed array),
+    i.e. not an abstract tracer inside a jit/shard_map trace."""
+    return not isinstance(x, jax.core.Tracer)
+
+
 @dataclasses.dataclass
 class FxpStats:
     """Overflow/underflow accounting (paper §V-A)."""
@@ -137,10 +156,20 @@ class FxpStats:
     total: jax.Array  # number of elements observed
 
     def merge(self, other: "FxpStats") -> "FxpStats":
+        def add(a, b):
+            # Host-side accumulation promotes to int64: the in-program
+            # counters are deliberately int32 (see STATS_DTYPE), which is
+            # safe per call but would wrap when a long serving run keeps
+            # merging per-request stats into one running total.  Inside a
+            # trace the operands are tracers and stay on the program dtype.
+            if _is_concrete(a) and _is_concrete(b):
+                return np.asarray(a, np.int64) + np.asarray(b, np.int64)
+            return a + b
+
         return FxpStats(
-            self.overflow + other.overflow,
-            self.underflow + other.underflow,
-            self.total + other.total,
+            add(self.overflow, other.overflow),
+            add(self.underflow, other.underflow),
+            add(self.total, other.total),
         )
 
 
@@ -171,10 +200,10 @@ def quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
 def quantize_with_stats(x: jax.Array, fmt: FxpFormat) -> Tuple[jax.Array, FxpStats]:
     scaled = jnp.asarray(x, jnp.float32) * fmt.scale
     q = jnp.round(scaled)
-    over = jnp.sum((q > fmt.qmax) | (q < fmt.qmin))
-    under = jnp.sum((q == 0) & (x != 0))
+    over = jnp.sum((q > fmt.qmax) | (q < fmt.qmin), dtype=STATS_DTYPE)
+    under = jnp.sum((q == 0) & (x != 0), dtype=STATS_DTYPE)
     q = jnp.clip(q, fmt.qmin, fmt.qmax).astype(fmt.dtype)
-    return q, FxpStats(over, under, jnp.asarray(x.size, jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))
+    return q, FxpStats(over, under, jnp.asarray(x.size, STATS_DTYPE))
 
 
 def dequantize(q: jax.Array, fmt: FxpFormat) -> jax.Array:
@@ -221,6 +250,22 @@ def _rshift_round(x_wide: jax.Array, m: int) -> jax.Array:
     return floor_q + bump.astype(x_wide.dtype)
 
 
+def requantize(acc: jax.Array, shift: int, fmt: FxpFormat) -> jax.Array:
+    """``saturate(round_shift(acc, shift))`` — the mixed-format epilogue.
+
+    A product of a Q·.ma value and a Q·.mb value accumulates at scale
+    ``2^(ma+mb)``; ``shift = ma + mb - m_out`` re-scales it into the output
+    format.  With one global format this degenerates to
+    ``shift == fmt.frac_bits`` (see :func:`rshift_round_saturate`); with a
+    calibrated per-tensor :class:`repro.quant.QuantPlan` every layer passes
+    its own shift.  ``shift`` must be non-negative (the planner guarantees
+    ``m_out <= ma + mb``).
+    """
+    if shift < 0:
+        raise ValueError(f"requantize shift must be >= 0, got {shift}")
+    return _saturate(_rshift_round(acc, shift), fmt)
+
+
 def rshift_round_saturate(acc: jax.Array, fmt: FxpFormat) -> jax.Array:
     """``saturate(round_shift(acc, m))`` — the shared accumulator epilogue.
 
@@ -228,7 +273,7 @@ def rshift_round_saturate(acc: jax.Array, fmt: FxpFormat) -> jax.Array:
     Pallas kernel bodies (fxp_qmatmul / fxp_layer) — one definition of the
     rounding rule keeps the cross-backend bit-identity contract in one place.
     """
-    return _saturate(_rshift_round(acc, fmt.frac_bits), fmt)
+    return requantize(acc, fmt.frac_bits, fmt)
 
 
 def qmul(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
@@ -278,7 +323,15 @@ def qmatmul(a: jax.Array, b: jax.Array, fmt: FxpFormat, preferred_wide: bool = T
     return _saturate(_rshift_round(acc, fmt.frac_bits), fmt)
 
 
-def qmatmul_with_stats(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> Tuple[jax.Array, FxpStats]:
+def qmatmul_with_stats(a: jax.Array, b: jax.Array, fmt: FxpFormat,
+                       shift: Optional[int] = None) -> Tuple[jax.Array, FxpStats]:
+    """Like :func:`qmatmul` but also returns overflow/underflow counts.
+
+    ``shift`` overrides the requantization amount for mixed-format operands
+    (``ma + mb - m_out``); ``None`` keeps the single-format semantics
+    (shift by ``fmt.frac_bits``).
+    """
+    shift = fmt.frac_bits if shift is None else shift
     wide = fmt.wide_dtype
     acc = jax.lax.dot_general(
         a.astype(wide),
@@ -286,11 +339,12 @@ def qmatmul_with_stats(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> Tuple[jax.
         (((a.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=wide,
     )
-    shifted = _rshift_round(acc, fmt.frac_bits)
-    over = jnp.sum((shifted > fmt.qmax) | (shifted < fmt.qmin))
-    under = jnp.sum((shifted == 0) & (acc != 0))
+    shifted = _rshift_round(acc, shift)
+    over = jnp.sum((shifted > fmt.qmax) | (shifted < fmt.qmin),
+                   dtype=STATS_DTYPE)
+    under = jnp.sum((shifted == 0) & (acc != 0), dtype=STATS_DTYPE)
     out = _saturate(shifted, fmt)
-    total = jnp.asarray(out.size, over.dtype)
+    total = jnp.asarray(out.size, STATS_DTYPE)
     return out, FxpStats(over, under, total)
 
 

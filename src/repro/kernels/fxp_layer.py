@@ -29,6 +29,7 @@ The pure-jnp oracle is :func:`repro.kernels.ref.fxp_layer_ref`.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +47,7 @@ LAYER_ACTIVATIONS = ("none", "exact", "rational", "pwl2", "pwl4")
 
 
 def _kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, fmt: FxpFormat,
-            activation: str, k_steps: int):
+            activation: str, shift: int, k_steps: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -62,24 +63,29 @@ def _kernel(a_ref, b_ref, bias_ref, o_ref, acc_ref, *, fmt: FxpFormat,
     def _epilogue():
         # The epilogue traces the *same* fixedpoint/activation functions the
         # ref oracle composes — one definition of every rule, so the fused
-        # path cannot drift from the chained semantics.
-        h = fixedpoint.rshift_round_saturate(acc_ref[...], fmt)
+        # path cannot drift from the chained semantics.  ``shift`` carries
+        # mixed-format operands (per-tensor QuantPlan) into the output
+        # format; for single-format layers it equals ``fmt.frac_bits``.
+        h = fixedpoint.requantize(acc_ref[...], shift, fmt)
         h = fixedpoint.qadd(h, bias_ref[...][None, :], fmt)
         if activation != "none":
             h = get_qsigmoid(activation)(h, fmt)
         o_ref[...] = h.astype(fmt.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "activation", "bm", "bn",
-                                             "bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fmt", "activation", "shift",
+                                             "bm", "bn", "bk", "interpret"))
 def fxp_layer_pallas(a: jax.Array, b: jax.Array, bias: jax.Array,
                      fmt: FxpFormat, activation: str = "none",
-                     bm: int = 128, bn: int = 128, bk: int = 256,
+                     shift: Optional[int] = None, bm: int = 128,
+                     bn: int = 128, bk: int = 256,
                      interpret: bool = False) -> jax.Array:
     """a: (M, K), b: (K, N), bias: (N,) intN -> act(a @ b + bias): (M, N) intN.
 
     M, N, K must be divisible by the block sizes (the ``ops.py`` wrapper pads
-    to the tuned blocks).  ``interpret=True`` runs the body on CPU.
+    to the tuned blocks).  ``shift`` is the requantization amount for
+    mixed-format operands (None = ``fmt.frac_bits``, the single-format
+    semantics).  ``interpret=True`` runs the body on CPU.
     """
     if activation not in LAYER_ACTIVATIONS:
         raise KeyError(f"activation must be one of {LAYER_ACTIVATIONS}")
@@ -90,8 +96,9 @@ def fxp_layer_pallas(a: jax.Array, b: jax.Array, bias: jax.Array,
         (a.shape, b.shape, bm, bn, bk)
     k_steps = k // bk
 
-    kernel = functools.partial(_kernel, fmt=fmt, activation=activation,
-                               k_steps=k_steps)
+    kernel = functools.partial(
+        _kernel, fmt=fmt, activation=activation,
+        shift=fmt.frac_bits if shift is None else shift, k_steps=k_steps)
 
     return pl.pallas_call(
         kernel,

@@ -166,11 +166,15 @@ def fxp_qmatmul(a: jax.Array, b: jax.Array, fmt: FxpFormat,
 
 
 def fxp_layer(a: jax.Array, w: jax.Array, bias: jax.Array, fmt: FxpFormat,
-              activation: str = "none", impl: str = "pallas",
+              activation: str = "none", shift: Optional[int] = None,
+              impl: str = "pallas",
               blocks: Optional[tune.Blocks] = None) -> jax.Array:
     """Fused fixed-point layer: ``act(qadd(qmatmul(a, w), bias))`` in one
-    kernel dispatch.  a: (M, K), w: (K, N), bias: (N,) -> (M, N), all in
-    ``fmt``; ``activation`` is a Qn.m sigmoid name or ``"none"`` (logits).
+    kernel dispatch.  a: (M, K), w: (K, N), bias: (N,) -> (M, N); bias and
+    the output are in ``fmt``; ``activation`` is a Qn.m sigmoid name or
+    ``"none"`` (logits).  ``shift`` is the mixed-format requantization
+    amount (``m_a + m_w - m_out`` from a per-tensor QuantPlan); None keeps
+    the single-format semantics where every operand shares ``fmt``.
 
     Bit-identical to the chained ``fxp_qmatmul`` -> ``qadd`` -> ``qsigmoid``
     path (same epilogue math, traced from the same activation functions);
@@ -179,20 +183,20 @@ def fxp_layer(a: jax.Array, w: jax.Array, bias: jax.Array, fmt: FxpFormat,
     """
     _tick()
     if impl in ("xla", "ref"):
-        return ref_ops.fxp_layer_ref(a, w, bias, fmt, activation)
+        return ref_ops.fxp_layer_ref(a, w, bias, fmt, activation, shift)
     (m, k), n = a.shape, w.shape[1]
     if blocks is None:
         def make_call(blk):
             za, zw = _tuning_operands(m, k, n, fmt, blk)
             zb = jnp.zeros((zw.shape[1],), fmt.dtype)
-            return fxp_layer_pallas(za, zw, zb, fmt, activation,
+            return fxp_layer_pallas(za, zw, zb, fmt, activation, shift=shift,
                                     bm=blk[0], bn=blk[1], bk=blk[2])
 
         blocks = _matmul_tuning("layer", m, k, n, fmt, make_call)
     bm, bn, bk = blocks
     ap, wp, m0, n0 = _pad_matmul(a, w, blocks)
     biasp, _ = _pad_axis(bias, 0, bn)
-    out = fxp_layer_pallas(ap, wp, biasp, fmt, activation,
+    out = fxp_layer_pallas(ap, wp, biasp, fmt, activation, shift=shift,
                            bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())
     return out[:m0, :n0]
 

@@ -20,24 +20,32 @@ __all__ = ["fxp_qmatmul_ref", "fxp_layer_ref", "fxp_layer_ref_with_stats",
            "pwl_activation_ref", "tree_ensemble_ref", "flash_attention_ref"]
 
 
-def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat) -> jax.Array:
-    """Integer-exact oracle: the MCU round-shift-saturate matmul model."""
+def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat,
+                    shift: int | None = None) -> jax.Array:
+    """Integer-exact oracle: the MCU round-shift-saturate matmul model.
+
+    ``shift`` overrides the requantization amount for mixed-format operands
+    (``ma + mb - m_out``, per the artifact's QuantPlan); None keeps the
+    single-format semantics (shift by ``fmt.frac_bits``).
+    """
     acc = jax.lax.dot_general(a.astype(jnp.int64), b.astype(jnp.int64),
                               (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.int64)
-    return fxp.rshift_round_saturate(acc, fmt)
+    return fxp.requantize(acc, fmt.frac_bits if shift is None else shift, fmt)
 
 
 def fxp_layer_ref(a: jax.Array, b: jax.Array, bias: jax.Array,
-                  fmt: fxp.FxpFormat, activation: str = "none") -> jax.Array:
+                  fmt: fxp.FxpFormat, activation: str = "none",
+                  shift: int | None = None) -> jax.Array:
     """Fused-layer oracle: the chained ops, composed.
 
     ``act(qadd(fxp_qmatmul_ref(a, b), bias))`` — by construction bit-identical
     to the historical three-dispatch path, which is the fused kernel's
     correctness contract (modulo the documented int32-vs-int64 accumulator
-    range for extreme inputs).
+    range for extreme inputs).  ``bias`` and the output share ``fmt``;
+    ``shift`` carries mixed-format inputs into it (see fxp_qmatmul_ref).
     """
-    h = fxp_qmatmul_ref(a, b, fmt)
+    h = fxp_qmatmul_ref(a, b, fmt, shift)
     h = fxp.qadd(h, bias[None, :], fmt)
     if activation != "none":
         h = get_qsigmoid(activation)(h, fmt)
@@ -45,10 +53,11 @@ def fxp_layer_ref(a: jax.Array, b: jax.Array, bias: jax.Array,
 
 
 def fxp_layer_ref_with_stats(a: jax.Array, b: jax.Array, bias: jax.Array,
-                             fmt: fxp.FxpFormat, activation: str = "none"):
+                             fmt: fxp.FxpFormat, activation: str = "none",
+                             shift: int | None = None):
     """Fused-layer oracle with the matmul stage's overflow/underflow stats
     (the same accounting the chained ref/xla lowerings reported)."""
-    h, stats = fxp.qmatmul_with_stats(a, b, fmt)
+    h, stats = fxp.qmatmul_with_stats(a, b, fmt, shift)
     h = fxp.qadd(h, bias[None, :], fmt)
     if activation != "none":
         h = get_qsigmoid(activation)(h, fmt)

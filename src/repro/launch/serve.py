@@ -60,7 +60,9 @@ def serve_classifier(args) -> None:
     svc = InferenceService()
     try:
         ep = svc.register(args.classifier, model, target, mesh=mesh,
-                          policy=BatchingPolicy(max_batch=64 * max(1, args.dp)))
+                          policy=BatchingPolicy(max_batch=64 * max(1, args.dp)),
+                          # auto* formats calibrate on the training split
+                          calibration=x[:1024] if target.is_calibrated else None)
         art = ep.artifact
         print(f"endpoint {args.classifier}: {target.number_format}/"
               f"{target.backend}, replicas={art.replicas}"
@@ -100,8 +102,12 @@ def main(argv=None):
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel serving replicas (classifier mode); "
                          "requires >= dp jax devices")
-    ap.add_argument("--format", choices=["flt", "fxp32", "fxp16", "fxp8"],
-                    default="fxp16", help="classifier serving number format")
+    ap.add_argument("--format",
+                    choices=["flt", "fxp32", "fxp16", "fxp8",
+                             "auto32", "auto16", "auto8"],
+                    default="fxp16",
+                    help="classifier serving number format (auto* = "
+                         "calibrated per-tensor plans from the train split)")
     ap.add_argument("--backend", choices=["ref", "xla", "pallas"],
                     default="xla", help="classifier serving backend")
     ap.add_argument("--requests", type=int, default=512,

@@ -3,7 +3,7 @@
 Sigmoid hidden units (the paper's experiments force sigmoid so the C3
 approximations apply), linear output layer, softmax cross-entropy training
 with AdamW.  The *desktop* model is float32; conversion to the embedded
-artifact happens in :mod:`repro.core.convert`.
+artifact happens in :mod:`repro.compile`.
 
 The embedded inference loop reuses one activation buffer between layers
 (paper §III-D "reuse the output buffer of one layer as input to the next") —

@@ -1,0 +1,22 @@
+"""repro.quant — calibration-driven per-tensor Qn.m planning.
+
+The paper's §IX limitation (one global Qn.m exponent for the whole model)
+removed as a subsystem: run the model in float over a sample batch
+(:mod:`repro.quant.calibrate`), observe per-tensor ranges, and freeze a
+:class:`QuantPlan` (:mod:`repro.quant.plan`) assigning every tensor path the
+maximal fractional bits that cannot saturate on the observed data.  Selected
+through ``Target(number_format="auto16" | "auto8" | "auto32")``:
+
+    from repro.compile import compile, Target
+
+    art = compile(model, Target(number_format="auto16", backend="pallas"),
+                  calibration=x_train[:256])
+    art.quant_plan.describe()       # per-tensor Qn.m table
+    art.report(x_test, y_test)      # paper-style resource report
+"""
+
+from .calibrate import activation_range, amax, make_plan
+from .plan import Calibration, QuantPlan, choose_frac_bits, plan_formats
+
+__all__ = ["QuantPlan", "Calibration", "plan_formats", "choose_frac_bits",
+           "make_plan", "amax", "activation_range"]

@@ -5,8 +5,9 @@ the same model under several endpoints, or re-registering it after a config
 reload, should not pay it twice.  The cache keys on the sha256 fingerprint
 of the *extracted* parameter tree (see :mod:`repro.compile.fingerprint`)
 plus the frozen Target plus the mesh descriptor (axes/platform/strategy) for
-replica-sharded artifacts, so equal parameters hit regardless of which model
-object they came from.
+replica-sharded artifacts plus the QuantPlan descriptor for calibrated
+targets, so equal parameters hit regardless of which model object they came
+from.
 
 Compilation is *single-flight*: when N threads race a miss on the same key
 (a restart storm re-registering every endpoint at once), exactly one thread
@@ -29,13 +30,17 @@ from repro.compile.artifact import mesh_descriptor
 
 __all__ = ["ArtifactCache"]
 
-# (fingerprint, Target, mesh descriptor or None)
-CacheKey = Tuple[str, Target, Optional[Tuple]]
+# (fingerprint, Target, mesh descriptor or None, QuantPlan descriptor or None)
+CacheKey = Tuple[str, Target, Optional[Tuple], Optional[Tuple]]
 
 
 class ArtifactCache:
     """LRU cache of compiled artifacts keyed by ``(fingerprint, Target,
     mesh)``, with single-flight compilation under concurrency."""
+
+    # Calibration-plan memo bound: plans are tiny (a format table), but the
+    # memo must not grow without limit under adversarial batch churn.
+    _PLAN_MEMO_CAP = 256
 
     def __init__(self, capacity: Optional[int] = None):
         self.capacity = capacity
@@ -44,6 +49,11 @@ class ArtifactCache:
         self._lock = threading.Lock()
         self._entries: "OrderedDict[CacheKey, CompiledArtifact]" = OrderedDict()
         self._inflight: Dict[CacheKey, Future] = {}
+        # (fingerprint, Target, sha256 of the calibration batch) -> QuantPlan.
+        # Deriving a plan replays the model in float over the whole batch —
+        # far from free — so repeat registrations (the restart storm the
+        # single-flight path exists for) must not pay it per call.
+        self._plans: "OrderedDict[Tuple, Any]" = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -66,21 +76,64 @@ class ArtifactCache:
                 self._entries.popitem(last=False)
         return artifact
 
+    def _plan_for(self, lowering, params, fingerprint: str, target: Target,
+                  calibration: Any):
+        """Memoized QuantPlan derivation (see get_or_compile)."""
+        import hashlib
+
+        import numpy as np
+
+        from repro.quant import make_plan
+
+        if calibration is None:  # make_plan raises the helpful error
+            return make_plan(lowering, params, target, calibration)
+        batch = np.ascontiguousarray(np.asarray(calibration, np.float32))
+        sha = hashlib.sha256(batch.tobytes()).hexdigest()
+        memo_key = (fingerprint, target, sha)
+        with self._lock:
+            plan = self._plans.get(memo_key)
+            if plan is not None:
+                self._plans.move_to_end(memo_key)
+                return plan
+        plan = make_plan(lowering, params, target, batch)
+        with self._lock:
+            self._plans[memo_key] = plan
+            self._plans.move_to_end(memo_key)
+            while len(self._plans) > self._PLAN_MEMO_CAP:
+                self._plans.popitem(last=False)
+        return plan
+
     def get_or_compile(self, model: Any, target: Target,
-                       mesh: Any = None,
-                       strategy: str = "auto") -> CompiledArtifact:
-        """Return the cached artifact for (model params, target, mesh),
+                       mesh: Any = None, strategy: str = "auto",
+                       calibration: Any = None) -> CompiledArtifact:
+        """Return the cached artifact for (model params, target, mesh, plan),
         compiling on miss.  Extraction runs unconditionally (it is cheap and
         yields the fingerprint); the quantize/lower/specialize stages are
         what a hit skips.  Concurrent misses on one key compile once
         (single-flight); the racing callers receive the winner's artifact.
+
+        ``calibration`` (a sample batch) is required for calibrated
+        (``auto*``) Targets: the per-tensor plan is derived *before* keying,
+        so two different batches that calibrate to the same plan share one
+        artifact, while batches that genuinely change the plan get their
+        own entry — the plan, not the batch, determines the program.  The
+        derivation itself (a float replay of the model over the batch) is
+        memoized by (fingerprint, Target, batch sha256), so repeat
+        registrations of one endpoint stay as cheap as fixed-format hits.
         """
         kind = model_kind(model)
-        params = get_lowering(kind).extract_params(model)
+        lowering = get_lowering(kind)
+        params = lowering.extract_params(model)
+        fingerprint = fingerprint_params(kind, params)
         mesh_key = None
         if mesh is not None:
             mesh_key = mesh_descriptor(mesh, resolve_mesh_strategy(mesh, strategy))
-        key: CacheKey = (fingerprint_params(kind, params), target, mesh_key)
+        plan = None
+        if target.is_calibrated:
+            plan = self._plan_for(lowering, params, fingerprint, target,
+                                  calibration)
+        key: CacheKey = (fingerprint, target, mesh_key,
+                         None if plan is None else plan.descriptor())
         with self._lock:
             art = self._entries.get(key)
             if art is not None:
@@ -100,7 +153,7 @@ class ArtifactCache:
                 self.hits += 1
             return art
         try:
-            art = compile_from_params(kind, params, target)
+            art = compile_from_params(kind, params, target, plan=plan)
             if mesh is not None:
                 art = specialize_mesh(art, mesh, strategy)
         except BaseException as e:

@@ -42,7 +42,8 @@ class InferenceService:
                  target: Optional[Target] = None,
                  artifact: Optional[CompiledArtifact] = None,
                  policy: Optional[BatchingPolicy] = None,
-                 mesh: Any = None, mesh_strategy: str = "auto") -> Endpoint:
+                 mesh: Any = None, mesh_strategy: str = "auto",
+                 calibration: Any = None) -> Endpoint:
         """Host ``model`` compiled for ``target`` (deduped through the
         artifact cache), or a pre-compiled ``artifact``, under ``name``.
 
@@ -52,12 +53,18 @@ class InferenceService:
         shard.  Mesh-specialized artifacts are cached per (fingerprint,
         Target, mesh descriptor), so single-device and sharded endpoints of
         one model coexist without recompiling the lowering.
+
+        ``calibration`` (a sample input batch) is required when ``target``
+        uses a calibrated number format (``auto16``/``auto8``/``auto32``):
+        the compile pipeline derives the per-tensor QuantPlan from it, and
+        the cache keys on the resulting plan.
         """
         if (artifact is None) == (model is None):
             raise TypeError("pass either model (+ target) or artifact")
         if artifact is None:
             art = self.cache.get_or_compile(model, target or Target(),
-                                            mesh=mesh, strategy=mesh_strategy)
+                                            mesh=mesh, strategy=mesh_strategy,
+                                            calibration=calibration)
         else:
             if mesh is not None:
                 from repro.compile import resolve_mesh_strategy

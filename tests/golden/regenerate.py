@@ -17,6 +17,11 @@ bytes is the review artifact):
 
     PYTHONPATH=src python tests/golden/regenerate.py
 
+Verify without writing (the refactor audit: recompute everything, assert the
+stored bytes are unchanged — exits non-zero on any byte difference):
+
+    PYTHONPATH=src python tests/golden/regenerate.py --verify
+
 The test suite (``tests/test_golden_vectors.py``) imports the case builders
 below, so the stored bytes and the checked expectations can never drift
 apart structurally.
@@ -33,13 +38,22 @@ GOLDEN_DIR = os.path.dirname(os.path.abspath(__file__))
 
 # Canonical serving Targets per classifier kind (tag -> Target kwargs).
 # The ref backend generates the bytes; parity (ref == xla == pallas) and
-# mesh bit-identity extend them to every backend and mesh size.
+# mesh bit-identity extend them to every backend and mesh size.  Calibrated
+# (auto*) tags compile against the fixed training split as the calibration
+# batch — deterministic, so their bytes are as stable as the fixed ones.
 CLASSIFIER_TARGETS = {
     "flt": dict(number_format="flt"),
     "fxp32": dict(number_format="fxp32"),
     "fxp16": dict(number_format="fxp16"),
     "fxp16_pwl4": dict(number_format="fxp16", sigmoid="pwl4"),
+    "auto16": dict(number_format="auto16"),
+    "auto8": dict(number_format="auto8"),
 }
+
+# Tags whose Target is calibrated (compile needs the calibration batch).
+CALIBRATED_TAGS = tuple(
+    t for t, kw in CLASSIFIER_TARGETS.items()
+    if kw["number_format"].startswith("auto"))
 
 LM_TARGETS = {
     "flt": dict(number_format="flt"),
@@ -99,13 +113,25 @@ def make_lm_model():
     return LMModel(cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
 
 
-def compute_classifier_vectors(kind: str, model, xte) -> dict:
-    """tag -> (N_EVAL_ROWS,) int32 predictions on the ref backend."""
+def compile_for_tag(model, tag: str, backend: str, calibration):
+    """Compile ``model`` for one canonical golden tag on ``backend``.
+
+    The single compile spelling shared by regeneration and the conformance
+    tests, so the calibration batch for auto* tags (the fixed training
+    split) can never drift between the two.
+    """
     from repro.compile import Target, compile
 
+    kw = CLASSIFIER_TARGETS[tag]
+    return compile(model, Target(backend=backend, **kw),
+                   calibration=calibration if tag in CALIBRATED_TAGS else None)
+
+
+def compute_classifier_vectors(kind: str, model, xte, xtr) -> dict:
+    """tag -> (N_EVAL_ROWS,) int32 predictions on the ref backend."""
     out = {}
-    for tag, kw in CLASSIFIER_TARGETS.items():
-        art = compile(model, Target(backend="ref", **kw))
+    for tag in CLASSIFIER_TARGETS:
+        art = compile_for_tag(model, tag, "ref", xtr)
         out[tag] = np.asarray(art.predict(xte), np.int32)
     return out
 
@@ -139,7 +165,7 @@ def regenerate(kinds=None) -> dict:
     for kind, model in classifiers.items():
         if kinds and kind not in kinds:
             continue
-        vecs = compute_classifier_vectors(kind, model, xte)
+        vecs = compute_classifier_vectors(kind, model, xte, xtr)
         np.savez(golden_path(kind), **vecs)
         written[kind] = golden_path(kind)
     if not kinds or "lm" in kinds:
@@ -148,7 +174,50 @@ def regenerate(kinds=None) -> dict:
     return written
 
 
+def verify() -> bool:
+    """Recompute every golden vector and compare against the stored bytes
+    WITHOUT writing anything — the refactor-audit mode.
+
+    A tag present on disk but no longer produced (or vice versa) is only a
+    coverage note; a tag whose recomputed bytes differ from the stored ones
+    is a numerics change and fails the verification.  Returns True when all
+    shared tags are byte-identical.
+    """
+    from repro.compile import lowering_kinds
+
+    xtr, ytr, xte, c = make_dataset()
+    classifiers = train_classifiers(xtr, ytr, c)
+    ok = True
+    for kind in sorted(lowering_kinds()):
+        fresh = (compute_lm_vectors() if kind == "lm"
+                 else compute_classifier_vectors(kind, classifiers[kind],
+                                                 xte, xtr))
+        try:
+            with np.load(golden_path(kind)) as z:
+                stored = {tag: z[tag] for tag in z.files}
+        except FileNotFoundError:
+            print(f"{kind}: MISSING archive")
+            ok = False
+            continue
+        for tag in sorted(set(fresh) | set(stored)):
+            if tag not in stored:
+                print(f"{kind}/{tag}: not in stored archive (new tag; "
+                      f"regenerate to add it)")
+            elif tag not in fresh:
+                print(f"{kind}/{tag}: stored but no longer computed")
+            elif np.array_equal(fresh[tag], stored[tag]):
+                print(f"{kind}/{tag}: byte-identical")
+            else:
+                print(f"{kind}/{tag}: BYTES CHANGED")
+                ok = False
+    return ok
+
+
 if __name__ == "__main__":
+    import sys
+
+    if "--verify" in sys.argv[1:]:
+        sys.exit(0 if verify() else 1)
     for kind, path in regenerate().items():
         with np.load(path) as z:
             tags = ", ".join(sorted(z.files))

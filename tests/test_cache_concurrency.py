@@ -63,10 +63,10 @@ def test_racing_compiles_yield_one_artifact(blobs_model, monkeypatch):
     compiles = []
     real = cache_mod.compile_from_params
 
-    def slow_compile(kind, params, target):
+    def slow_compile(kind, params, target, **kw):
         compiles.append(threading.get_ident())
         time.sleep(0.05)  # hold the window open so every thread overlaps
-        return real(kind, params, target)
+        return real(kind, params, target, **kw)
 
     monkeypatch.setattr(cache_mod, "compile_from_params", slow_compile)
     target = Target(number_format="fxp16", backend="xla")
@@ -101,12 +101,12 @@ def test_failed_compile_propagates_and_unwedges(blobs_model, monkeypatch):
     calls = []
     real = cache_mod.compile_from_params
 
-    def flaky_compile(kind, params, target):
+    def flaky_compile(kind, params, target, **kw):
         calls.append(None)
         if len(calls) == 1:
             time.sleep(0.05)
             raise RuntimeError("lowering exploded")
-        return real(kind, params, target)
+        return real(kind, params, target, **kw)
 
     monkeypatch.setattr(cache_mod, "compile_from_params", flaky_compile)
     target = Target(number_format="fxp16")

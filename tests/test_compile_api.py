@@ -2,18 +2,21 @@
 
 Covers the acceptance surface of the compiler redesign:
 
-* ``convert()`` shim == ``compile()`` for all model kinds x number formats
-  (x tree layouts for trees) — bit-identical predictions;
+* keyword-form ``compile(model, number_format=...)`` == Target-form for all
+  model kinds x number formats (x tree layouts) — bit-identical predictions;
 * ``backend='xla'`` == ``backend='ref'``; ``backend='pallas'`` agrees on the
   tree and MLP fixed-point paths (interpret mode off-TPU);
 * ``CompiledArtifact.save``/``load`` round-trips to identical predictions
   and memory reports;
 * batch policy, Target validation, registry dispatch, and the ``lm``
   lowering (gate sigmoid threaded through the config, no module global).
+
+(The ``repro.core.convert`` deprecation shim this file used to compare
+against is deleted; ``tests/test_convert.py`` keeps the paper-level
+pipeline assertions on the compile API.)
 """
 
 import os
-import warnings
 
 import numpy as np
 import pytest
@@ -53,30 +56,27 @@ NAMES = ["tree", "logistic", "mlp", "svm-linear", "svm-rbf", "svm-poly"]
 
 
 # ---------------------------------------------------------------------------
-# shim equivalence: convert() == compile() for every kind x format (x layout)
+# keyword form == Target form for every kind x format (x layout)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("fmt", ["flt", "fxp32", "fxp16"])
 @pytest.mark.parametrize("name", NAMES)
-def test_convert_shim_equals_compile(trained, blobs_module, name, fmt):
+def test_keyword_form_equals_target_form(trained, blobs_module, name, fmt):
+    """``compile(model, number_format=...)`` (the migration spelling of the
+    deleted ``convert()`` shim) builds the identical artifact."""
     _, _, xte, _, _ = blobs_module
-    from repro.core import convert
-
     model = trained[name]
     layouts = ("iterative", "ifelse", "oblivious") if name == "tree" else ("iterative",)
     for layout in layouts:
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            legacy = convert(model, number_format=fmt, tree_layout=layout)
+        kw = compile(model, number_format=fmt, tree_layout=layout)
         art = compile(model, Target(number_format=fmt, tree_layout=layout))
-        np.testing.assert_array_equal(legacy.predict(xte), art.predict(xte))
-        assert legacy.memory_bytes() == art.memory_report()
+        np.testing.assert_array_equal(kw.predict(xte), art.predict(xte))
+        assert kw.memory_bytes() == art.memory_report()
+        assert kw.cache_key == art.cache_key
 
 
-def test_convert_shim_warns(trained):
-    from repro.core import convert
-
-    with pytest.warns(DeprecationWarning):
-        convert(trained["logistic"], number_format="flt")
+def test_target_and_kwargs_are_exclusive(trained):
+    with pytest.raises(TypeError, match="not both"):
+        compile(trained["logistic"], Target(), number_format="flt")
 
 
 # ---------------------------------------------------------------------------

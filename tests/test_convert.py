@@ -1,7 +1,10 @@
-"""Pipeline integration tests: train -> serialize -> convert -> predict.
+"""Pipeline integration tests: train -> serialize -> compile -> predict.
 
 The paper's sanity check (§V-A): FLT artifacts match desktop accuracy
 exactly; FXP32 stays close; memory model behaves; stats counters work.
+(Ported off the deleted ``repro.core.convert`` shim: every call goes through
+``repro.compile.compile``, whose keyword form is a drop-in for the old
+``convert(model, number_format=...)`` spelling.)
 """
 
 import os
@@ -9,7 +12,7 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import ConversionOptions, convert
+from repro.compile import Target, compile
 from repro.models import (train_decision_tree, train_kernel_svm,
                           train_linear_svm, train_logistic, train_mlp)
 from repro.train.checkpoint import restore_pytree, save_pytree
@@ -47,7 +50,7 @@ def test_flt_matches_desktop(trained, blobs_module, name):
     _, _, xte, yte, _ = blobs_module
     model = trained[name]
     desktop = model.predict(xte)
-    em = convert(model, number_format="flt")
+    em = compile(model, number_format="flt")
     got = em.predict(xte)
     if name in ("svm-rbf", "svm-poly"):
         # f64-trained artifact served in f32: paper reports small losses here;
@@ -63,21 +66,21 @@ def test_fxp32_accuracy_close(trained, blobs_module, name):
     _, _, xte, yte, _ = blobs_module
     model = trained[name]
     desk_acc = (model.predict(xte) == yte).mean()
-    em = convert(model, number_format="fxp32")
+    em = compile(model, number_format="fxp32")
     acc = (em.predict(xte) == yte).mean()
     assert acc >= desk_acc - 0.02
 
 
 @pytest.mark.parametrize("name", NAMES)
 def test_memory_shrinks_with_fxp16(trained, name):
-    m32 = convert(trained[name], number_format="fxp32").memory_bytes()
-    m16 = convert(trained[name], number_format="fxp16").memory_bytes()
+    m32 = compile(trained[name], number_format="fxp32").memory_bytes()
+    m16 = compile(trained[name], number_format="fxp16").memory_bytes()
     assert m16["flash"] < m32["flash"]
 
 
 def test_stats_are_populated_for_fxp(trained, blobs_module):
     _, _, xte, _, _ = blobs_module
-    em = convert(trained["mlp"], number_format="fxp16")
+    em = compile(trained["mlp"], number_format="fxp16")
     _, stats = em.predict_with_stats(xte)
     assert stats["total"] > 0
     assert 0 <= stats["overflow_rate"] <= 1
@@ -96,10 +99,10 @@ def test_mlp_sigmoid_options_accuracy(trained, blobs_module):
     gap so further regressions still fail.
     """
     _, _, xte, yte, _ = blobs_module
-    base = (convert(trained["mlp"], number_format="flt").predict(xte) == yte).mean()
+    base = (compile(trained["mlp"], number_format="flt").predict(xte) == yte).mean()
     bounds = {"rational": 0.20, "pwl2": 0.05, "pwl4": 0.05}
     for sig, allowed in bounds.items():
-        em = convert(trained["mlp"], number_format="flt", sigmoid=sig)
+        em = compile(trained["mlp"], number_format="flt", sigmoid=sig)
         acc = (em.predict(xte) == yte).mean()
         assert acc >= base - allowed, f"{sig} dropped accuracy too far"
 
@@ -108,7 +111,7 @@ def test_tree_layouts_identical_predictions(trained, blobs_module):
     _, _, xte, _, _ = blobs_module
     preds = {}
     for layout in ("iterative", "ifelse", "oblivious"):
-        em = convert(trained["tree"], number_format="fxp32", tree_layout=layout)
+        em = compile(trained["tree"], number_format="fxp32", tree_layout=layout)
         preds[layout] = em.predict(xte)
     np.testing.assert_array_equal(preds["iterative"], preds["ifelse"])
     np.testing.assert_array_equal(preds["iterative"], preds["oblivious"])
@@ -126,10 +129,20 @@ def test_serialize_roundtrip_through_checkpoint(tmp_path, trained, blobs_module)
     restored = type(model)(np.asarray(tree["coef"]), np.asarray(tree["intercept"]))
     assert meta["kind"] == "logistic"
     np.testing.assert_array_equal(
-        convert(restored, number_format="fxp32").predict(xte),
-        convert(model, number_format="fxp32").predict(xte))
+        compile(restored, number_format="fxp32").predict(xte),
+        compile(model, number_format="fxp32").predict(xte))
 
 
 def test_invalid_options_raise():
     with pytest.raises(KeyError):
-        ConversionOptions(number_format="fxp7")
+        Target(number_format="fxp7")
+
+
+def test_legacy_convert_shim_is_gone():
+    """The PR-1 deprecation shim had one migration cycle; it is deleted."""
+    import repro.core
+
+    assert not hasattr(repro.core, "convert")
+    assert not hasattr(repro.core, "ConversionOptions")
+    with pytest.raises(ImportError):
+        from repro.core.convert import convert  # noqa: F401

@@ -311,3 +311,113 @@ def test_property_qmatmul_matches_integer_model(shape, seed):
     want = np.clip(shifted, fmt.qmin, fmt.qmax).astype(np.int16)
     got = np.asarray(fxp.qmatmul(qa, qb, fmt))
     np.testing.assert_array_equal(got, want)
+
+
+class TestStatsCounterDtype:
+    """ISSUE-5 satellite: saturation counters must be explicit and portable.
+
+    The old spelling asked for ``jnp.int64``, which silently downgrades to
+    int32 whenever jax x64 is disabled (the default) — an int32 counter
+    wearing a wide label.  The contract now: in-program counters are
+    *explicitly* ``STATS_DTYPE`` (int32, safe for any single batch), and
+    ``FxpStats.merge`` promotes concrete values to numpy int64 so long
+    serving runs accumulating per-request stats never wrap.
+    """
+
+    def test_stats_dtype_is_explicit_int32(self):
+        assert fxp.STATS_DTYPE == jnp.int32  # not an x64-dependent surprise
+
+    def test_in_program_counters_use_stats_dtype(self):
+        from repro.compile.lowerings.common import zero_stats
+
+        z = zero_stats()
+        assert z.overflow.dtype == fxp.STATS_DTYPE
+        _, s = fxp.quantize_with_stats(jnp.ones((4, 4)) * 1e9, fxp.FXP16)
+        assert s.overflow.dtype == fxp.STATS_DTYPE
+        assert s.total.dtype == fxp.STATS_DTYPE
+        q = jnp.ones((4, 4), jnp.int16)
+        _, s = fxp.qmatmul_with_stats(q, q, fxp.FXP16)
+        assert s.overflow.dtype == fxp.STATS_DTYPE
+
+    def test_merge_promotes_to_int64_and_does_not_wrap(self):
+        near_max = np.int32(2 ** 31 - 10)
+        s = fxp.FxpStats(near_max, near_max, near_max)
+        merged = s.merge(s)  # would wrap (go negative) in int32
+        want = 2 * (2 ** 31 - 10)
+        assert int(merged.overflow) == want
+        assert int(merged.total) == want
+        assert np.asarray(merged.overflow).dtype == np.int64
+
+    def test_merge_accumulation_over_many_calls(self):
+        # The long-serving-run shape: fold per-call int32 counters into one
+        # running total; the total must exceed int32 without wrapping.
+        per_call = fxp.FxpStats(*(jnp.asarray(2 ** 30, fxp.STATS_DTYPE),) * 3)
+        total = fxp.FxpStats(np.int64(0), np.int64(0), np.int64(0))
+        for _ in range(8):
+            total = total.merge(per_call)
+        assert int(total.total) == 8 * 2 ** 30  # > int32 max
+
+    def test_merge_still_traces_inside_jit(self):
+        import jax
+
+        @jax.jit
+        def f(x):
+            _, s1 = fxp.quantize_with_stats(x, fxp.FXP16)
+            _, s2 = fxp.quantize_with_stats(x * 2, fxp.FXP16)
+            return s1.merge(s2)
+
+        s = f(jnp.ones((3, 3)) * 1e9)
+        assert int(s.overflow) == 18
+
+
+class TestRequantize:
+    def test_requantize_default_matches_rshift_round_saturate(self):
+        acc = jnp.asarray([[12345, -9876, 1 << 20]], jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(fxp.requantize(acc, fxp.FXP16.frac_bits, fxp.FXP16)),
+            np.asarray(fxp.rshift_round_saturate(acc, fxp.FXP16)))
+
+    def test_requantize_shift_zero_only_saturates(self):
+        acc = jnp.asarray([40000, -40000, 123], jnp.int32)
+        out = np.asarray(fxp.requantize(acc, 0, fxp.FXP16))
+        np.testing.assert_array_equal(out, [32767, -32768, 123])
+
+    def test_requantize_rejects_negative_shift(self):
+        with pytest.raises(ValueError, match=">= 0"):
+            fxp.requantize(jnp.asarray([1]), -1, fxp.FXP16)
+
+    def test_mixed_format_layer_shift_semantics(self):
+        """A Q·.8 x Q·.12 product requantized into Q·.6 via shift=14 equals
+        the float composition rounded at the output scale."""
+        from repro.kernels import ref as R
+
+        a = np.asarray([[0.5, -1.25]], np.float32)    # frac 8
+        w = np.asarray([[0.031], [0.5]], np.float32)  # frac 12
+        qa = np.round(a * 2 ** 8).astype(np.int16)
+        qw = np.round(w * 2 ** 12).astype(np.int16)
+        out_fmt = fxp.FxpFormat(16, 6)
+        got = np.asarray(R.fxp_qmatmul_ref(
+            jnp.asarray(qa), jnp.asarray(qw), out_fmt, shift=8 + 12 - 6))
+        true = (qa.astype(np.int64) @ qw.astype(np.int64)) / 2.0 ** 20
+        want = np.clip(np.round(true * 2 ** 6), out_fmt.qmin, out_fmt.qmax)
+        np.testing.assert_array_equal(got, want.astype(np.int16))
+
+
+def test_fused_layer_shift_backend_parity():
+    """The per-layer QuantPlan shift must not break fused-kernel parity:
+    ops.fxp_layer(shift=s) == fxp_layer_ref(shift=s) bit-for-bit, for
+    shifts on both sides of the single-format default."""
+    from repro.kernels import ops
+    from repro.kernels import ref as R
+
+    fmt = fxp.FXP16  # out format Q12.4; inputs pretend to be Q.8 x Q.12
+    rng = np.random.RandomState(11)
+    a = jnp.asarray(rng.randint(-900, 900, (9, 21)).astype(np.int16))
+    w = jnp.asarray(rng.randint(-900, 900, (21, 5)).astype(np.int16))
+    b = jnp.asarray(rng.randint(-900, 900, (5,)).astype(np.int16))
+    for shift in (0, 4, 11, 20):
+        for act in ("none", "pwl4"):
+            ref = np.asarray(R.fxp_layer_ref(a, w, b, fmt, act, shift))
+            pal = np.asarray(ops.fxp_layer(a, w, b, fmt, act, shift=shift))
+            np.testing.assert_array_equal(
+                ref, pal, err_msg=f"shift={shift}/{act}: kernel diverged")

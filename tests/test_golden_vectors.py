@@ -57,10 +57,11 @@ def test_every_lowering_has_goldens(goldens):
 @pytest.mark.parametrize("kind", CLASSIFIER_KINDS)
 def test_classifier_backends_match_goldens(classifiers, dataset, goldens,
                                            kind, backend):
-    """Every backend reproduces the stored bytes for every canonical Target."""
-    _, _, xte, _ = dataset
-    for tag, kw in G.CLASSIFIER_TARGETS.items():
-        art = compile(classifiers[kind], Target(backend=backend, **kw))
+    """Every backend reproduces the stored bytes for every canonical Target
+    (auto* tags calibrate on the fixed training split via compile_for_tag)."""
+    xtr, _, xte, _ = dataset
+    for tag in G.CLASSIFIER_TARGETS:
+        art = G.compile_for_tag(classifiers[kind], tag, backend, xtr)
         np.testing.assert_array_equal(
             art.predict(xte), goldens[kind][tag],
             err_msg=f"{kind}/{tag}/{backend} diverged from golden bytes")
@@ -98,11 +99,11 @@ def test_sharded_classifier_matches_goldens(classifiers, dataset, goldens,
                     f"XLA_FLAGS=--xla_force_host_platform_device_count="
                     f"{mesh_size})")
     mesh = make_serving_mesh(mesh_size)
-    for tag, kw in G.CLASSIFIER_TARGETS.items():
-        art = compile(classifiers[kind], Target(backend="xla", **kw))
+    xtr, _, xte, _ = dataset
+    for tag in G.CLASSIFIER_TARGETS:
+        art = G.compile_for_tag(classifiers[kind], tag, "xla", xtr)
         for strategy in ("fused", "spmd"):
             sharded = art.specialize_mesh(mesh, strategy)
-            _, _, xte, _ = dataset
             np.testing.assert_array_equal(
                 sharded.predict(xte), goldens[kind][tag],
                 err_msg=f"{kind}/{tag}/mesh{mesh_size}/{strategy} diverged "

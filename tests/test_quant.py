@@ -1,0 +1,327 @@
+"""Tests for the calibration-driven quantization subsystem (``repro.quant``).
+
+Covers the ISSUE-5 acceptance surface:
+
+* planner unit behavior — maximal fractional bits, scale groups, the
+  accumulator-width and non-negative-shift constraints;
+* the no-saturation property: formats planned on a calibration batch never
+  overflow on that batch (seeded sweep over feature scalings);
+* calibrated backend parity — ``ref == xla == pallas`` bit-identical for
+  every classifier lowering at both container widths;
+* plan round-trips — artifact save/load reproduces predictions and
+  ``cache_key`` without the calibration batch; the serving cache keys on
+  the plan;
+* the paper-style resource report.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.compile import Target, compile, load
+from repro.models import (train_decision_tree, train_kernel_svm,
+                          train_linear_svm, train_logistic, train_mlp)
+from repro.quant import Calibration, QuantPlan, choose_frac_bits, plan_formats
+
+KINDS = ("tree", "logistic", "mlp", "svm-linear", "svm-rbf", "svm-poly")
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.RandomState(7)
+    n, f, c = 500, 10, 3
+    means = rng.randn(c, f) * 3.0
+    y = rng.randint(0, c, n).astype(np.int32)
+    x = (means[y] + rng.randn(n, f)).astype(np.float32)
+    # Skewed per-feature scales: the single-exponent stress case the
+    # calibrated planner exists for.
+    x *= np.logspace(-1.5, 0.8, f, dtype=np.float32)[None, :]
+    return x[:350], y[:350], x[350:], y[350:], c
+
+
+@pytest.fixture(scope="module")
+def trained(data):
+    xtr, ytr, _, _, c = data
+    return {
+        "tree": train_decision_tree(xtr, ytr, c, max_depth=5),
+        "logistic": train_logistic(xtr, ytr, c, epochs=12),
+        "mlp": train_mlp(xtr, ytr, c, hidden=(12,), epochs=8),
+        "svm-linear": train_linear_svm(xtr, ytr, c, epochs=12),
+        "svm-rbf": train_kernel_svm(xtr, ytr, c, kernel="rbf",
+                                    n_prototypes=24, epochs=8),
+        "svm-poly": train_kernel_svm(xtr, ytr, c, kernel="poly",
+                                     n_prototypes=24, epochs=8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# planner units
+# ---------------------------------------------------------------------------
+def test_choose_frac_bits_maximal():
+    # frac is the LARGEST value with amax * 2^frac <= qmax.
+    for total in (8, 16, 32):
+        qmax = 2 ** (total - 1) - 1
+        for amax in (1e-6, 0.3, 1.0, 5.0, 1000.0):
+            frac = choose_frac_bits(amax, total)
+            if amax <= qmax:  # representable at all in this container
+                assert amax * (1 << frac) <= qmax
+            if frac < total - 1:
+                assert amax * (1 << (frac + 1)) > qmax
+    assert choose_frac_bits(0.0, 16) == 15  # all-zero tensor: every frac bit
+    assert choose_frac_bits(1e9, 8) == 0    # unrepresentable: clamp, not raise
+
+
+def test_plan_groups_share_min_frac():
+    plan = plan_formats(Calibration(
+        ranges={"a": 0.5, "b": 100.0, "c": 7.0},
+        groups=(("a", "b"),)), 16)
+    assert plan.frac_bits("a") == plan.frac_bits("b")
+    assert plan.frac_bits("a") == choose_frac_bits(100.0, 16)
+    assert plan.frac_bits("c") == choose_frac_bits(7.0, 16)
+
+
+def test_plan_shift_is_non_negative():
+    plan = plan_formats(Calibration(
+        ranges={"in": 1000.0, "w": 1000.0, "out": 1e-4},
+        matmuls=(("in", "w", "out"),),
+        acc_ranges={"out": 1e-4}), 16)
+    assert plan.shift("in", "w", "out") >= 0
+
+
+def test_plan_accumulator_constraint_caps_frac():
+    # A huge float accumulator forces fa+fb down so the int32 (and the ref
+    # wide-dtype) accumulator cannot wrap: amax_acc*2*2^(fa+fb) <= 2^31-1.
+    plan = plan_formats(Calibration(
+        ranges={"in": 1.0, "w": 1.0, "out": 1.0},
+        matmuls=(("in", "w", "out"),),
+        acc_ranges={"out": 1e6}), 16)
+    fa, fb = plan.frac_bits("in"), plan.frac_bits("w")
+    assert 1e6 * 2.0 * (1 << (fa + fb)) <= 2 ** 31 - 1
+    # ...and without accumulator pressure the same ranges keep max frac.
+    relaxed = plan_formats(Calibration(
+        ranges={"in": 1.0, "w": 1.0, "out": 1.0},
+        matmuls=(("in", "w", "out"),),
+        acc_ranges={"out": 1.0}), 16)
+    assert (relaxed.frac_bits("in") + relaxed.frac_bits("w")) > (fa + fb)
+
+
+def test_plan_dict_and_descriptor_roundtrip():
+    plan = plan_formats(Calibration(
+        ranges={"a": 0.5, "b": 3.25}, groups=(("a", "b"),)), 8)
+    again = QuantPlan.from_dict(plan.to_dict())
+    assert again == plan
+    assert again.descriptor() == plan.descriptor()
+    assert hash(again) == hash(plan)
+    assert "Q" in plan.describe()
+
+
+# ---------------------------------------------------------------------------
+# Target surface
+# ---------------------------------------------------------------------------
+def test_target_auto_formats():
+    t = Target(number_format="auto16")
+    assert t.is_calibrated and t.is_quantized and t.container_bits == 16
+    with pytest.raises(ValueError, match="QuantPlan"):
+        t.fmt
+    assert not Target(number_format="fxp16").is_calibrated
+    assert Target(number_format="flt").container_bits is None
+    with pytest.raises(KeyError):
+        Target(number_format="auto7")
+
+
+def test_compile_auto_requires_calibration(trained):
+    with pytest.raises(ValueError, match="calibration"):
+        compile(trained["mlp"], Target(number_format="auto16"))
+
+
+def test_lm_rejects_calibrated_formats():
+    import dataclasses
+
+    import jax
+
+    from repro.compile import LMModel
+    from repro.configs import get_config
+    from repro.lm import model as M
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                              d_head=16, d_ff=64, vocab_size=64)
+    lm = LMModel(cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
+    with pytest.raises(NotImplementedError,
+                       match="does not support calibrated"):
+        compile(lm, Target(number_format="auto8"),
+                calibration=np.zeros((4, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# the no-saturation property + backend parity (acceptance)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", KINDS)
+def test_no_saturation_on_calibration_batch(trained, data, kind):
+    """A calibrated plan never overflows on the batch that calibrated it."""
+    xtr, _, _, _, _ = data
+    art = compile(trained[kind], Target(number_format="auto16",
+                                        backend="ref"), calibration=xtr)
+    _, stats = art.predict_with_stats(xtr)
+    assert stats["overflow"] == 0, f"{kind}: planned formats saturated"
+
+
+@given(scale=st.floats(min_value=-2.0, max_value=2.0),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=12, deadline=None)
+def test_no_saturation_property_under_rescaling(scale, seed):
+    """The property holds across feature rescalings (the axis the fixed
+    global exponent fails on) — seeded logistic models, auto16."""
+    rng = np.random.RandomState(seed)
+    c, f = 3, 6
+    x = (rng.randn(120, f) * (10.0 ** scale)).astype(np.float32)
+    y = rng.randint(0, c, 120).astype(np.int32)
+    model = train_logistic(x, y, c, epochs=3)
+    art = compile(model, Target(number_format="auto16", backend="ref"),
+                  calibration=x)
+    _, stats = art.predict_with_stats(x)
+    assert stats["overflow"] == 0
+
+
+@pytest.mark.parametrize("width", (16, 8))
+@pytest.mark.parametrize("kind", KINDS)
+def test_auto_backend_parity_bit_identical(trained, data, kind, width):
+    """ref == xla == pallas for calibrated targets, bit-for-bit (the planner
+    keeps every accumulator inside the narrowest backend accumulator)."""
+    xtr, _, xte, _, _ = data
+    preds = {}
+    for backend in ("ref", "xla", "pallas"):
+        art = compile(trained[kind],
+                      Target(number_format=f"auto{width}", backend=backend),
+                      calibration=xtr)
+        preds[backend] = art.predict(xte)
+    np.testing.assert_array_equal(preds["ref"], preds["xla"],
+                                  err_msg=f"{kind}/auto{width}: ref != xla")
+    np.testing.assert_array_equal(preds["ref"], preds["pallas"],
+                                  err_msg=f"{kind}/auto{width}: ref != pallas")
+
+
+# ---------------------------------------------------------------------------
+# round-trips: archive, cache, serving
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ("tree", "mlp", "svm-rbf"))
+def test_plan_archive_roundtrip(tmp_path, trained, data, kind):
+    """save -> load reproduces predictions AND cache identity without the
+    calibration batch (the plan rides in the archive)."""
+    xtr, _, xte, _, _ = data
+    art = compile(trained[kind], Target(number_format="auto16",
+                                        backend="xla"), calibration=xtr)
+    path = os.path.join(tmp_path, f"{kind}.embml")
+    art.save(path)
+    art2 = load(path)
+    assert art2.quant_plan == art.quant_plan
+    assert art2.cache_key == art.cache_key
+    np.testing.assert_array_equal(art.predict(xte), art2.predict(xte))
+    _, s1 = art.predict_with_stats(xte)
+    _, s2 = art2.predict_with_stats(xte)
+    assert s1 == s2
+
+
+def test_archive_version_stamps_by_content(tmp_path, trained, data):
+    """Plan-less archives stay v1 (readable by pre-quant releases); only
+    archives that actually carry a QuantPlan advance to v2."""
+    import msgpack
+
+    from repro.train.checkpoint import decompress_bytes
+
+    def version_of(path):
+        with open(path, "rb") as f:
+            return msgpack.unpackb(decompress_bytes(f.read()),
+                                   raw=False, strict_map_key=False)["version"]
+
+    xtr, _, _, _, _ = data
+    fixed_path = os.path.join(tmp_path, "fixed.embml")
+    compile(trained["tree"], Target(number_format="fxp16")).save(fixed_path)
+    assert version_of(fixed_path) == 1
+    auto_path = os.path.join(tmp_path, "auto.embml")
+    compile(trained["tree"], Target(number_format="auto16"),
+            calibration=xtr).save(auto_path)
+    assert version_of(auto_path) == 2
+
+
+def test_artifact_cache_keys_on_plan(trained, data):
+    from repro.serve.cache import ArtifactCache
+
+    xtr, _, _, _, _ = data
+    cache = ArtifactCache()
+    t = Target(number_format="auto16", backend="xla")
+    a = cache.get_or_compile(trained["mlp"], t, calibration=xtr)
+    b = cache.get_or_compile(trained["mlp"], t, calibration=xtr)
+    assert a is b and cache.stats()["misses"] == 1
+    # A batch that calibrates to a different plan is a different program:
+    # it must get its own cache entry, not alias the first one.
+    c = cache.get_or_compile(trained["mlp"], t, calibration=xtr * 50.0)
+    assert c.quant_plan != a.quant_plan
+    assert c is not a and len(cache) == 2
+    # ...but any batch reproducing the same plan hits.
+    d = cache.get_or_compile(trained["mlp"], t, calibration=xtr.copy())
+    assert d is a
+    with pytest.raises(ValueError, match="calibration"):
+        cache.get_or_compile(trained["tree"], t)
+
+
+def test_artifact_cache_memoizes_plan_derivation(trained, data, monkeypatch):
+    """Repeat registrations must not re-run the calibration replay (a full
+    float pass over the batch) — hits stay as cheap as fixed-format hits."""
+    import repro.quant as Q
+    from repro.serve.cache import ArtifactCache
+
+    xtr, _, _, _, _ = data
+    calls = []
+    real = Q.make_plan
+    monkeypatch.setattr(Q, "make_plan",
+                        lambda *a, **kw: (calls.append(1), real(*a, **kw))[1])
+    cache = ArtifactCache()
+    t = Target(number_format="auto16", backend="xla")
+    a = cache.get_or_compile(trained["mlp"], t, calibration=xtr)
+    for _ in range(3):
+        assert cache.get_or_compile(trained["mlp"], t, calibration=xtr) is a
+    assert len(calls) == 1  # one replay, three memoized hits
+
+
+def test_service_register_calibrated_endpoint(trained, data):
+    from repro.serve import InferenceService
+
+    xtr, _, xte, _, _ = data
+    with InferenceService() as svc:
+        svc.register("auto", trained["tree"],
+                     Target(number_format="auto16", backend="xla"),
+                     calibration=xtr)
+        direct = compile(trained["tree"],
+                         Target(number_format="auto16", backend="xla"),
+                         calibration=xtr)
+        np.testing.assert_array_equal(svc.predict("auto", xte[:32]),
+                                      direct.predict(xte[:32]))
+
+
+# ---------------------------------------------------------------------------
+# the resource report
+# ---------------------------------------------------------------------------
+def test_report_fixed_and_calibrated(trained, data):
+    xtr, _, xte, yte, _ = data
+    fixed = compile(trained["mlp"], Target(number_format="fxp16"))
+    rep = fixed.report(xte, yte)
+    assert rep["formats"] == {"*": repr(Target(number_format="fxp16").fmt)}
+    assert rep["model_bytes"] == fixed.flash_bytes
+    assert {"accuracy", "accuracy_float", "accuracy_delta",
+            "saturation"} <= set(rep)
+
+    auto = compile(trained["mlp"], Target(number_format="auto16"),
+                   calibration=xtr)
+    rep = auto.report(xte, yte)
+    # one entry per planned tensor path, with the calibration evidence
+    assert set(rep["formats"]) == set(auto.quant_plan.paths())
+    assert set(rep["calibration_ranges"]) == set(auto.quant_plan.paths())
+    assert rep["accuracy"] == pytest.approx(
+        float((auto.predict(xte) == yte).mean()))
+
+    flt = compile(trained["mlp"], Target(number_format="flt"))
+    assert flt.report()["formats"] == {}

@@ -27,7 +27,7 @@ def main(argv=None) -> None:
 
     from . import (compile_backends, fig3_4_time, fig5_6_memory,
                    fig7_8_modifications, kernels_bench, lm_quantized,
-                   quant_accuracy, roofline_table, serve_sharded,
+                   quant_accuracy, roofline_table, serve_http, serve_sharded,
                    serve_throughput, table_v_accuracy, table_vi_vii_sigmoid,
                    table_viii_tools)
     from .common import RESULTS_DIR
@@ -47,6 +47,7 @@ def main(argv=None) -> None:
         "roofline": roofline_table.run,
         "serve": lambda: serve_throughput.run(smoke=args.quick)["rows"],
         "serve_sharded": lambda: serve_sharded.run(smoke=args.quick)["rows"],
+        "serve_http": lambda: serve_http.run(smoke=args.quick)["rows"],
         "quant": lambda: quant_accuracy.run(smoke=args.quick),
     }
     if args.only:

@@ -18,6 +18,13 @@ N-replica serving mesh (``repro.sharding.rules.make_serving_mesh``) with
 replica-aware buckets — on CPU, export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first to emulate the
 mesh.
+
+``--http HOST:PORT`` turns classifier mode into a long-lived network
+server (``repro.serve.net.HttpServer``): ``/v1/predict/<name>`` +
+``/v1/health``/``/v1/stats``/``/v1/endpoints``, admission control
+(``--rate-limit``/``--queue-high``), SLO tracking (``--slo-ms``), and —
+with ``--degrade`` and a calibrated ``--format`` — load-adaptive precision
+falling back to ``--fallback-format`` under overload.
 """
 
 from __future__ import annotations
@@ -41,10 +48,43 @@ _WEIGHT_MODES = {
 }
 
 
+def _serve_http(svc, args) -> None:
+    """Run the asyncio HTTP front end until interrupted (or --http-duration)."""
+    import asyncio
+
+    from repro.serve.net import AdmissionPolicy, SLOTracker
+
+    host, _, port = args.http.rpartition(":")
+    admission = AdmissionPolicy(
+        rate_limit=args.rate_limit, burst=args.burst,
+        queue_high=args.queue_high)
+    slo = SLOTracker(default_slo_ms=args.slo_ms)
+    server = svc.serve_http(host=host or "127.0.0.1", port=int(port),
+                            admission=admission, slo=slo)
+
+    async def run():
+        await server.start()
+        print(f"serving on {server.address} "
+              f"(endpoints: {svc.router.names()})", flush=True)
+        try:
+            if args.http_duration is None:
+                await asyncio.Event().wait()
+            else:
+                await asyncio.sleep(args.http_duration)
+        finally:
+            await server.stop()
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+
+
 def serve_classifier(args) -> None:
     """Serve a synthetic-blobs classifier endpoint, optionally DP-sharded."""
     from repro.models import (synthetic_blobs, train_decision_tree,
                               train_logistic, train_mlp)
+    from repro.serve import DegradationPolicy
     from repro.sharding.rules import make_serving_mesh
 
     x, y, c = synthetic_blobs(2048)
@@ -68,6 +108,20 @@ def serve_classifier(args) -> None:
               f"{target.backend}, replicas={art.replicas}"
               + (f" ({art.mesh_strategy})" if art.mesh is not None else "")
               + f", buckets={ep.policy.buckets()}")
+        if args.degrade:
+            if not target.is_calibrated:
+                raise SystemExit("--degrade needs a calibrated --format "
+                                 "(auto32/auto16/auto8) so the fallback "
+                                 "plan coexists in the artifact cache")
+            svc.enable_degradation(
+                args.classifier, model,
+                target.replace(number_format=args.fallback_format),
+                policy=DegradationPolicy(p99_high_ms=args.slo_ms),
+                calibration=x[:1024])
+            print(f"degradation armed: {args.format} -> "
+                  f"{args.fallback_format} under overload")
+        if args.http:
+            return _serve_http(svc, args)
         rows = x[-args.requests:]
         svc.predict(args.classifier, rows[:1])  # absorb warmup
         t0 = time.perf_counter()
@@ -112,6 +166,31 @@ def main(argv=None):
                     default="xla", help="classifier serving backend")
     ap.add_argument("--requests", type=int, default=512,
                     help="rows of traffic to drive in classifier mode")
+    # network serving (classifier mode)
+    ap.add_argument("--http", metavar="HOST:PORT",
+                    help="serve the classifier endpoint over HTTP instead "
+                         "of driving synthetic traffic (port 0 = ephemeral)")
+    ap.add_argument("--http-duration", type=float, default=None,
+                    help="stop the HTTP server after N seconds "
+                         "(default: run until interrupted)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="p99 latency SLO target tracked in /v1/stats (and "
+                         "the degradation p99 watermark with --degrade)")
+    ap.add_argument("--rate-limit", type=float, default=None,
+                    help="sustained requests/s admitted per endpoint "
+                         "(token bucket; default unlimited)")
+    ap.add_argument("--burst", type=int, default=32,
+                    help="token-bucket burst capacity for --rate-limit")
+    ap.add_argument("--queue-high", type=int, default=256,
+                    help="scheduler queue depth at which requests are "
+                         "refused with 503 + Retry-After")
+    ap.add_argument("--degrade", action="store_true",
+                    help="arm load-adaptive precision: fall back to "
+                         "--fallback-format under overload (needs a "
+                         "calibrated --format)")
+    ap.add_argument("--fallback-format", choices=["auto32", "auto16", "auto8"],
+                    default="auto8",
+                    help="degraded-precision artifact format for --degrade")
     args = ap.parse_args(argv)
 
     if (args.arch is None) == (args.classifier is None):

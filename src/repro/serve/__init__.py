@@ -12,12 +12,19 @@ Layers (bottom-up):
   (QPS, p50/p95 latency, batch-fill ratio).
 * :mod:`repro.serve.cache` — :class:`ArtifactCache`: single-flight recompile
   dedupe keyed by ``(model fingerprint, Target, mesh)``.
+* :mod:`repro.serve.degrade` — :class:`PrecisionGovernor`: the
+  load-adaptive precision state machine (overload -> serve the ``auto8``
+  fallback artifact instead of shedding load; hysteretic recovery).
 * :mod:`repro.serve.service` — :class:`InferenceService`: the facade
   ``launch/serve.py`` and the benchmarks drive.
+* :mod:`repro.serve.net` — the network serving plane: asyncio HTTP front
+  end with admission control (429/503 + Retry-After) and rolling-window
+  SLO tracking (imported on demand; ``InferenceService.serve_http``).
 """
 
 from .batching import BatchingPolicy, MicroBatcher
 from .cache import ArtifactCache
+from .degrade import DegradationPolicy, PrecisionGovernor
 from .router import Endpoint, EndpointStats, ModelRouter
 from .service import InferenceService
 
@@ -25,6 +32,8 @@ __all__ = [
     "BatchingPolicy",
     "MicroBatcher",
     "ArtifactCache",
+    "DegradationPolicy",
+    "PrecisionGovernor",
     "Endpoint",
     "EndpointStats",
     "ModelRouter",

@@ -131,7 +131,8 @@ class _Request:
     t_enqueue: float
 
 
-# on_batch(n_requests, n_rows, bucket, per-request latencies in seconds)
+# on_batch(n_requests, n_rows, bucket, per-request latencies in seconds,
+#          meta=batch metadata dict or None)
 OnBatch = Callable[[int, int, int, Sequence[float]], None]
 
 
@@ -141,6 +142,12 @@ class MicroBatcher:
     ``predict(x: (bucket, ...)) -> (bucket, ...) per-row outputs``; any
     exception it raises is delivered to every future of that micro-batch
     (the worker keeps serving subsequent batches).
+
+    ``predict`` may instead return ``(outputs, meta)`` where ``meta`` is a
+    dict describing how the batch was served (e.g. the degraded-precision
+    flag): the meta dict is stamped onto every future of the batch as
+    ``future.batch_meta`` *before* the result is set, and forwarded to the
+    ``on_batch`` stats sink.
     """
 
     def __init__(self, predict: Callable[[np.ndarray], np.ndarray],
@@ -184,16 +191,31 @@ class MicroBatcher:
             self._queue.put(_Request(x, fut, time.perf_counter()))
         return fut
 
-    def close(self, drain: bool = True) -> None:
-        """Stop the worker; ``drain`` serves queued requests first."""
+    def depth(self) -> int:
+        """Requests currently queued (including a carried head-of-line
+        request) — the admission/degradation load signal."""
+        return self._queue.qsize() + (1 if self._carry is not None else 0)
+
+    def close(self, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Stop the worker; ``drain`` serves queued requests first.
+
+        Every queued future RESOLVES — served while ``timeout`` (seconds of
+        total drain budget; None = unbounded) allows, rejected with a
+        RuntimeError once the deadline passes or when ``drain`` is False.
+        Nothing is silently dropped.
+        """
         with self._submit_lock:
             if self._closed:
                 return
             self._closed = True
             self._queue.put(None)  # sentinel; no submit can follow it
-        self._worker.join()
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        self._worker.join(timeout)
+        worker_done = not self._worker.is_alive()
         leftovers = []
-        if self._carry is not None:
+        if worker_done and self._carry is not None:
             leftovers.append(self._carry)
             self._carry = None
         while True:
@@ -201,14 +223,26 @@ class MicroBatcher:
                 req = self._queue.get_nowait()
             except queue.Empty:
                 break
-            if req is not None:
-                leftovers.append(req)
+            if req is None:
+                # Shutdown sentinel.  If the worker overran the join timeout
+                # it still needs it to terminate — hand it back and stop
+                # stealing from the queue (FIFO order guarantees no request
+                # sits behind the first sentinel).
+                if not worker_done:
+                    self._queue.put(None)
+                    break
+                continue
+            leftovers.append(req)
         for req in leftovers:
-            if drain:
+            # Serving leftovers requires the worker to be gone (predict is
+            # single-caller by contract) and budget to remain.
+            if drain and worker_done and (
+                    deadline is None or time.perf_counter() < deadline):
                 self._serve([req])
             else:
-                req.future.set_exception(
-                    RuntimeError(f"MicroBatcher '{self.name}' closed"))
+                req.future.set_exception(RuntimeError(
+                    f"MicroBatcher '{self.name}' closed"
+                    + (" (drain deadline exceeded)" if drain else "")))
 
     def __enter__(self):
         return self
@@ -268,20 +302,34 @@ class MicroBatcher:
             pad = np.zeros((bucket - rows,) + x.shape[1:], x.dtype)
             x = np.concatenate([x, pad], axis=0)
         try:
-            y = np.asarray(self.predict(x))[:rows]
+            out = self.predict(x)
+            meta = None
+            if type(out) is tuple:  # (outputs, batch metadata)
+                out, meta = out
+            y = np.asarray(out)[:rows]
         except Exception as e:
             for r in batch:
                 r.future.set_exception(e)
             return
         done = time.perf_counter()
+        # Stats are recorded BEFORE the futures resolve: a caller woken by
+        # its result (e.g. an HTTP client that immediately queries
+        # /v1/stats) must already see the batch that served it counted.
+        if self._on_batch is not None:
+            try:
+                self._on_batch(len(batch), rows, bucket,
+                               [done - r.t_enqueue for r in batch], meta=meta)
+            except Exception:
+                pass  # a stats sink must never take down serving
         off = 0
         for r in batch:
             n = r.x.shape[0]
+            if meta is not None:
+                # Stamped before set_result: a waiter woken by the result
+                # can always read the meta of the batch that served it.
+                r.future.batch_meta = meta
             r.future.set_result(y[off:off + n])
             off += n
-        if self._on_batch is not None:
-            self._on_batch(len(batch), rows, bucket,
-                           [done - r.t_enqueue for r in batch])
 
     def _run(self) -> None:
         while True:

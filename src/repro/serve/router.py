@@ -2,14 +2,24 @@
 
 Each registered :class:`~repro.compile.artifact.CompiledArtifact` gets an
 *endpoint*: its own micro-batching scheduler (classifier artifacts) and a
-rolling stats window — QPS, p50/p95 request latency, mean batch-fill ratio
-(rows per dispatched bucket).  LM artifacts (``kind == 'lm'``) are hosted
-without a batcher (decode already batches along the sequence dimension);
-their ``generate`` calls are routed and accounted through the same stats.
+rolling stats window — QPS, p50/p95/p99 request latency, mean batch-fill
+ratio (rows per dispatched bucket).  LM artifacts (``kind == 'lm'``) are
+hosted without a batcher (decode already batches along the sequence
+dimension); their ``generate`` calls are routed and accounted through the
+same stats.
+
+An endpoint may additionally carry a *fallback* artifact of the same model
+at a narrower precision (``set_fallback``): a
+:class:`~repro.serve.degrade.PrecisionGovernor` watches queue depth and
+rolling p99 at every dispatch and, past its watermarks, routes batches to
+the fallback — load-adaptive precision, shedding bits before shedding
+requests.  Recovery is hysteretic (separate low watermarks + a minimum
+dwell time), so the precision does not flap under oscillating load.
 """
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from collections import deque
@@ -21,10 +31,29 @@ import numpy as np
 from repro.compile.artifact import CompiledArtifact
 
 from .batching import BatchingPolicy, MicroBatcher
+from .degrade import DegradationPolicy, PrecisionGovernor
 
 __all__ = ["EndpointStats", "Endpoint", "ModelRouter"]
 
 _LATENCY_WINDOW = 4096  # most recent request latencies kept for percentiles
+
+
+def _percentiles(lat: np.ndarray, qs=(50, 95, 99)):
+    """Latency percentiles that stay honest on small windows.
+
+    Interpolating percentiles over one or two samples manufactures values
+    no request ever experienced; below 3 samples we switch to nearest-rank
+    (the q-th value IS an observed latency, and the tail percentiles report
+    the window max rather than something interpolated away from it).
+    """
+    if lat.size == 0:
+        return [0.0] * len(qs)
+    if lat.size < 3:
+        s = np.sort(lat)
+        return [float(s[min(lat.size - 1,
+                            max(0, math.ceil(q / 100.0 * lat.size) - 1))])
+                for q in qs]
+    return [float(np.percentile(lat, q)) for q in qs]
 
 
 class EndpointStats:
@@ -38,32 +67,40 @@ class EndpointStats:
         self.n_requests = 0
         self.n_rows = 0
         self.n_batches = 0
+        self.n_degraded_batches = 0
+        self.n_degraded_rows = 0
         self._bucket_rows = 0  # sum of dispatched bucket sizes
         self._latencies = deque(maxlen=_LATENCY_WINDOW)
 
-    def record_batch(self, n_requests, n_rows, bucket, latencies) -> None:
+    def record_batch(self, n_requests, n_rows, bucket, latencies,
+                     meta=None) -> None:
         with self._lock:
             self.n_requests += n_requests
             self.n_rows += n_rows
             self.n_batches += 1
             self._bucket_rows += bucket
             self._latencies.extend(latencies)
+            if meta is not None and meta.get("degraded"):
+                self.n_degraded_batches += 1
+                self.n_degraded_rows += n_rows
+
+    def rolling_p99_ms(self) -> float:
+        """p99 (ms) over the rolling latency window — the degradation
+        governor's latency signal (0.0 while the window is empty)."""
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+        return _percentiles(lat, (99,))[0] * 1e3
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             elapsed = max(time.perf_counter() - self._t0, 1e-9)
             lat = np.asarray(self._latencies, np.float64)
-            # Percentiles need at least two samples to interpolate between;
-            # below that, report the lone observation (or 0.0 when idle)
-            # rather than percentile-ing a near-empty history.  Batch fill is
-            # likewise only defined once a bucket has actually been
-            # dispatched: an idle endpoint reports fill 1.0 (no padding has
-            # been wasted), not a spurious 0% that trips dashboards.
-            if lat.size >= 2:
-                p50 = float(np.percentile(lat, 50) * 1e3)
-                p95 = float(np.percentile(lat, 95) * 1e3)
-            else:
-                p50 = p95 = float(lat[0] * 1e3) if lat.size else 0.0
+            # Percentiles over the rolling window; nearest-rank below 3
+            # samples (see _percentiles).  Batch fill is only defined once a
+            # bucket has actually been dispatched: an idle endpoint reports
+            # fill 1.0 (no padding has been wasted), not a spurious 0% that
+            # trips dashboards.
+            p50, p95, p99 = [v * 1e3 for v in _percentiles(lat)]
             return {
                 "requests": self.n_requests,
                 "rows": self.n_rows,
@@ -72,21 +109,34 @@ class EndpointStats:
                 "rows_per_s": self.n_rows / elapsed,
                 "p50_ms": p50,
                 "p95_ms": p95,
+                "p99_ms": p99,
                 "batch_fill": (self.n_rows / self._bucket_rows
                                if self._bucket_rows else 1.0),
                 "mean_batch_rows": (self.n_rows / self.n_batches
                                     if self.n_batches else 0.0),
+                "degraded_batches": self.n_degraded_batches,
+                "degraded_rows": self.n_degraded_rows,
+                "degraded_fraction": (self.n_degraded_rows / self.n_rows
+                                      if self.n_rows else 0.0),
             }
 
 
 class Endpoint:
-    """One hosted artifact: scheduler + stats behind a name."""
+    """One hosted artifact: scheduler + stats behind a name.
+
+    With :meth:`set_fallback` the endpoint also holds a degraded-precision
+    artifact of the same model; every dispatched batch consults the
+    precision governor and is served by whichever artifact the current
+    load state selects.
+    """
 
     def __init__(self, name: str, artifact: CompiledArtifact,
                  policy: Optional[BatchingPolicy] = None):
         self.name = name
         self.artifact = artifact
         self.stats = EndpointStats()
+        self.fallback: Optional[CompiledArtifact] = None
+        self.governor: Optional[PrecisionGovernor] = None
         # Never build buckets the artifact would reject (fixed batch policy),
         # and make the bucket ladder replica-aware for mesh-specialized
         # artifacts (each bucket = replicas x a pow2 per-device shard; the
@@ -98,9 +148,53 @@ class Endpoint:
             align_top=artifact.max_supported_batch is None)
         self.batcher: Optional[MicroBatcher] = None
         if artifact.kind != "lm":
-            self.batcher = MicroBatcher(artifact.predict, self.policy,
+            self.batcher = MicroBatcher(self._dispatch, self.policy,
                                         on_batch=self.stats.record_batch,
                                         name=name)
+
+    # -- load-adaptive precision ---------------------------------------------
+    def set_fallback(self, artifact: CompiledArtifact,
+                     policy: Optional[DegradationPolicy] = None) -> None:
+        """Arm load-adaptive precision: under overload (per ``policy``'s
+        watermarks) dispatched batches are served by ``artifact`` instead of
+        the primary.  The fallback must host the same model shape: same
+        lowering kind, and no batch ceiling below the scheduler's buckets.
+        """
+        if self.batcher is None:
+            raise TypeError(f"endpoint '{self.name}' hosts an LM artifact; "
+                            f"precision fallback applies to classifiers")
+        if artifact.kind != self.artifact.kind:
+            raise ValueError(
+                f"fallback kind '{artifact.kind}' does not match primary "
+                f"'{self.artifact.kind}'")
+        ceiling = artifact.max_supported_batch
+        if ceiling is not None and ceiling < self.policy.max_batch:
+            raise ValueError(
+                f"fallback max batch {ceiling} is below the scheduler's "
+                f"max_batch {self.policy.max_batch}")
+        self.fallback = artifact
+        self.governor = PrecisionGovernor(policy)
+
+    @property
+    def degraded(self) -> bool:
+        return self.governor is not None and self.governor.degraded
+
+    def _dispatch(self, x: np.ndarray):
+        """The batcher's predict: resolve which artifact serves this batch.
+
+        Returns ``(rows, meta)`` once a fallback is armed — the batcher
+        forwards ``meta`` to the stats sink and stamps it on every future of
+        the batch, so callers (the HTTP front end) can report whether their
+        prediction came from the degraded artifact.
+        """
+        if self.governor is None:
+            return self.artifact.predict(x)
+        degraded = self.governor.observe(
+            self.batcher.depth() if self.batcher is not None else 0,
+            self.stats.rolling_p99_ms())
+        art = self.fallback if degraded else self.artifact
+        return art.predict(x), {"degraded": degraded,
+                                "number_format": art.target.number_format}
 
     # -- classifier surface --------------------------------------------------
     def submit(self, x: np.ndarray) -> Future:
@@ -131,9 +225,9 @@ class Endpoint:
         self.stats.record_batch(1, n * n_tokens, n * n_tokens, [dt])
         return seqs
 
-    def close(self) -> None:
+    def close(self, timeout: Optional[float] = None) -> None:
         if self.batcher is not None:
-            self.batcher.close()
+            self.batcher.close(timeout=timeout)
 
 
 class ModelRouter:
@@ -182,9 +276,13 @@ class ModelRouter:
             eps = sorted(self._endpoints.items())
         return {name: ep.stats.snapshot() for name, ep in eps}
 
-    def close(self) -> None:
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Close every endpoint; ``timeout`` bounds the *total* drain time
+        (each endpoint gets whatever remains of the shared deadline)."""
         with self._lock:
             eps = list(self._endpoints.values())
             self._endpoints.clear()
+        deadline = None if timeout is None else time.perf_counter() + timeout
         for ep in eps:
-            ep.close()
+            ep.close(None if deadline is None
+                     else max(0.0, deadline - time.perf_counter()))

@@ -8,12 +8,19 @@
 
     fut = svc.submit("digits", row)        # async: concurrent.futures.Future
     preds = svc.predict("digits", rows)    # sync convenience
-    svc.stats()                            # per-endpoint QPS / p50 / p95 / fill
-    svc.close()
+    svc.stats()                            # per-endpoint QPS / p50/p95/p99
+    svc.close()                            # (timeout= bounds the drain)
 
 Registration compiles through the :class:`~repro.serve.cache.ArtifactCache`,
 so registering the same parameters for the same Target twice (two endpoint
 names, a restart loop, an A/B alias) reuses the compiled artifact.
+
+Network serving: ``svc.serve_http(...)`` builds the asyncio HTTP front end
+(:class:`repro.serve.net.HttpServer`) over this service, and
+``svc.enable_degradation(name, ...)`` arms an endpoint with a
+narrower-precision fallback artifact (compiled through the same cache, so
+``auto16`` and ``auto8`` of one model coexist as two cache entries) that
+serves under overload — see :mod:`repro.serve.degrade`.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ from repro.compile import CompiledArtifact, Target
 
 from .batching import BatchingPolicy
 from .cache import ArtifactCache
+from .degrade import DegradationPolicy
 from .router import Endpoint, ModelRouter
 
 __all__ = ["InferenceService"]
@@ -83,14 +91,60 @@ class InferenceService:
             art = self.cache.put(artifact) if artifact.fingerprint else artifact
         return self.router.register(name, art, policy)
 
+    def enable_degradation(self, name: str, model: Any = None,
+                           target: Optional[Target] = None,
+                           artifact: Optional[CompiledArtifact] = None,
+                           policy: Optional[DegradationPolicy] = None,
+                           calibration: Any = None) -> Endpoint:
+        """Arm endpoint ``name`` with a degraded-precision fallback.
+
+        Pass either a pre-compiled ``artifact`` or ``model`` + ``target``
+        (compiled through the shared cache, so the primary and fallback
+        artifacts of one model — e.g. ``auto16`` and ``auto8`` plans —
+        coexist as two cache entries keyed by their plan descriptors).
+        Under overload (``policy`` watermarks, queue depth or rolling p99)
+        the endpoint's dispatcher serves batches with the fallback and
+        recovers with hysteresis when load subsides.
+        """
+        ep = self.router[name]
+        if (artifact is None) == (model is None):
+            raise TypeError("pass either model (+ target) or artifact")
+        if artifact is None:
+            artifact = self.cache.get_or_compile(model, target or Target(),
+                                                 calibration=calibration)
+        ep.set_fallback(artifact, policy)
+        return ep
+
     def unregister(self, name: str) -> None:
         self.router.unregister(name)
 
     def endpoint(self, name: str) -> Endpoint:
         return self.router[name]
 
-    def close(self) -> None:
-        self.router.close()
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Close every endpoint, draining queued requests.  ``timeout``
+        bounds the total drain (seconds): requests that cannot be served in
+        time are rejected with an error — every future resolves either way.
+        """
+        self.router.close(timeout=timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Alias of :meth:`close` named for the serving lifecycle: stop
+        accepting, serve what is queued (bounded by ``timeout``), shut down.
+        """
+        self.close(timeout=timeout)
+
+    def serve_http(self, host: str = "127.0.0.1", port: int = 0,
+                   admission: Any = None, slo: Any = None):
+        """Build (not start) the asyncio HTTP front end for this service:
+        ``asyncio.run(svc.serve_http(...).serve())`` or ``await
+        server.start()`` inside a running loop.  See
+        :class:`repro.serve.net.HttpServer`.
+        """
+        from .net import HttpServer
+
+        return HttpServer(self, host=host, port=port, admission=admission,
+                          slo=slo)
 
     def __enter__(self):
         return self

@@ -469,7 +469,50 @@ def test_stats_two_requests_percentiles_ordered(artifacts, blobs_module):
     finally:
         svc.close()
     assert snap["requests"] == 2
-    assert snap["p95_ms"] >= snap["p50_ms"] > 0.0
+    assert snap["p99_ms"] >= snap["p95_ms"] >= snap["p50_ms"] > 0.0
+
+
+def test_small_sample_percentiles_are_nearest_rank():
+    """Below 3 samples every percentile is an OBSERVED latency: no
+    interpolation manufacturing values between (or past) real requests."""
+    from repro.serve.router import _percentiles
+
+    assert _percentiles(np.array([])) == [0.0, 0.0, 0.0]
+    assert _percentiles(np.array([7.0])) == [7.0, 7.0, 7.0]
+    two = np.array([1.0, 9.0])
+    assert _percentiles(two) == [1.0, 9.0, 9.0]
+    # the tail percentiles report the window max, never past it
+    assert max(_percentiles(two)) == 9.0
+    # >= 3 samples: the interpolating percentile path
+    assert _percentiles(np.array([1.0, 2.0, 3.0]), (50,)) == [2.0]
+
+
+def test_stats_p99_tracks_tail_latency():
+    from repro.serve.router import EndpointStats
+
+    stats = EndpointStats()
+    # 99 fast requests + 1 slow one: p99 must see the tail, p50 must not
+    for latency_s in [0.001] * 99 + [1.0]:
+        stats.record_batch(1, 1, 1, [latency_s])
+    snap = stats.snapshot()
+    assert snap["p50_ms"] == pytest.approx(1.0)
+    assert snap["p99_ms"] > 5.0 > snap["p95_ms"]
+    assert snap["degraded_batches"] == 0
+    assert snap["degraded_fraction"] == 0.0
+
+
+def test_stats_degraded_batch_accounting():
+    from repro.serve.router import EndpointStats
+
+    stats = EndpointStats()
+    stats.record_batch(2, 2, 2, [0.01, 0.01],
+                       meta={"degraded": False, "number_format": "auto16"})
+    stats.record_batch(2, 6, 8, [0.01, 0.01],
+                       meta={"degraded": True, "number_format": "auto8"})
+    snap = stats.snapshot()
+    assert snap["degraded_batches"] == 1
+    assert snap["degraded_rows"] == 6
+    assert snap["degraded_fraction"] == pytest.approx(6 / 8)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,618 @@
+"""Tests for the network serving plane (``repro.serve.net``) + degradation.
+
+* protocol: HTTP/1.1 framing units over fed StreamReaders — request line,
+  headers, Content-Length bodies, keep-alive, every ProtocolError status;
+* admission: token-bucket refill / 429 Retry-After math and queue-depth
+  503s, all with explicit ``now`` (no sleeping);
+* slo: rolling-histogram percentiles (nearest-rank at bucket edges),
+  time-window expiry, violation counters;
+* degrade: the PrecisionGovernor hysteresis state machine (engage on
+  either watermark, conjunctive recovery, min-hold no-flap), and the
+  end-to-end state machine on a live endpoint — overload forced with a
+  slowed primary artifact, degraded predictions bit-matched against the
+  stored ``auto8`` golden vectors;
+* scheduler shutdown: ``MicroBatcher.close`` drains bounded by the
+  deadline and every in-flight future resolves (served or rejected —
+  never silently dropped);
+* HttpServer end-to-end over real sockets: routes, errors, keep-alive,
+  admission refusals, stats surface, drain-on-stop;
+* ``launch/serve.py --http`` in-process CLI smoke.
+"""
+
+import asyncio
+import dataclasses
+import json
+import socket
+import threading
+import time
+from concurrent.futures import wait
+
+import numpy as np
+import pytest
+
+from golden import regenerate as G
+from repro.serve import (BatchingPolicy, DegradationPolicy, InferenceService,
+                         MicroBatcher, PrecisionGovernor)
+from repro.serve.net import (AdmissionController, AdmissionPolicy,
+                             HttpServer, ProtocolError, RollingHistogram,
+                             SLOTracker, read_request, response_bytes)
+
+pytestmark = pytest.mark.filterwarnings("ignore")
+
+
+# ---------------------------------------------------------------------------
+# shared artifacts: the golden dataset/trainer so bit-identity is checkable
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def golden_tree():
+    xtr, ytr, xte, c = G.make_dataset()
+    model = G.train_classifiers(xtr, ytr, c)["tree"]
+    art16 = G.compile_for_tag(model, "auto16", "xla", xtr)
+    art8 = G.compile_for_tag(model, "auto8", "xla", xtr)
+    with np.load(G.golden_path("tree")) as z:
+        goldens = {tag: z[tag].copy() for tag in ("auto16", "auto8")}
+    return art16, art8, xte, goldens
+
+
+def _slowed(art, delay_s: float):
+    """The artifact with a per-batch sleep injected (same output bytes)."""
+    orig = art._predict
+
+    def wrapped(x):
+        out = orig(x)
+        time.sleep(delay_s)
+        return out
+
+    return dataclasses.replace(art, _predict=wrapped)
+
+
+# ---------------------------------------------------------------------------
+# protocol framing
+# ---------------------------------------------------------------------------
+def _parse(raw: bytes, **kw):
+    async def go():
+        reader = asyncio.StreamReader()
+        reader.feed_data(raw)
+        reader.feed_eof()
+        return await read_request(reader, **kw)
+
+    return asyncio.run(go())
+
+
+def test_protocol_parses_request():
+    req = _parse(b"POST /v1/predict/t?x=1 HTTP/1.1\r\nHost: a\r\n"
+                 b"Content-Length: 2\r\nX-Weird: v\r\n\r\nhi")
+    assert (req.method, req.path, req.query) == ("POST", "/v1/predict/t", "x=1")
+    assert req.headers["host"] == "a" and req.headers["x-weird"] == "v"
+    assert req.body == b"hi" and req.keep_alive
+
+
+def test_protocol_percent_decoding_and_close():
+    req = _parse(b"GET /v1/predict/my%20ep HTTP/1.1\r\n"
+                 b"Connection: close\r\n\r\n")
+    assert req.path == "/v1/predict/my ep"
+    assert not req.keep_alive
+
+
+def test_protocol_clean_eof_is_none():
+    assert _parse(b"") is None
+
+
+def test_protocol_error_statuses():
+    cases = [
+        (b"GARBAGE\r\n\r\n", 400),                          # bad request line
+        (b"GET / HTTP/1.1\r\nbad header\r\n\r\n", 400),     # no colon
+        (b"POST / HTTP/1.1\r\n\r\n", 411),                  # no length
+        (b"POST / HTTP/1.1\r\nContent-Length: x\r\n\r\n", 400),
+        (b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n", 400),
+        (b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+        (b"GET / HTT", 400),                                # truncated head
+        (b"GET / HTTP/1.1\r\nH: " + b"x" * 40_000 + b"\r\n\r\n", 431),
+    ]
+    for raw, status in cases:
+        with pytest.raises(ProtocolError) as e:
+            _parse(raw)
+        assert e.value.status == status, raw[:40]
+
+
+def test_protocol_body_limits_and_json():
+    with pytest.raises(ProtocolError) as e:
+        _parse(b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\nhi", max_body=10)
+    assert e.value.status == 413
+    with pytest.raises(ProtocolError) as e:   # closed mid-body
+        _parse(b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\nhi")
+    assert e.value.status == 400
+    req = _parse(b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nnot json!")
+    with pytest.raises(ProtocolError) as e:
+        req.json()
+    assert e.value.status == 400
+
+
+def test_response_bytes_framing():
+    raw = response_bytes(200, {"a": 1}, headers={"Retry-After": "0.5"})
+    head, _, payload = raw.partition(b"\r\n\r\n")
+    assert head.startswith(b"HTTP/1.1 200 OK\r\n")
+    assert b"Content-Type: application/json" in head
+    assert b"Retry-After: 0.5" in head
+    assert f"Content-Length: {len(payload)}".encode() in head
+    assert json.loads(payload) == {"a": 1}
+    assert b"Connection: close" in response_bytes(503, keep_alive=False)
+
+
+# ---------------------------------------------------------------------------
+# admission control (explicit clocks, no sleeping)
+# ---------------------------------------------------------------------------
+def test_token_bucket_burst_and_refill():
+    ctrl = AdmissionController(
+        AdmissionPolicy(rate_limit=10.0, burst=3), now=0.0)
+    assert all(ctrl.admit(0, now=0.0).ok for _ in range(3))
+    refused = ctrl.admit(0, now=0.0)
+    assert (refused.ok, refused.status) == (False, 429)
+    # the bucket holds a token again after 1/rate seconds
+    assert refused.retry_after_s == pytest.approx(0.1)
+    assert not ctrl.admit(0, now=0.05).ok
+    assert ctrl.admit(0, now=0.11).ok
+    stats = ctrl.stats()
+    assert stats["admitted"] == 4 and stats["rejected_rate"] == 2
+
+
+def test_queue_watermark_503_with_drain_estimate():
+    ctrl = AdmissionController(AdmissionPolicy(queue_high=8), now=0.0)
+    assert ctrl.admit(7, now=0.0).ok
+    refused = ctrl.admit(8, now=0.0)
+    assert (refused.ok, refused.status) == (False, 503)
+    assert refused.retry_after_s >= 0.05  # the floor
+    ctrl.record_drain(100, 1.0)  # 100 req/s observed drain
+    assert ctrl.admit(8, now=0.0).retry_after_s == pytest.approx(0.04, abs=0.02)
+    assert ctrl.stats()["rejected_queue"] == 2
+
+
+def test_admission_policy_validation():
+    for bad in (dict(rate_limit=0), dict(burst=0), dict(queue_high=0)):
+        with pytest.raises(ValueError):
+            AdmissionPolicy(**bad)
+    assert AdmissionController().admit(10 ** 9).ok is False  # default cap
+    assert AdmissionController(AdmissionPolicy(queue_high=None)).admit(
+        10 ** 9).ok
+
+
+# ---------------------------------------------------------------------------
+# SLO tracking
+# ---------------------------------------------------------------------------
+def test_rolling_histogram_percentiles_nearest_rank():
+    h = RollingHistogram(window_s=60.0)
+    for v in (0.010, 0.020, 0.100):
+        h.record(v, now=1.0)
+    assert h.count(now=1.0) == 3
+    # read at a bucket upper edge: >= the true value, < one ratio above
+    for q, v in ((50, 0.020), (99, 0.100)):
+        got = h.percentile(q, now=1.0)
+        assert v <= got <= v * 1.16
+    assert h.percentile(99, now=1.0) >= h.percentile(50, now=1.0)
+    assert RollingHistogram().percentile(99, now=0.0) == 0.0
+
+
+def test_rolling_histogram_window_expiry():
+    h = RollingHistogram(window_s=10.0, slices=5)
+    h.record(0.5, now=0.0)
+    assert h.count(now=5.0) == 1
+    assert h.count(now=11.0) == 0  # aged out -> percentiles reset
+    assert h.percentile(99, now=11.0) == 0.0
+    h.record(0.25, now=11.0)
+    assert h.count(now=11.0) == 1
+
+
+def test_slo_tracker_violations_and_snapshot():
+    trk = SLOTracker(window_s=60.0, default_slo_ms=50.0,
+                     targets={"fast": 1000.0})
+    for ms in (10, 20, 200):  # one violation of the 50ms default
+        trk.record("ep", ms / 1e3, now=1.0)
+    trk.record("fast", 0.2, now=1.0)  # under its 1000ms target
+    snap = trk.snapshot(now=1.0)
+    ep = snap["ep"]
+    assert ep["requests"] == ep["window_requests"] == 3
+    assert ep["violations"] == 1
+    assert ep["violation_fraction"] == pytest.approx(1 / 3)
+    assert not ep["p99_under_slo"] and snap["fast"]["p99_under_slo"]
+    assert ep["p50_ms"] <= ep["p95_ms"] <= ep["p99_ms"]
+
+
+# ---------------------------------------------------------------------------
+# PrecisionGovernor state machine
+# ---------------------------------------------------------------------------
+def test_governor_engages_on_either_watermark():
+    pol = DegradationPolicy(queue_high=10, queue_low=2, p99_high_ms=100.0,
+                            min_hold_s=0.0)
+    g = PrecisionGovernor(pol)
+    assert not g.observe(9, 50.0, now=0.0)       # under both
+    assert g.observe(10, 0.0, now=1.0)           # queue watermark
+    g2 = PrecisionGovernor(pol)
+    assert g2.observe(0, 100.0, now=0.0)         # p99 watermark alone
+
+
+def test_governor_recovery_is_conjunctive():
+    g = PrecisionGovernor(DegradationPolicy(
+        queue_high=10, queue_low=2, p99_high_ms=100.0, p99_low_ms=40.0,
+        min_hold_s=0.0))
+    assert g.observe(50, 500.0, now=0.0)
+    assert g.observe(0, 90.0, now=1.0)    # queue low, p99 still high: stay
+    assert g.observe(5, 10.0, now=2.0)    # p99 low, queue still high: stay
+    assert not g.observe(1, 10.0, now=3.0)  # both low: recover
+    assert g.snapshot() == {"degraded": False, "observations": 4,
+                            "engagements": 1, "recoveries": 1}
+
+
+def test_governor_min_hold_prevents_flapping():
+    g = PrecisionGovernor(DegradationPolicy(queue_high=10, queue_low=2,
+                                            min_hold_s=5.0))
+    assert g.observe(100, 0.0, now=0.0)  # first engage is never held back
+    # load oscillates across both watermarks faster than min_hold
+    for t in np.arange(0.5, 4.5, 0.5):
+        state = g.observe(0 if int(t * 2) % 2 else 100, 0.0, now=float(t))
+        assert state  # dwell time pins the state
+    assert not g.observe(0, 0.0, now=5.0)  # held long enough: recover
+    assert g.engagements == 1 and g.recoveries == 1
+
+
+def test_governor_force_and_policy_validation():
+    g = PrecisionGovernor()
+    g.force(True, now=0.0)
+    assert g.degraded and g.engagements == 1
+    for bad in (dict(queue_high=0), dict(queue_low=99, queue_high=9),
+                dict(p99_high_ms=-1), dict(p99_low_ms=5.0),
+                dict(p99_high_ms=10.0, p99_low_ms=20.0),
+                dict(min_hold_s=-1)):
+        with pytest.raises(ValueError):
+            DegradationPolicy(**bad)
+    # p99_low defaults to half of p99_high
+    assert DegradationPolicy(p99_high_ms=80.0).p99_low_ms == 40.0
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher graceful shutdown: every future resolves
+# ---------------------------------------------------------------------------
+def test_close_drains_all_queued_futures():
+    def predict(x):
+        return x.sum(axis=tuple(range(1, x.ndim))).astype(np.int32)
+
+    mb = MicroBatcher(predict, BatchingPolicy(max_batch=8, warmup=False))
+    futs = [mb.submit(np.full((1, 4), i, np.float32)) for i in range(40)]
+    mb.close()  # unbounded drain: everything is served
+    got = [int(f.result(timeout=10)[0]) for f in futs]
+    assert got == [4 * i for i in range(40)]
+    with pytest.raises(RuntimeError):
+        mb.submit(np.zeros((1, 4), np.float32))
+    mb.close()  # idempotent
+
+
+def test_close_deadline_rejects_rather_than_drops():
+    def slow(x):
+        time.sleep(0.05)
+        return np.zeros(x.shape[0], np.int32)
+
+    mb = MicroBatcher(slow, BatchingPolicy(max_batch=1, warmup=False,
+                                           max_wait_ms=0.0))
+    futs = [mb.submit(np.zeros((1, 4), np.float32)) for _ in range(50)]
+    t0 = time.perf_counter()
+    mb.close(timeout=0.4)  # budget for ~8 of the 50
+    # Deadline honored (generous CI margin), and EVERY future resolved:
+    # served or rejected with the drain-deadline error — none pending.
+    # (The worker may still be finishing its current batch when close()
+    # returns; wait() gives that last in-flight future time to resolve.)
+    assert time.perf_counter() - t0 < 5.0
+    wait(futs, timeout=10)
+    served = rejected = 0
+    for f in futs:
+        assert f.done()
+        if f.exception() is not None:
+            assert "closed" in str(f.exception())
+            rejected += 1
+        else:
+            served += 1
+    assert served + rejected == 50
+    assert rejected > 0  # the deadline actually cut the drain short
+
+
+def test_close_without_drain_rejects_everything_queued():
+    def slow(x):
+        time.sleep(0.05)
+        return np.zeros(x.shape[0], np.int32)
+
+    mb = MicroBatcher(slow, BatchingPolicy(max_batch=1, warmup=False,
+                                           max_wait_ms=0.0))
+    futs = [mb.submit(np.zeros((1, 4), np.float32)) for _ in range(20)]
+    # join budget far below the 1s the queue needs: close() reclaims the
+    # tail from the still-running worker and must reject, not serve, it
+    mb.close(drain=False, timeout=0.2)
+    wait(futs, timeout=10)
+    assert all(f.done() for f in futs)
+    # the queued tail was rejected, not dropped
+    assert any(f.exception() is not None for f in futs)
+
+
+def test_service_close_resolves_inflight(golden_tree):
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("t", artifact=_slowed(art16, 0.02),
+                 policy=BatchingPolicy(max_batch=4, warmup=False))
+    futs = [svc.submit("t", xte[i]) for i in range(32)]
+    svc.close(timeout=30.0)
+    preds = [int(f.result(timeout=1)[0]) for f in futs]
+    assert len(preds) == 32  # all served within the budget
+
+
+# ---------------------------------------------------------------------------
+# degradation end-to-end: overload -> auto8, bit-identical to its goldens
+# ---------------------------------------------------------------------------
+def test_degradation_engages_and_bit_matches_goldens(golden_tree):
+    art16, art8, xte, goldens = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=_slowed(art16, 0.03),
+                 policy=BatchingPolicy(max_batch=8, warmup=False,
+                                       max_wait_ms=0.0))
+    svc.enable_degradation(
+        "tree", artifact=art8,
+        policy=DegradationPolicy(queue_high=6, queue_low=0, min_hold_s=0.0))
+    ep = svc.endpoint("tree")
+    try:
+        idx = [i % xte.shape[0] for i in range(96)]
+        futs = [svc.submit("tree", xte[i]) for i in idx]
+        preds = [int(f.result(timeout=60)[0]) for f in futs]
+        flags = [f.batch_meta["degraded"] for f in futs]
+        # the flood crossed the queue watermark: the governor engaged and
+        # the degraded batches were served by the auto8 artifact
+        assert ep.governor.engagements >= 1 and any(flags)
+        for i, pred, degraded in zip(idx, preds, flags):
+            tag = "auto8" if degraded else "auto16"
+            assert pred == int(goldens[tag][i]), (i, tag)
+        assert svc.stats()["tree"]["degraded_fraction"] > 0.0
+        # drained: the next lone request observes an empty queue, recovers
+        # (min_hold 0), and is served by the primary again
+        f = svc.submit("tree", xte[0])
+        assert int(f.result(timeout=60)[0]) == int(goldens["auto16"][0])
+        assert f.batch_meta["degraded"] is False
+        assert ep.governor.recoveries >= 1 and not ep.degraded
+    finally:
+        svc.close(timeout=30.0)
+
+
+def test_degradation_hysteresis_no_flap_under_oscillation(golden_tree):
+    art16, art8, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=_slowed(art16, 0.01),
+                 policy=BatchingPolicy(max_batch=4, warmup=False,
+                                       max_wait_ms=0.0))
+    # min_hold longer than the test: at most ONE transition can ever happen
+    svc.enable_degradation(
+        "tree", artifact=art8,
+        policy=DegradationPolicy(queue_high=4, queue_low=0, min_hold_s=60.0))
+    try:
+        for _ in range(6):  # bursts with idle gaps: load oscillates
+            futs = [svc.submit("tree", xte[i]) for i in range(16)]
+            for f in futs:
+                f.result(timeout=60)
+            time.sleep(0.03)
+        g = svc.endpoint("tree").governor
+        assert g.engagements <= 1 and g.recoveries == 0
+    finally:
+        svc.close(timeout=30.0)
+
+
+def test_set_fallback_validation(golden_tree):
+    from repro.models import train_mlp
+
+    art16, _, _, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+    xtr, ytr, _, c = G.make_dataset()
+    mlp = train_mlp(xtr, ytr, c, hidden=(4,), epochs=1)
+    wrong_kind = G.compile_for_tag(mlp, "auto8", "xla", xtr)
+    try:
+        with pytest.raises(ValueError):
+            svc.endpoint("tree").set_fallback(wrong_kind)
+        with pytest.raises(TypeError):  # model+artifact is ambiguous
+            svc.enable_degradation("tree", model=mlp, artifact=art16)
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# HttpServer end-to-end over real sockets
+# ---------------------------------------------------------------------------
+async def _read_response(reader):
+    status = int((await reader.readline()).split()[1])
+    headers = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b""):
+            break
+        name, _, value = line.decode().partition(":")
+        headers[name.strip().lower()] = value.strip()
+    body = await reader.readexactly(int(headers.get("content-length", 0)))
+    if "json" in headers.get("content-type", ""):
+        body = json.loads(body)
+    return status, headers, body
+
+
+async def _roundtrip(server, method, path, body=None, conn=None):
+    if conn is None:
+        conn = await asyncio.open_connection(server.host, server.port)
+    reader, writer = conn
+    payload = b"" if body is None else json.dumps(body).encode()
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                  + (f"Content-Length: {len(payload)}\r\n" if payload else "")
+                  + "\r\n").encode() + payload)
+    await writer.drain()
+    return await _read_response(reader)
+
+
+def _run_with_server(svc, coro_fn, **server_kw):
+    async def go():
+        server = HttpServer(svc, **server_kw)
+        await server.start()
+        try:
+            return await coro_fn(server)
+        finally:
+            await server.stop()
+
+    return asyncio.run(go())
+
+
+def test_http_server_routes_and_predict(golden_tree):
+    art16, art8, xte, goldens = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16,
+                 policy=BatchingPolicy(max_batch=16))
+    svc.enable_degradation("tree", artifact=art8)
+
+    async def scenario(server):
+        conn = await asyncio.open_connection(server.host, server.port)
+        status, _, health = await _roundtrip(server, "GET", "/v1/health",
+                                             conn=conn)
+        assert status == 200 and health == {"status": "ok", "endpoints": 1}
+        # keep-alive: same connection serves the whole scenario
+        status, _, eps = await _roundtrip(server, "GET", "/v1/endpoints",
+                                          conn=conn)
+        assert status == 200 and eps["tree"]["number_format"] == "auto16"
+        assert eps["tree"]["degradation"]["fallback_format"] == "auto8"
+        # predictions (69 rows: exercises the > max_batch chunking path)
+        status, _, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree",
+            {"rows": xte[:69].tolist()}, conn=conn)
+        assert status == 200 and not body["degraded"]
+        assert body["predictions"] == [int(v) for v in goldens["auto16"][:69]]
+        status, _, stats = await _roundtrip(server, "GET", "/v1/stats",
+                                            conn=conn)
+        assert status == 200
+        assert stats["endpoints"]["tree"]["rows"] == 69.0
+        assert stats["slo"]["tree"]["requests"] == 1
+        conn[1].close()
+
+    _run_with_server(svc, scenario)
+    svc.close()
+
+
+def test_http_server_error_paths(golden_tree):
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+
+    async def scenario(server):
+        cases = [
+            ("GET", "/nope", None, 404),
+            ("POST", "/v1/predict/ghost", {"rows": [[0.0]]}, 404),
+            ("GET", "/v1/predict/tree", None, 405),
+            ("POST", "/v1/health", {"x": 1}, 405),
+            ("POST", "/v1/predict/tree", {"wrong": 1}, 400),
+            ("POST", "/v1/predict/tree", {"rows": [["a", "b"]]}, 400),
+            ("POST", "/v1/predict/tree", {"rows": []}, 400),
+        ]
+        for method, path, body, want in cases:
+            status, _, resp = await _roundtrip(server, method, path, body)
+            assert status == want, (path, resp)
+            assert "error" in resp
+
+    _run_with_server(svc, scenario)
+    svc.close()
+
+
+def test_http_server_rate_limit_429(golden_tree):
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+
+    async def scenario(server):
+        row = {"rows": [xte[0].tolist()]}
+        status, _, _ = await _roundtrip(server, "POST", "/v1/predict/tree",
+                                        row)
+        assert status == 200  # the single burst token
+        status, headers, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree", row)
+        assert status == 429 and body["error"] == "rate limit"
+        assert float(headers["retry-after"]) > 0
+        status, _, stats = await _roundtrip(server, "GET", "/v1/stats")
+        assert stats["admission"]["tree"]["rejected_rate"] == 1
+
+    _run_with_server(svc, scenario,
+                     admission=AdmissionPolicy(rate_limit=0.5, burst=1))
+    svc.close()
+
+
+def test_http_server_queue_watermark_503(golden_tree):
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=_slowed(art16, 0.1),
+                 policy=BatchingPolicy(max_batch=2, warmup=False,
+                                       max_wait_ms=0.0))
+
+    async def scenario(server):
+        row = {"rows": [xte[0].tolist()]}
+        results = await asyncio.gather(*[
+            _roundtrip(server, "POST", "/v1/predict/tree", row)
+            for _ in range(12)])
+        statuses = [s for s, _, _ in results]
+        assert statuses.count(200) >= 1
+        assert statuses.count(503) >= 1  # watermark refused the overflow
+        for status, headers, _ in results:
+            if status == 503:
+                assert float(headers["retry-after"]) > 0
+        assert all(s in (200, 503) for s in statuses)
+
+    _run_with_server(svc, scenario, admission=AdmissionPolicy(queue_high=2))
+    svc.close(timeout=30.0)
+
+
+def test_http_server_stop_reports_draining(golden_tree):
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+
+    async def scenario(server):
+        status, _, body = await _roundtrip(server, "GET", "/v1/health")
+        assert body["status"] == "ok"
+        await server.stop()
+        # listener is closed: new connections are refused
+        with pytest.raises(OSError):
+            await asyncio.open_connection(server.host, server.port)
+
+    _run_with_server(svc, scenario)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py --http CLI smoke
+# ---------------------------------------------------------------------------
+def test_serve_cli_http_smoke(capsys):
+    from urllib.request import Request, urlopen
+
+    from repro.launch import serve as serve_cli
+
+    with socket.socket() as s:  # a port that was just free
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    th = threading.Thread(target=serve_cli.main, args=([
+        "--classifier", "tree", "--format", "auto16", "--degrade",
+        "--http", f"127.0.0.1:{port}", "--http-duration", "8",
+        "--queue-high", "32", "--slo-ms", "250",
+    ],), daemon=True)
+    th.start()
+    deadline = time.time() + 30
+    body = None
+    while time.time() < deadline:
+        try:
+            with urlopen(f"http://127.0.0.1:{port}/v1/health",
+                         timeout=2) as r:
+                body = json.loads(r.read())
+            break
+        except OSError:
+            time.sleep(0.2)
+    assert body == {"status": "ok", "endpoints": 1}
+    row = json.dumps({"rows": [[0.0] * 16]}).encode()  # blobs: 16 features
+    with urlopen(Request(f"http://127.0.0.1:{port}/v1/predict/tree",
+                         data=row), timeout=10) as r:
+        pred = json.loads(r.read())
+    assert len(pred["predictions"]) == 1 and pred["degraded"] is False
+    th.join(timeout=60)
+    assert not th.is_alive()
+    out = capsys.readouterr().out
+    assert "degradation armed: auto16 -> auto8" in out

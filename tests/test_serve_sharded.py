@@ -331,9 +331,9 @@ def test_multi_replica_scheduler_buckets(trained, blobs_module):
         assert ep.policy.replicas == 2  # derived from the artifact
         orig = ep.batcher._on_batch
 
-        def spy(n_req, n_rows, bucket, lats):
+        def spy(n_req, n_rows, bucket, lats, **kw):
             buckets.append(bucket)
-            orig(n_req, n_rows, bucket, lats)
+            orig(n_req, n_rows, bucket, lats, **kw)
 
         ep.batcher._on_batch = spy
         futs = [svc.submit("t", xte[i]) for i in range(40)]

@@ -1,0 +1,208 @@
+"""Whole-model megakernel vs per-layer fused: the dispatch-collapse benchmark.
+
+Measures the forward pass of paper-scale models as the serving path executes
+it — each ``ops.*`` wrapper is one jitted kernel dispatch, composed eagerly,
+so the per-layer baseline pays one dispatch (pad, call, slice, HBM
+round-trip on real hardware) per layer/stage while the megakernel pays
+exactly one for the whole model.  Wall-times here are interpret-mode (CPU);
+the *ratio* is the dispatch-structure cost the megakernel removes, and it is
+a lower bound for TPU where every eliminated dispatch was also an HBM
+round-trip of the activations.
+
+The SVM rows compare against the chained fallback spelling (qmatmul
+dispatch, eager Qn.m poly/rbf elementwise algebra, fused decision dispatch)
+— the exact path the lowering routes past the VMEM budget.
+
+CLI (``--smoke`` is the CI acceptance gate):
+
+  PYTHONPATH=src python benchmarks/megakernel.py --smoke --out BENCH_megakernel.json
+
+Gate: megakernel forward == 1 measured dispatch and >= 1.5x the per-layer
+fused baseline at serving batch sizes {1, 8, 64}, bit-identical outputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.fixedpoint import FXP16
+from repro.kernels import ops
+
+try:
+    from .common import csv_line
+except ImportError:  # run as a script: benchmarks/ is sys.path[0]
+    from common import csv_line
+
+BATCHES = (1, 8, 64)
+
+
+def _median_time(fn, x, iters: int) -> float:
+    for _ in range(3):  # warm every per-batch jit trace + tuner entry
+        fn(x).block_until_ready()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def bench_mlp_megakernel(batch: int, features: int, hidden: tuple,
+                         classes: int, iters: int = 20, fmt=FXP16) -> Dict:
+    """Whole-MLP megakernel vs the per-layer fused path (PR-3 hot path)."""
+    rng = np.random.RandomState(0)
+    widths = [features, *hidden, classes]
+    qws = [jnp.asarray(rng.randint(-900, 900, (i, o))
+                       .astype(np.dtype(fmt.dtype)))
+           for i, o in zip(widths, widths[1:])]
+    qbs = [jnp.asarray(rng.randint(-900, 900, (o,))
+                       .astype(np.dtype(fmt.dtype)))
+           for o in widths[1:]]
+    n_layers = len(qws)
+    acts = ["pwl4"] * (n_layers - 1) + ["none"]
+    schedule = tuple((fmt.frac_bits, fmt, a) for a in acts)
+    x = jnp.asarray(rng.randint(-900, 900, (batch, features))
+                    .astype(np.dtype(fmt.dtype)))
+
+    def per_layer(h):
+        for w, b, a in zip(qws, qbs, acts):
+            h = ops.fxp_layer(h, w, b, fmt, activation=a, shift=fmt.frac_bits)
+        return h
+
+    def mega(h):
+        return ops.fxp_mlp_model(h, tuple(qws), tuple(qbs), schedule)
+
+    with ops.count_dispatches() as cm:
+        mega_out = np.asarray(mega(x))
+    with ops.count_dispatches() as cp:
+        layer_out = np.asarray(per_layer(x))
+    np.testing.assert_array_equal(mega_out, layer_out)
+
+    t_layer = _median_time(per_layer, x, iters)
+    t_mega = _median_time(mega, x, iters)
+    row = {
+        "model": "mlp", "batch": batch, "features": features,
+        "hidden": list(hidden), "classes": classes, "format": str(fmt),
+        "n_layers": n_layers,
+        "per_layer_us": t_layer * 1e6, "megakernel_us": t_mega * 1e6,
+        "speedup": t_layer / t_mega,
+        "per_layer_dispatches": cp.count,  # measured: one per layer
+        "megakernel_dispatches": cm.count,  # measured: THE number
+        "bit_identical": True,
+    }
+    csv_line(f"megakernel/mlp_b{batch}", t_mega * 1e6,
+             f"speedup={row['speedup']:.2f}x;dispatches={cm.count}"
+             f"(per_layer={cp.count})")
+    return row
+
+
+def bench_svm_megakernel(batch: int, kind: str, n_sv: int, features: int,
+                         classes: int, iters: int = 20, fmt=FXP16) -> Dict:
+    """SVM decision function: megakernel vs the chained fallback spelling."""
+    rng = np.random.RandomState(1)
+    sv = jnp.asarray(rng.randint(-900, 900, (n_sv, features))
+                     .astype(np.dtype(fmt.dtype)))
+    dual = jnp.asarray(rng.randint(-900, 900, (n_sv, classes))
+                       .astype(np.dtype(fmt.dtype)))
+    icept = jnp.asarray(rng.randint(-900, 900, (classes,))
+                        .astype(np.dtype(fmt.dtype)))
+    qgamma, qcoef0, degree = 5, 8, 3
+    dec_shift = fmt.frac_bits
+    x = jnp.asarray(rng.randint(-900, 900, (batch, features))
+                    .astype(np.dtype(fmt.dtype)))
+
+    def chained(qx):
+        dot = ops.fxp_qmatmul(qx, sv.T, fmt)
+        if kind == "poly":
+            kv = fxp.qadd(fxp.qmul(dot, jnp.asarray(qgamma, fmt.dtype), fmt),
+                          jnp.asarray(qcoef0, fmt.dtype), fmt)
+            kv = fxp.qpow_int(kv, degree, fmt)
+        else:  # rbf
+            def qsq(v):
+                wide = v.astype(fmt.wide_dtype)
+                return fxp.rshift_round_saturate(jnp.sum(wide * wide, -1),
+                                                 fmt)
+            d2 = fxp.qadd(fxp.qsub(qsq(qx)[:, None],
+                                   fxp.qadd(dot, dot, fmt), fmt),
+                          qsq(sv)[None, :], fmt)
+            kv = fxp.qexp(fxp.qneg(
+                fxp.qmul(d2, jnp.asarray(qgamma, fmt.dtype), fmt), fmt), fmt)
+        return ops.fxp_layer(kv, dual, icept, fmt, activation="none",
+                             shift=dec_shift)
+
+    def mega(qx):
+        return ops.fxp_svm_model(qx, sv, dual, icept, kind, fmt, fmt,
+                                 qgamma, qcoef0, degree, dec_shift)
+
+    with ops.count_dispatches() as cm:
+        mega_out = np.asarray(mega(x))
+    with ops.count_dispatches() as cc:
+        chained_out = np.asarray(chained(x))
+    np.testing.assert_array_equal(mega_out, chained_out)
+
+    t_chained = _median_time(chained, x, iters)
+    t_mega = _median_time(mega, x, iters)
+    row = {
+        "model": f"svm-{kind}", "batch": batch, "n_sv": n_sv,
+        "features": features, "classes": classes, "format": str(fmt),
+        "chained_us": t_chained * 1e6, "megakernel_us": t_mega * 1e6,
+        "speedup": t_chained / t_mega,
+        # measured matmul/decision dispatches; the chained path's Qn.m
+        # elementwise algebra runs as eager jnp stages outside the wrappers.
+        "chained_kernel_dispatches": cc.count,
+        "megakernel_dispatches": cm.count,
+        "bit_identical": True,
+    }
+    csv_line(f"megakernel/svm_{kind}_b{batch}", t_mega * 1e6,
+             f"speedup={row['speedup']:.2f}x;dispatches={cm.count}"
+             f"(chained={cc.count}+elementwise)")
+    return row
+
+
+def run(smoke: bool = False) -> Dict:
+    """Paper-scale models (the golden-fixture shapes) over the serving
+    batch ladder — exactly the regime the VMEM-fit predicate always
+    accepts and the serving plane dispatches."""
+    iters = 10 if smoke else 30
+    rows: List[Dict] = []
+    for b in BATCHES:
+        rows.append(bench_mlp_megakernel(b, 12, (16, 16), 3, iters=iters))
+    for kind in ("poly", "rbf"):
+        for b in BATCHES:
+            rows.append(bench_svm_megakernel(b, kind, 40, 12, 3, iters=iters))
+    return {"rows": rows, "smoke": smoke,
+            "min_speedup": min(r["speedup"] for r in rows)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small iteration counts + enforce the gates")
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    args = ap.parse_args(argv)
+    result = run(smoke=args.smoke)
+    text = json.dumps(result, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    if args.smoke:
+        bad = [r for r in result["rows"] if r["megakernel_dispatches"] != 1]
+        if bad:
+            raise SystemExit(
+                f"ACCEPTANCE FAIL: megakernel forward != 1 dispatch: {bad}")
+        if result["min_speedup"] < 1.5:
+            raise SystemExit(
+                f"ACCEPTANCE FAIL: megakernel speedup "
+                f"{result['min_speedup']:.2f}x < 1.5x over per-layer fused")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,9 +27,9 @@ def main(argv=None) -> None:
 
     from . import (compile_backends, fig3_4_time, fig5_6_memory,
                    fig7_8_modifications, kernels_bench, lm_quantized,
-                   quant_accuracy, roofline_table, serve_http, serve_sharded,
-                   serve_throughput, table_v_accuracy, table_vi_vii_sigmoid,
-                   table_viii_tools)
+                   megakernel, quant_accuracy, roofline_table, serve_http,
+                   serve_sharded, serve_throughput, table_v_accuracy,
+                   table_vi_vii_sigmoid, table_viii_tools)
     from .common import RESULTS_DIR
 
     datasets = ("D5", "D2") if args.quick else None
@@ -44,6 +44,7 @@ def main(argv=None) -> None:
             ("D5",) if args.quick else compile_backends.DATASETS),
         "lm_quantized": lm_quantized.run,
         "kernels": kernels_bench.run,
+        "megakernel": lambda: megakernel.run(smoke=args.quick)["rows"],
         "roofline": roofline_table.run,
         "serve": lambda: serve_throughput.run(smoke=args.quick)["rows"],
         "serve_sharded": lambda: serve_sharded.run(smoke=args.quick)["rows"],

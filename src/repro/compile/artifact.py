@@ -119,8 +119,23 @@ class CompiledArtifact:
         return None if self.quant_plan is None else self.quant_plan.descriptor()
 
     @property
-    def cache_key(self) -> Tuple[str, Target, Optional[Tuple], Optional[Tuple]]:
-        return (self.fingerprint, self.target, self.mesh_key, self.plan_key)
+    def kernel_strategy(self) -> Optional[str]:
+        """How the pallas backend dispatched this model's forward pass:
+        ``"megakernel"`` (the whole model in one ``pallas_call``),
+        ``"per-layer"`` (the fused-layer fallback when the packed weights
+        exceed the VMEM budget), or None (backends/lowerings where the
+        distinction does not exist)."""
+        return self.extras.get("kernel_strategy")
+
+    @property
+    def cache_key(self) -> Tuple[str, Target, Optional[Tuple],
+                                 Optional[Tuple], Optional[str]]:
+        # kernel_strategy is part of the key: the megakernel/per-layer
+        # routing depends on ambient state beyond the Target (the VMEM
+        # budget override), so two artifacts of one model compiled under
+        # different budgets must not alias in the serving cache.
+        return (self.fingerprint, self.target, self.mesh_key, self.plan_key,
+                self.kernel_strategy)
 
     @property
     def max_supported_batch(self) -> Optional[int]:
@@ -169,6 +184,11 @@ class CompiledArtifact:
         autotuner's shape-keyed entry (persisted to the on-disk JSON cache,
         see ``repro.kernels.tune``, device-keyed) and the corresponding jit
         trace, so the first real request in every bucket hits warm caches.
+        For megakernel-routed artifacts (``kernel_strategy ==
+        "megakernel"``) this warms the whole-model batch-block entries and
+        the single-dispatch traces over the same ladder — the serving
+        buckets hit the one-``pallas_call`` path warm from the first
+        request.
 
         A mesh-specialized artifact walks the *mesh-level* ladder — replicas
         x the per-replica power-of-two shard ladder (up to the per-replica

@@ -7,11 +7,16 @@ Backend routing:
   VPU kernel.
 * fixed-point targets — every layer is one *fused* op,
   ``act(qadd(qmatmul(h, W), b))``: ``ref``/``xla`` via the wide-accumulate
-  ``kernels/ref.fxp_layer_ref_with_stats`` oracle, ``pallas`` via the
-  ``kernels/fxp_layer`` kernel (int32 accumulator resident in VMEM, bias +
-  shift + saturation + PWL epilogue on the VPU — one dispatch per layer
-  where the chained path took three).  Activations stay in the Qn.m
-  integer domain either way, and the two routes are bit-identical.
+  ``kernels/ref.fxp_layer_ref_with_stats`` oracle.  On ``pallas`` the
+  *whole forward pass* is one ``kernels/fxp_model`` megakernel dispatch
+  when the packed weights fit the VMEM budget (always, for paper-scale
+  models): all layers' weights resident, inter-layer activations never
+  leaving VMEM, the per-layer shifts frozen into a static schedule.
+  Models past the budget fall back to one ``kernels/fxp_layer`` dispatch
+  per layer (int32 accumulator resident in VMEM, bias + shift +
+  saturation + PWL epilogue on the VPU).  Activations stay in the Qn.m
+  integer domain everywhere, and all routes are bit-identical; the chosen
+  route is recorded as ``extras["kernel_strategy"]``.
 
 Quantized tensor paths (calibrated targets give each its own Qn.m format;
 fixed targets resolve all of them to the global one):
@@ -80,6 +85,7 @@ class MLPLowering(Lowering):
         weights = qparams["weights"]
         biases = qparams["biases"]
         widths = [int(weights[0].shape[0])] + [int(w.shape[1]) for w in weights]
+        extras: Dict[str, Any] = {}
 
         if F is None:
             ws = [jnp.asarray(w, jnp.float32) for w in weights]
@@ -119,16 +125,36 @@ class MLPLowering(Lowering):
             acts = [target.sigmoid] * (len(qws) - 1) + ["none"]
 
             if target.backend == "pallas":
-                from repro.kernels import ops
+                from repro.kernels import fxp_model, ops
 
-                def predict(x):
-                    h, stats = qx_with_stats(jnp.asarray(x, jnp.float32),
-                                             in_fmt)
-                    for w, b, act, fo, sh in zip(qws, qbs, acts, out_fmts,
-                                                 shifts):
-                        h = ops.fxp_layer(h, w, b, fo, activation=act,
-                                          shift=sh)
-                    return jnp.argmax(h, -1).astype(jnp.int32), stats
+                # The whole forward as ONE dispatch when the packed weights
+                # fit the VMEM budget (always, for paper-scale models);
+                # otherwise the PR-3 per-layer fused path — bit-identical
+                # either way, the routing is purely a dispatch-count/VMEM
+                # decision and is recorded on the artifact's cache key.
+                schedule = tuple(zip(shifts, out_fmts, acts))
+                if fxp_model.mlp_fits_vmem(widths, in_fmt.total_bits):
+                    strategy = "megakernel"
+
+                    def predict(x):
+                        h, stats = qx_with_stats(jnp.asarray(x, jnp.float32),
+                                                 in_fmt)
+                        out = ops.fxp_mlp_model(h, tuple(qws), tuple(qbs),
+                                                schedule)
+                        return jnp.argmax(out, -1).astype(jnp.int32), stats
+                else:
+                    strategy = "per-layer"
+
+                    def predict(x):
+                        h, stats = qx_with_stats(jnp.asarray(x, jnp.float32),
+                                                 in_fmt)
+                        for w, b, act, fo, sh in zip(qws, qbs, acts, out_fmts,
+                                                     shifts):
+                            h = ops.fxp_layer(h, w, b, fo, activation=act,
+                                              shift=sh)
+                        return jnp.argmax(h, -1).astype(jnp.int32), stats
+
+                extras = {"kernel_strategy": strategy}
             else:
                 from repro.kernels import ref as ref_ops
 
@@ -146,4 +172,4 @@ class MLPLowering(Lowering):
                            *[np.asarray(b) for b in qbs])
             # One reused activation buffer (paper §III-D): the widest layer.
             sram = max(widths) * elem_bytes(in_fmt)
-        return Lowered(predict, flash, sram)
+        return Lowered(predict, flash, sram, extras=extras)

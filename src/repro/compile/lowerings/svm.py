@@ -6,12 +6,14 @@ logistic regression).  Kernel machines compute the libsvm decision function
 f64-trained artifact in f32 (reproducing the paper's poly-SVC precision-drop
 finding), the fixed-point path runs the full kernel in Qn.m integer ops.
 
-Backend routing: the first large matmul (x @ sv.T) goes through
-``kernels/fxp_qmatmul`` on the ``pallas`` backend, and the decision stage
-(k @ dual + intercept) is the *fused* layer op — one dispatch on every
-backend (``kernels/fxp_layer`` on pallas, ``kernels/ref.fxp_layer_ref`` on
-ref/xla); the elementwise kernel math (qmul/qpow/qexp) stays on the
-VPU-equivalent jnp ops.
+Backend routing: on ``pallas`` the whole quantized decision function —
+x @ sv.T, the poly/rbf elementwise algebra, and the decision stage
+(k @ dual + intercept) — is ONE ``kernels/fxp_model`` megakernel dispatch
+when the support vectors + duals fit the VMEM budget, recorded as
+``extras["kernel_strategy"]``.  Past the budget it falls back to the
+chained path (``kernels/fxp_qmatmul`` then the fused ``kernels/fxp_layer``
+decision, elementwise kernel math on jnp ops), bit-identical; ``ref``/
+``xla`` keep the wide-accumulate oracle spelling throughout.
 
 Quantized tensor paths: the whole feature/kernel domain — ``input``,
 ``support_vectors``, and every elementwise intermediate up to the kernel
@@ -136,6 +138,7 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target,
     dual = np.asarray(p["dual_coef"])
     icept = np.asarray(p["intercept"])
     gamma, coef0, degree = p["gamma"], p["coef0"], p["degree"]
+    extras: Dict[str, Any] = {}
 
     if F is None:
         svj = jnp.asarray(sv, jnp.float32)  # f32 serve of the f64 artifact
@@ -172,7 +175,9 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target,
                      - out_fmt.frac_bits)
 
         if target.backend == "pallas":
-            from repro.kernels import ops
+            from repro.kernels import fxp_model, ops
+
+            extras["kernel_strategy"] = "per-layer"
 
             def matmul(a, b):
                 return ops.fxp_qmatmul(a, b, fmt), zero_stats()
@@ -219,6 +224,23 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target,
                 out, s2 = decision(k)
                 return jnp.argmax(out, -1).astype(jnp.int32), s0.merge(s1).merge(s2)
 
+        if target.backend == "pallas" and fxp_model.svm_fits_vmem(
+                sv.shape[0], sv.shape[1], dual.shape[1], fmt.total_bits):
+            # Kernel evaluation + vote collapsed to ONE dispatch: the whole
+            # decision function (x·svᵀ, the poly/rbf algebra, the fused
+            # decision stage) in a single pallas_call; the chained per-stage
+            # path above remains the VMEM-overflow fallback, bit-identical.
+            extras["kernel_strategy"] = "megakernel"
+            qgamma_i = int(np.asarray(qgamma))
+            qcoef0_i = int(np.asarray(qcoef0))
+
+            def predict(x):  # noqa: F811 — the megakernel override
+                qx, s0 = qx_with_stats(jnp.asarray(x, jnp.float32), fmt)
+                out = ops.fxp_svm_model(qx, qsv, qd, qb, kernel, fmt,
+                                        out_fmt, qgamma_i, qcoef0_i,
+                                        int(degree), dec_shift)
+                return jnp.argmax(out, -1).astype(jnp.int32), s0
+
         flash = nbytes(np.asarray(qsv), np.asarray(qd), np.asarray(qb))
         sram = (sv.shape[0] + dual.shape[1]) * elem_bytes(fmt)
-    return Lowered(predict, flash, sram)
+    return Lowered(predict, flash, sram, extras=extras)

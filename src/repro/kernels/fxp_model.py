@@ -1,0 +1,294 @@
+"""Pallas TPU megakernels: the whole fixed-point model in ONE dispatch.
+
+EmbML's classifiers are KB-scale (the paper's Tables report hundreds of
+bytes to tens of KB), while VMEM is MB-scale — so for every model this
+repo actually serves, *all* packed weights fit on-chip at once.  The
+per-layer fused kernel (:mod:`.fxp_layer`) still pays one dispatch per
+layer with inter-layer activations round-tripping HBM; at serving batch
+sizes that makes the forward pass dispatch-bound, not compute-bound.
+
+The kernels here collapse the entire forward pass into a single
+``pallas_call``:
+
+* **MLP** (:func:`fxp_mlp_model_pallas`) — grid = (M/bm,) over the batch
+  only; every layer's weight and bias ride in whole (they are KB-scale, no
+  K/N blocking needed), and the kernel body unrolls a *static layer
+  schedule* of ``(shift, out_format, activation)`` triples frozen from the
+  artifact's QuantPlan.  Each layer is the same int32 MXU dot +
+  ``requantize``/``qadd``/PWL epilogue the per-layer kernel traces — from
+  the same shared :mod:`repro.core.fixedpoint` / activation definitions —
+  so megakernel == per-layer fused == chained, bit for bit.  Inter-layer
+  activations never leave VMEM.
+* **kernel-SVM** (:func:`fxp_svm_model_pallas`) — kernel evaluation
+  (x·svᵀ plus the poly/rbf elementwise algebra, including the in-kernel
+  squared norms for rbf) and the fused decision matmul + intercept, in one
+  body.  Collapses the previous 2-dispatch pallas path
+  (``fxp_qmatmul`` + ``fxp_layer``) to 1.
+
+Accumulator contract: identical to :mod:`.fxp_layer` — int32 MXU
+accumulation, bit-exact vs the wide-accumulating oracle whenever the true
+dot-product magnitude stays below 2^31 (always at these model scales).
+
+**Fit predicate + fallback.**  :func:`mlp_fits_vmem` /
+:func:`svm_fits_vmem` bound the kernel's resident working set (packed
+weights + a worst-case batch block of int32 intermediates) against
+:func:`vmem_budget`; the mlp/svm lowerings consult them and fall back to
+the per-layer fused path when a model does not fit.  The budget can be
+overridden (or zeroed, forcing the per-layer path everywhere) with the
+``REPRO_MEGAKERNEL_VMEM`` environment variable — tests and benchmarks use
+that to exercise the fallback without constructing an MB-scale model.
+
+Zero padding is bit-safe by construction: padded input feature columns
+meet zero weight rows; padded hidden lanes carry a nonzero ``sigmoid(0)``
+but feed zero rows of the next layer's weights; padded support-vector rows
+meet zero dual-coefficient rows; padded output columns are sliced off
+before the argmax.  Integer addition is associative and commutative, so
+the (order-preserving) padded reductions change no bit of the logical
+slice.
+
+The pure-jnp oracles are :func:`repro.kernels.ref.fxp_mlp_model_ref` and
+:func:`repro.kernels.ref.fxp_svm_model_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from itertools import chain
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fixedpoint
+from repro.core.activations import get_qsigmoid
+from repro.core.fixedpoint import FxpFormat
+
+from .fxp_layer import LAYER_ACTIVATIONS
+from .tune import _VMEM_BUDGET
+
+__all__ = ["fxp_mlp_model_pallas", "fxp_svm_model_pallas", "LayerSchedule",
+           "mlp_fits_vmem", "svm_fits_vmem", "vmem_budget", "SVM_KERNELS"]
+
+# One entry per layer: (requantization shift, output format, activation).
+LayerSchedule = Tuple[Tuple[int, FxpFormat, str], ...]
+
+SVM_KERNELS = ("poly", "rbf")
+
+_LANE = 128  # Mosaic minor-dim tile (every container width)
+
+
+# --------------------------------------------------------------------------
+# VMEM-fit predicate (the megakernel / per-layer routing decision)
+# --------------------------------------------------------------------------
+def vmem_budget() -> int:
+    """Byte budget for one megakernel grid step's resident working set.
+
+    ``REPRO_MEGAKERNEL_VMEM`` overrides (``0`` disables the megakernel
+    everywhere — the benchmark's per-layer baseline and the fallback tests
+    force the routing this way); the default is the same budget the
+    block-size autotuner steers under.
+    """
+    env = os.environ.get("REPRO_MEGAKERNEL_VMEM")
+    if env is not None:
+        try:
+            return max(0, int(env))
+        except ValueError:
+            pass
+    return _VMEM_BUDGET
+
+
+def _padded_dim(d: int) -> int:
+    """Feature-dim size as the kernel sees it (lane-tiled on real TPU)."""
+    if jax.default_backend() == "tpu":
+        return -(-int(d) // _LANE) * _LANE
+    return int(d)
+
+
+def mlp_vmem_bytes(widths: Sequence[int], bits: int, bm: int = 128) -> int:
+    """Worst-case resident bytes of one MLP megakernel grid step.
+
+    ``widths`` = [n_features, hidden..., n_classes] (logical; padded to the
+    TPU tile when relevant).  Counts every layer's packed weight + bias, the
+    batch block of inputs/outputs, and three ``bm x max_width`` int32
+    intermediates (accumulator + the epilogue's widened temporaries).
+    """
+    dims = [_padded_dim(d) for d in widths]
+    e = max(1, int(bits) // 8)
+    weights = sum(i * o for i, o in zip(dims, dims[1:])) * e
+    biases = sum(dims[1:]) * e
+    io = bm * (dims[0] + dims[-1]) * e
+    scratch = 3 * bm * max(dims) * 4
+    return weights + biases + io + scratch
+
+
+def svm_vmem_bytes(n_sv: int, n_feat: int, n_classes: int, bits: int,
+                   bm: int = 128) -> int:
+    """Worst-case resident bytes of one SVM megakernel grid step."""
+    s, f, c = (_padded_dim(d) for d in (n_sv, n_feat, n_classes))
+    e = max(1, int(bits) // 8)
+    weights = (s * f + s * c + c) * e
+    io = bm * (f + c) * e
+    # The (bm, n_sv) kernel-value matrix dominates the intermediates: the
+    # int32 dot accumulator plus the widened elementwise chain.
+    scratch = 3 * bm * max(s, f, c) * 4
+    return weights + io + scratch
+
+
+def mlp_fits_vmem(widths: Sequence[int], bits: int, bm: int = 128) -> bool:
+    return mlp_vmem_bytes(widths, bits, bm) <= vmem_budget()
+
+
+def svm_fits_vmem(n_sv: int, n_feat: int, n_classes: int, bits: int,
+                  bm: int = 128) -> bool:
+    return svm_vmem_bytes(n_sv, n_feat, n_classes, bits, bm) <= vmem_budget()
+
+
+# --------------------------------------------------------------------------
+# MLP megakernel
+# --------------------------------------------------------------------------
+def _mlp_kernel(*refs, schedule: LayerSchedule):
+    # refs = (x, w0, b0, w1, b1, ..., out); the layer loop is a *Python*
+    # loop over the static schedule — fully unrolled at trace time, so the
+    # whole forward pass is one kernel body with h resident in VMEM.
+    x_ref, o_ref = refs[0], refs[-1]
+    wb = refs[1:-1]
+    h = x_ref[...]
+    for (shift, fmt, activation), w_ref, b_ref in zip(
+            schedule, wb[0::2], wb[1::2]):
+        acc = jax.lax.dot_general(
+            h.astype(jnp.int32), w_ref[...].astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        # Same shared epilogue definitions as fxp_layer._kernel: the
+        # megakernel cannot drift from the per-layer fused (or chained)
+        # semantics because all three trace the same functions.
+        h = fixedpoint.requantize(acc, shift, fmt)
+        h = fixedpoint.qadd(h, b_ref[...][None, :], fmt)
+        if activation != "none":
+            h = get_qsigmoid(activation)(h, fmt)
+        h = h.astype(fmt.dtype)
+    o_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("schedule", "bm", "interpret"))
+def fxp_mlp_model_pallas(x: jax.Array, weights: Tuple[jax.Array, ...],
+                         biases: Tuple[jax.Array, ...],
+                         schedule: LayerSchedule, bm: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """The whole MLP forward in one ``pallas_call``.
+
+    x: (M, K0); weights[i]: (K_i, K_{i+1}); biases[i]: (K_{i+1},) — all
+    whole (the fit predicate guarantees they are VMEM-resident), batch
+    blocked by ``bm`` (M % bm == 0; the ``ops.py`` wrapper pads).
+    ``schedule`` is the static per-layer (shift, out_format, activation)
+    plan; the output is in the last layer's format.
+    """
+    if not (len(weights) == len(biases) == len(schedule) >= 1):
+        raise ValueError("weights/biases/schedule must align, >= 1 layer")
+    for _, fmt, activation in schedule:
+        if activation not in LAYER_ACTIVATIONS:
+            raise KeyError(f"activation must be one of {LAYER_ACTIVATIONS}")
+    m, k0 = x.shape
+    assert m % bm == 0, (x.shape, bm)
+    out_fmt = schedule[-1][1]
+    n_out = weights[-1].shape[1]
+
+    in_specs = [pl.BlockSpec((bm, k0), lambda i: (i, 0))]
+    for w, b in zip(weights, biases):
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, schedule=schedule),
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_out), out_fmt.dtype),
+        interpret=interpret,
+    )(x, *chain.from_iterable(zip(weights, biases)))
+
+
+# --------------------------------------------------------------------------
+# kernel-SVM megakernel (kernel evaluation + vote, one dispatch)
+# --------------------------------------------------------------------------
+def _svm_kernel(x_ref, sv_ref, dual_ref, icept_ref, o_ref, *, kind: str,
+                fmt: FxpFormat, out_fmt: FxpFormat, qgamma: int, qcoef0: int,
+                degree: int, dec_shift: int):
+    qx = x_ref[...]
+    qsv = sv_ref[...]
+    # x . sv^T without materializing the transpose: contract the shared
+    # feature axis.  Integer dot == fxp_qmatmul's accumulate, then the
+    # single-format requantize (input/sv/kernel share one plan group).
+    dot = jax.lax.dot_general(
+        qx.astype(jnp.int32), qsv.astype(jnp.int32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32)
+    dot = fixedpoint.requantize(dot, fmt.frac_bits, fmt)
+    g = jnp.asarray(qgamma, fmt.dtype)
+    if kind == "poly":
+        k = fixedpoint.qadd(fixedpoint.qmul(dot, g, fmt),
+                            jnp.asarray(qcoef0, fmt.dtype), fmt)
+        k = fixedpoint.qpow_int(k, degree, fmt)
+    else:  # rbf
+        def _qsq_norm(qv):
+            wide = qv.astype(fmt.wide_dtype)
+            acc = jnp.sum(wide * wide, axis=-1)
+            return fixedpoint.rshift_round_saturate(acc, fmt)
+
+        x2 = _qsq_norm(qx)
+        sv2 = _qsq_norm(qsv)
+        d2 = fixedpoint.qadd(
+            fixedpoint.qsub(x2[:, None], fixedpoint.qadd(dot, dot, fmt), fmt),
+            sv2[None, :], fmt)
+        arg = fixedpoint.qneg(fixedpoint.qmul(d2, g, fmt), fmt)
+        k = fixedpoint.qexp(arg, fmt)
+    # Decision stage: the fused-layer epilogue (k @ dual, cross-format
+    # shift, saturating intercept add) still inside the same kernel body.
+    acc = jax.lax.dot_general(
+        k.astype(jnp.int32), dual_ref[...].astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    out = fixedpoint.requantize(acc, dec_shift, out_fmt)
+    out = fixedpoint.qadd(out, icept_ref[...][None, :], out_fmt)
+    o_ref[...] = out.astype(out_fmt.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "fmt", "out_fmt", "qgamma", "qcoef0", "degree", "dec_shift",
+    "bm", "interpret"))
+def fxp_svm_model_pallas(qx: jax.Array, sv: jax.Array, dual: jax.Array,
+                         icept: jax.Array, kind: str, fmt: FxpFormat,
+                         out_fmt: FxpFormat, qgamma: int, qcoef0: int,
+                         degree: int, dec_shift: int, bm: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """The whole kernel-SVM decision function in one ``pallas_call``.
+
+    qx: (M, F); sv: (S, F) (un-transposed support vectors); dual: (S, C);
+    icept: (C,) — support vectors/duals ride whole, batch blocked by ``bm``.
+    ``qgamma``/``qcoef0`` are the *quantized integer* constants (static, so
+    they trace as kernel immediates); ``dec_shift`` is the decision stage's
+    cross-format requantization (``m_k + m_dual - m_out``).
+    """
+    if kind not in SVM_KERNELS:
+        raise KeyError(f"kind must be one of {SVM_KERNELS}")
+    m, f = qx.shape
+    s, c = dual.shape
+    assert sv.shape == (s, f) and icept.shape == (c,), \
+        (qx.shape, sv.shape, dual.shape, icept.shape)
+    assert m % bm == 0, (qx.shape, bm)
+
+    kernel = functools.partial(
+        _svm_kernel, kind=kind, fmt=fmt, out_fmt=out_fmt, qgamma=qgamma,
+        qcoef0=qcoef0, degree=int(degree), dec_shift=int(dec_shift))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((s, f), lambda i: (0, 0)),
+            pl.BlockSpec((s, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), out_fmt.dtype),
+        interpret=interpret,
+    )(qx, sv, dual, icept)

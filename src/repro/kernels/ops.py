@@ -33,14 +33,17 @@ from repro.core.fixedpoint import FxpFormat
 from repro.core.trees import TreeArrays
 from . import ref as ref_ops
 from . import tune
+from . import fxp_model
 from .flash_attention import flash_attention_pallas
 from .fxp_layer import fxp_layer_pallas
+from .fxp_model import fxp_mlp_model_pallas, fxp_svm_model_pallas
 from .fxp_qmatmul import fxp_qmatmul_pallas
 from .pwl_activation import pwl_activation_pallas
 from .tree_ensemble import pack_tree, tree_ensemble_pallas
 
-__all__ = ["fxp_qmatmul", "fxp_layer", "pwl_activation", "tree_predict",
-           "flash_attention", "count_dispatches"]
+__all__ = ["fxp_qmatmul", "fxp_layer", "fxp_mlp_model", "fxp_svm_model",
+           "pwl_activation", "tree_predict", "flash_attention",
+           "count_dispatches"]
 
 
 def _on_tpu() -> bool:
@@ -199,6 +202,140 @@ def fxp_layer(a: jax.Array, w: jax.Array, bias: jax.Array, fmt: FxpFormat,
     out = fxp_layer_pallas(ap, wp, biasp, fmt, activation, shift=shift,
                            bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())
     return out[:m0, :n0]
+
+
+_LANE = 128  # Mosaic minor-dim tile: model operand padding on real TPU
+
+
+def fxp_mlp_model(x: jax.Array, weights, biases,
+                  schedule: fxp_model.LayerSchedule, impl: str = "pallas",
+                  bm: Optional[int] = None) -> jax.Array:
+    """The whole MLP forward — every layer — in ONE kernel dispatch.
+
+    x: (M, K0) in the input format's dtype; ``weights``/``biases`` are the
+    per-layer quantized operands; ``schedule`` the static per-layer
+    ``(shift, out_format, activation)`` plan (see
+    :mod:`repro.kernels.fxp_model`).  Callers are expected to have checked
+    :func:`repro.kernels.fxp_model.mlp_fits_vmem` (the lowerings do, and
+    fall back to per-layer :func:`fxp_layer` calls when it fails).
+
+    Bit-identical to the per-layer fused path and to the composed ref
+    oracle; the batch block consults the whole-model autotuner entry.
+    """
+    _tick()
+    weights, biases = tuple(weights), tuple(biases)
+    if impl in ("xla", "ref"):
+        return ref_ops.fxp_mlp_model_ref(x, weights, biases, schedule)
+    m = x.shape[0]
+    dims = (x.shape[1],) + tuple(w.shape[1] for w in weights)
+    bits = schedule[0][1].total_bits
+    if bm is None:
+        runner = None
+        if _on_tpu():
+            def make_call(blk):
+                zx, zws, zbs = _padded_model_operands(
+                    jnp.zeros((tune.batch_bucket(m, cap=1 << 30), dims[0]),
+                              x.dtype),
+                    weights, biases)
+                return fxp_mlp_model_pallas(zx, zws, zbs, schedule, bm=blk)
+
+            runner = _timed_runner(make_call)
+        bm = tune.model_block_m(
+            "mlp", m, dims, bits,
+            vmem_bytes=lambda b: fxp_model.mlp_vmem_bytes(dims, bits, b),
+            budget=fxp_model.vmem_budget(), runner=runner)
+    xp, m0 = _pad_axis(x, 0, bm)
+    xp, wp, bp = _padded_model_operands(xp, weights, biases)
+    n0 = weights[-1].shape[1]
+    out = fxp_mlp_model_pallas(xp, wp, bp, schedule, bm=bm,
+                               interpret=not _on_tpu())
+    return out[:m0, :n0]
+
+
+def _padded_model_operands(x, weights, biases):
+    """Lane-tile the megakernel's feature axes on real TPU (no-op off TPU:
+    interpret mode has no tile floors and padding is pure waste there).
+
+    Zero padding is bit-safe end to end — padded feature columns meet zero
+    weight rows, padded hidden lanes feed zero rows of the next layer, and
+    the wrapper slices padded outputs off before anyone can read them.
+    """
+    if not _on_tpu():
+        return x, tuple(weights), tuple(biases)
+    xp, _ = _pad_axis(x, 1, _LANE)
+    ws, bs = [], []
+    for w, b in zip(weights, biases):
+        wpad, _ = _pad_axis(w, 0, _LANE)
+        wpad, _ = _pad_axis(wpad, 1, _LANE)
+        bpad, _ = _pad_axis(b, 0, _LANE)
+        ws.append(wpad)
+        bs.append(bpad)
+    return xp, tuple(ws), tuple(bs)
+
+
+def fxp_svm_model(qx: jax.Array, sv: jax.Array, dual: jax.Array,
+                  icept: jax.Array, kind: str, fmt: FxpFormat,
+                  out_fmt: FxpFormat, qgamma: int, qcoef0: int, degree: int,
+                  dec_shift: int, impl: str = "pallas",
+                  bm: Optional[int] = None) -> jax.Array:
+    """The whole kernel-SVM decision function in ONE kernel dispatch:
+    x·svᵀ, the poly/rbf elementwise algebra, and the decision matmul +
+    intercept (see :mod:`repro.kernels.fxp_model`).  ``sv`` is the
+    un-transposed (S, F) matrix; ``qgamma``/``qcoef0`` the quantized
+    integer constants.  Collapses the previous fxp_qmatmul + fxp_layer
+    pallas path (2 dispatches) to 1; bit-identical to it and to
+    :func:`repro.kernels.ref.fxp_svm_model_ref`.
+    """
+    _tick()
+    if impl in ("xla", "ref"):
+        return ref_ops.fxp_svm_model_ref(qx, sv, dual, icept, kind, fmt,
+                                         out_fmt, qgamma, qcoef0, degree,
+                                         dec_shift)
+    m, n_feat = qx.shape
+    n_sv, n_cls = dual.shape
+    bits = fmt.total_bits
+    if bm is None:
+        runner = None
+        if _on_tpu():
+            def make_call(blk):
+                zx, zsv, zd, zi = _padded_svm_operands(
+                    jnp.zeros((tune.batch_bucket(m, cap=1 << 30), n_feat),
+                              qx.dtype), sv, dual, icept)
+                return fxp_svm_model_pallas(zx, zsv, zd, zi, kind, fmt,
+                                            out_fmt, qgamma, qcoef0, degree,
+                                            dec_shift, bm=blk)
+
+            runner = _timed_runner(make_call)
+        bm = tune.model_block_m(
+            f"svm-{kind}", m, (n_feat, n_sv, n_cls), bits,
+            vmem_bytes=lambda b: fxp_model.svm_vmem_bytes(
+                n_sv, n_feat, n_cls, bits, b),
+            budget=fxp_model.vmem_budget(), runner=runner)
+    xp, m0 = _pad_axis(qx, 0, bm)
+    xp, svp, dp, ip = _padded_svm_operands(xp, sv, dual, icept)
+    out = fxp_svm_model_pallas(xp, svp, dp, ip, kind, fmt, out_fmt, qgamma,
+                               qcoef0, degree, dec_shift, bm=bm,
+                               interpret=not _on_tpu())
+    return out[:m0, :n_cls]
+
+
+def _padded_svm_operands(qx, sv, dual, icept):
+    """Lane-tile the SVM megakernel operands on real TPU (no-op off TPU).
+
+    Padded support-vector *rows* produce nonzero kernel values (e.g. the
+    rbf kernel of an all-zero vector), but their dual-coefficient rows are
+    zero, so they contribute nothing to the decision — zero padding stays
+    bit-safe.
+    """
+    if not _on_tpu():
+        return qx, sv, dual, icept
+    xp, _ = _pad_axis(qx, 1, _LANE)
+    svp, _ = _pad_axis(sv, 0, _LANE)
+    svp, _ = _pad_axis(svp, 1, _LANE)
+    dp, _ = _pad_axis(dual, 0, _LANE)
+    dp, _ = _pad_axis(dp, 1, _LANE)
+    ip, _ = _pad_axis(icept, 0, _LANE)
+    return xp, svp, dp, ip
 
 
 def pwl_activation(x: jax.Array, variant: str = "pwl4",

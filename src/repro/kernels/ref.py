@@ -17,7 +17,8 @@ from repro.core.activations import (get_qsigmoid, sigmoid_pwl2, sigmoid_pwl4,
 from repro.core.trees import TreeArrays, predict_oblivious
 
 __all__ = ["fxp_qmatmul_ref", "fxp_layer_ref", "fxp_layer_ref_with_stats",
-           "pwl_activation_ref", "tree_ensemble_ref", "flash_attention_ref"]
+           "fxp_mlp_model_ref", "fxp_svm_model_ref", "pwl_activation_ref",
+           "tree_ensemble_ref", "flash_attention_ref"]
 
 
 def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat,
@@ -62,6 +63,53 @@ def fxp_layer_ref_with_stats(a: jax.Array, b: jax.Array, bias: jax.Array,
     if activation != "none":
         h = get_qsigmoid(activation)(h, fmt)
     return h, stats
+
+
+def fxp_mlp_model_ref(x: jax.Array, weights, biases, schedule) -> jax.Array:
+    """Whole-model MLP oracle: the per-layer fused oracle, composed.
+
+    ``schedule`` is the megakernel's static per-layer plan — one
+    ``(shift, out_format, activation)`` triple per layer (see
+    :mod:`repro.kernels.fxp_model`).  By construction this is the per-layer
+    path bit for bit, which is the megakernel's correctness contract.
+    """
+    h = x
+    for (shift, fmt, activation), w, b in zip(schedule, weights, biases):
+        h = fxp_layer_ref(h, w, b, fmt, activation, shift)
+    return h
+
+
+def fxp_svm_model_ref(qx: jax.Array, sv: jax.Array, dual: jax.Array,
+                      icept: jax.Array, kind: str, fmt: fxp.FxpFormat,
+                      out_fmt: fxp.FxpFormat, qgamma: int, qcoef0: int,
+                      degree: int, dec_shift: int) -> jax.Array:
+    """Whole-model kernel-SVM oracle: the chained decision function.
+
+    Mirrors the per-stage lowering exactly — ``fxp_qmatmul_ref`` for
+    x·svᵀ, the shared elementwise Qn.m kernel algebra, and the fused-layer
+    oracle for the decision stage — so the megakernel's single dispatch has
+    a composed-from-parts oracle to be bit-identical to.  ``sv`` is the
+    un-transposed (S, F) support-vector matrix; ``qgamma``/``qcoef0`` are
+    the quantized integer constants.
+    """
+    dot = fxp_qmatmul_ref(qx, sv.T, fmt)
+    g = jnp.asarray(qgamma, fmt.dtype)
+    if kind == "poly":
+        k = fxp.qadd(fxp.qmul(dot, g, fmt),
+                     jnp.asarray(qcoef0, fmt.dtype), fmt)
+        k = fxp.qpow_int(k, degree, fmt)
+    elif kind == "rbf":
+        def _qsq_norm(qv):
+            wide = qv.astype(fmt.wide_dtype)
+            return fxp.rshift_round_saturate(jnp.sum(wide * wide, -1), fmt)
+
+        d2 = fxp.qadd(fxp.qsub(_qsq_norm(qx)[:, None],
+                               fxp.qadd(dot, dot, fmt), fmt),
+                      _qsq_norm(sv)[None, :], fmt)
+        k = fxp.qexp(fxp.qneg(fxp.qmul(d2, g, fmt), fmt), fmt)
+    else:
+        raise KeyError(f"kind must be 'poly' or 'rbf', got {kind!r}")
+    return fxp_layer_ref(k, dual, icept, out_fmt, "none", dec_shift)
 
 
 def pwl_activation_ref(x: jax.Array, variant: str) -> jax.Array:

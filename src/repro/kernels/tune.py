@@ -38,8 +38,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
-__all__ = ["matmul_blocks", "batch_bucket", "pwl_blocks", "pow2ceil",
-           "cache_path", "clear_memory_cache", "cache_snapshot", "device_key"]
+__all__ = ["matmul_blocks", "model_block_m", "batch_bucket", "pwl_blocks",
+           "pow2ceil", "cache_path", "clear_memory_cache", "cache_snapshot",
+           "device_key"]
 
 Blocks = Tuple[int, int, int]
 Runner = Callable[[Blocks], float]
@@ -302,3 +303,55 @@ def matmul_blocks(kind: str, m: int, k: int, n: int, bits: int,
         blocks = _memory.setdefault(key, blocks)
     _save_disk()  # outside _lock: the cross-process flock must not stall hits
     return blocks
+
+
+def model_block_m(kind: str, m: int, dims: Tuple[int, ...], bits: int,
+                  vmem_bytes: Optional[Callable[[int], float]] = None,
+                  budget: Optional[int] = None,
+                  runner: Optional[Callable[[int], float]] = None) -> int:
+    """Tuned batch block ``bm`` for a whole-model megakernel dispatch.
+
+    A megakernel's only grid axis is the batch (weights ride whole — see
+    ``repro.kernels.fxp_model``), so the tuning problem collapses to one
+    knob: how many batch rows per grid step.  Keys like
+    :func:`matmul_blocks` (pow2-bucketed M, the model's dim signature, the
+    container width, the dispatching device) and shares the same two-layer
+    cache, storing ``(bm, 1, 1)`` so the disk format stays uniform.
+
+    ``vmem_bytes(bm)`` (optional) bounds candidates to the VMEM ``budget``;
+    on TPU with a ``runner`` the survivors are wall-time swept, otherwise
+    the largest feasible block wins — M is already bucketed to a power of
+    two, so growing ``bm`` never adds padding, it only removes grid steps.
+    """
+    mb = batch_bucket(m, cap=1 << 30)
+    sig = "x".join(str(int(d)) for d in dims)
+    key = f"model-{kind}|{mb}|d{sig}|w{int(bits)}|{device_key()}"
+    with _lock:
+        hit = _memory.get(key)
+        if hit is None:
+            _load_disk()
+            hit = _memory.get(key)
+        if hit is not None:
+            return int(hit[0])
+    on_tpu = jax.default_backend() == "tpu"
+    floor = _TPU_SUBLANE[int(bits)] if on_tpu else 1
+    cap = max(floor, min(128, pow2ceil(mb)))
+    cands = _pow2s_upto(cap, floor)
+    if vmem_bytes is not None:
+        limit = _VMEM_BUDGET if budget is None else budget
+        fitting = [bm for bm in cands if vmem_bytes(bm) <= limit]
+        cands = fitting or cands[:1]  # callers gate on the fit predicate
+    bm = cands[-1]
+    if on_tpu and runner is not None:
+        best_t = float("inf")
+        for cand in cands:
+            try:
+                t = runner(cand)
+            except Exception:
+                continue  # candidate rejected by the compiler: skip
+            if t < best_t:
+                bm, best_t = cand, t
+    with _lock:
+        got = _memory.setdefault(key, (int(bm), 1, 1))
+    _save_disk()
+    return int(got[0])

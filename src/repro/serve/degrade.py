@@ -93,16 +93,27 @@ class PrecisionGovernor:
         with self._lock:
             return self._degraded
 
-    def observe(self, queue_depth: int, p99_ms: float,
+    def observe(self, queue_depth: int, p99_ms: Optional[float],
                 now: Optional[float] = None) -> bool:
-        """Feed one load observation; returns the (possibly new) state."""
+        """Feed one load observation; returns the (possibly new) state.
+
+        ``p99_ms=None`` means the latency signal is *unknown* (the rolling
+        window holds no completed requests — e.g. everything is queued, or
+        the endpoint just started).  Unknown never engages the latency
+        trigger, and — when the trigger is armed — never satisfies
+        recovery either: an endpoint at peak overload whose requests are
+        all waiting must not flap back to full precision just because
+        nothing has completed to prove the latency is still bad.
+        """
         if now is None:
             now = time.perf_counter()
         p = self.policy
         overloaded = queue_depth >= p.queue_high or (
-            p.p99_high_ms is not None and p99_ms >= p.p99_high_ms)
+            p.p99_high_ms is not None and p99_ms is not None
+            and p99_ms >= p.p99_high_ms)
         recovered = queue_depth <= p.queue_low and (
-            p.p99_high_ms is None or p99_ms <= p.p99_low_ms)
+            p.p99_high_ms is None
+            or (p99_ms is not None and p99_ms <= p.p99_low_ms))
         with self._lock:
             self.observations += 1
             may_switch = now - self._since >= p.min_hold_s

@@ -73,7 +73,18 @@ class RollingHistogram:
             self._counts[self._slot(now)][b] += 1
 
     def merged(self, now: Optional[float] = None) -> np.ndarray:
-        """Bucket counts over the live window (expired slices dropped)."""
+        """Bucket counts over the live window (expired slices dropped).
+
+        The strict ``>`` is load-bearing: with E = ``now``'s absolute slice
+        index, the oldest live slice is E - slices + 1, whose records are at
+        most ``window_s`` old (a record in slice e was made in
+        [e*slice_s, (e+1)*slice_s), so its age at ``now`` is strictly below
+        ``(E - e + 1) * slice_s``).  A ``>=`` here would keep slice
+        E - slices too and report up to ``window_s + slice_s`` of history —
+        letting an ended load spike skew percentiles past the window.  The
+        boundary slice instead ages out *whole* (dropped up to one slice_s
+        early), so the merged counts never over-include.
+        """
         if now is None:
             now = time.perf_counter()
         epoch = int(now // self._slice_s)
@@ -84,16 +95,27 @@ class RollingHistogram:
     def count(self, now: Optional[float] = None) -> int:
         return int(self.merged(now).sum())
 
+    def overflow(self, now: Optional[float] = None) -> int:
+        """Live-window count of values beyond the last finite bucket edge
+        (~12 s).  :meth:`percentile` reports *at* that edge for these —
+        ">= last_edge" semantics — so a nonzero overflow count is the
+        signal that a reported tail percentile is saturated, not exact."""
+        return int(self.merged(now)[_N_BUCKETS])
+
     def percentile(self, q: float, now: Optional[float] = None) -> float:
         """Nearest-rank percentile (seconds) at a bucket upper edge; 0.0
-        when the window is empty."""
+        when the window is empty.  When the rank lands in the overflow
+        bucket the last finite edge is returned with ">= edge" semantics —
+        check :meth:`overflow` to detect that saturation (dashboards and
+        the benchmark gates surface it as ``window_overflow``)."""
         counts = self.merged(now)
         total = int(counts.sum())
         if total == 0:
             return 0.0
         rank = max(1, math.ceil(q / 100.0 * total))
         b = int(np.searchsorted(np.cumsum(counts), rank))
-        # Overflow bucket reports the last finite edge (conservative floor).
+        # Overflow bucket reports the last finite edge (conservative floor;
+        # the overflow() count marks the value as ">= edge").
         return float(BUCKET_EDGES_S[min(b, _N_BUCKETS - 1)])
 
 
@@ -153,6 +175,9 @@ class SLOTracker:
             snap = {
                 "window_s": self.window_s,
                 "window_requests": w.hist.count(now),
+                # Nonzero => some window percentiles are ">= last edge"
+                # floors, not exact values (see RollingHistogram.overflow).
+                "window_overflow": w.hist.overflow(now),
                 "requests": w.n_requests,
                 "p50_ms": w.hist.percentile(50, now) * 1e3,
                 "p95_ms": w.hist.percentile(95, now) * 1e3,

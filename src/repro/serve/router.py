@@ -84,10 +84,16 @@ class EndpointStats:
                 self.n_degraded_batches += 1
                 self.n_degraded_rows += n_rows
 
-    def rolling_p99_ms(self) -> float:
+    def rolling_p99_ms(self) -> Optional[float]:
         """p99 (ms) over the rolling latency window — the degradation
-        governor's latency signal (0.0 while the window is empty)."""
+        governor's latency signal.  ``None`` while the window is empty:
+        an empty window means "no completions observed", NOT "zero
+        latency" — reporting 0.0 here let a fully-queued endpoint (every
+        request waiting, none finishing) satisfy ``p99 <= p99_low_ms``
+        and flap back to full precision at peak overload."""
         with self._lock:
+            if not self._latencies:
+                return None
             lat = np.asarray(self._latencies, np.float64)
         return _percentiles(lat, (99,))[0] * 1e3
 

@@ -1,0 +1,226 @@
+"""Whole-model megakernel acceptance: one dispatch, bit-identical, safe.
+
+Four contracts, each its own section:
+
+* **golden bit-identity** — every servable quantized MLP/SVM Target
+  (including the calibrated ``auto16``/``auto8`` tags) reproduces the
+  stored golden bytes on every backend, with the pallas route going
+  through the megakernel;
+* **dispatch count** — a VMEM-fitting quantized model issues exactly ONE
+  kernel dispatch per forward pass (the number the paper-scale models
+  always hit);
+* **megakernel == per-layer == ref** — property tests on saturation-heavy
+  inputs (full epilogue range: requantize, saturate, PWL) at the kernel
+  level, where the three spellings can be compared directly;
+* **VMEM fallback** — ``REPRO_MEGAKERNEL_VMEM=0`` forces the per-layer
+  route: same bytes, more dispatches, a *different* artifact cache key
+  (the strategy is part of the compiled identity).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from _hypothesis_shim import given, settings, st
+from golden import regenerate as G
+
+from repro.core import fixedpoint as fxp
+from repro.core.activations import get_qsigmoid
+from repro.core.fixedpoint import FXP8, FXP16
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+MEGA_KINDS = ("mlp", "svm-poly", "svm-rbf")
+QUANTIZED_TAGS = tuple(t for t in G.CLASSIFIER_TARGETS if t != "flt")
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return G.make_dataset()
+
+
+@pytest.fixture(scope="module")
+def classifiers(dataset):
+    xtr, ytr, _, c = dataset
+    return G.train_classifiers(xtr, ytr, c)
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    out = {}
+    for kind in MEGA_KINDS:
+        with np.load(G.golden_path(kind)) as z:
+            out[kind] = {tag: z[tag] for tag in z.files}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# golden bit-identity + strategy selection
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+@pytest.mark.parametrize("kind", MEGA_KINDS)
+def test_quantized_targets_match_goldens(classifiers, dataset, goldens,
+                                         kind, backend):
+    """Every servable quantized Target reproduces the golden bytes; the
+    pallas artifacts do it through the megakernel route (paper-scale
+    models always fit the VMEM budget)."""
+    xtr, _, xte, _ = dataset
+    for tag in QUANTIZED_TAGS:
+        art = G.compile_for_tag(classifiers[kind], tag, backend, xtr)
+        if backend == "pallas":
+            assert art.kernel_strategy == "megakernel", f"{kind}/{tag}"
+        np.testing.assert_array_equal(
+            art.predict(xte), goldens[kind][tag],
+            err_msg=f"{kind}/{tag}/{backend} diverged from golden bytes")
+
+
+@pytest.mark.parametrize("kind", MEGA_KINDS)
+def test_megakernel_single_dispatch_per_forward(classifiers, dataset, kind):
+    """THE acceptance number: one kernel dispatch per forward pass, for
+    every VMEM-fitting quantized Target.  Fresh artifacts per tag so the
+    trace-time dispatch ticks happen inside the counter's scope."""
+    xtr, _, xte, _ = dataset
+    for tag in QUANTIZED_TAGS:
+        art = G.compile_for_tag(classifiers[kind], tag, "pallas", xtr)
+        with ops.count_dispatches() as c:
+            art.predict(xte)
+        assert c.count == 1, (
+            f"{kind}/{tag}: {c.count} dispatches, expected 1")
+
+
+def test_float_targets_have_no_strategy(classifiers, dataset):
+    """The megakernel is a fixed-point route: float artifacts record no
+    kernel strategy (their forward is plain XLA matmuls)."""
+    xtr, _, _, _ = dataset
+    art = G.compile_for_tag(classifiers["mlp"], "flt", "pallas", xtr)
+    assert art.kernel_strategy is None
+
+
+# ---------------------------------------------------------------------------
+# megakernel == per-layer fused == ref, under heavy saturation
+# ---------------------------------------------------------------------------
+def _saturating_operand(rng, shape, fmt, k_contract):
+    """Integer operands as hot as the int32 MXU contract allows: bounded so
+    |dot| < 2^31 stays exact, but far past what the epilogue's requantize
+    can represent — every layer output rails against ``qmax``."""
+    lim = min(fmt.qmax, int(np.sqrt(2**31 / max(k_contract, 1))) // 2)
+    return jnp.asarray(
+        rng.randint(-lim, lim + 1, shape).astype(np.dtype(fmt.dtype)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 24), k=st.integers(1, 48),
+       h=st.integers(1, 32), n=st.integers(1, 12),
+       seed=st.integers(0, 2**31 - 1),
+       fmt=st.sampled_from([FXP16, FXP8]),
+       act=st.sampled_from(["pwl4", "exact"]))
+def test_property_mlp_megakernel_vs_per_layer(m, k, h, n, seed, fmt, act):
+    """ops.fxp_mlp_model == chained ops.fxp_layer == composed ref oracle,
+    layer by layer, on saturation-heavy inputs."""
+    rng = np.random.RandomState(seed)
+    dims = (k, h, n)
+    kc = max(dims)
+    x = _saturating_operand(rng, (m, k), fmt, kc)
+    ws = [_saturating_operand(rng, (k, h), fmt, kc),
+          _saturating_operand(rng, (h, n), fmt, kc)]
+    bs = [_saturating_operand(rng, (h,), fmt, kc),
+          _saturating_operand(rng, (n,), fmt, kc)]
+    schedule = ((fmt.frac_bits, fmt, act), (fmt.frac_bits, fmt, "none"))
+
+    mega = ops.fxp_mlp_model(x, tuple(ws), tuple(bs), schedule)
+    chained = x
+    for (sh, fo, a), w, b in zip(schedule, ws, bs):
+        chained = ops.fxp_layer(chained, w, b, fo, activation=a, shift=sh)
+    ref = R.fxp_mlp_model_ref(x, tuple(ws), tuple(bs), schedule)
+    np.testing.assert_array_equal(np.asarray(mega), np.asarray(chained))
+    np.testing.assert_array_equal(np.asarray(mega), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 16), f=st.integers(1, 24), s=st.integers(1, 32),
+       c=st.integers(1, 6), seed=st.integers(0, 2**31 - 1),
+       kind=st.sampled_from(["poly", "rbf"]),
+       degree=st.integers(2, 3))
+def test_property_svm_megakernel_vs_chained(m, f, s, c, seed, kind, degree):
+    """ops.fxp_svm_model == the chained qmatmul + elementwise + fused
+    decision path (the VMEM-overflow fallback spelling) == the ref
+    oracle, on saturation-heavy inputs."""
+    fmt = FXP16
+    rng = np.random.RandomState(seed)
+    kc = max(f, s)
+    qx = _saturating_operand(rng, (m, f), fmt, kc)
+    sv = _saturating_operand(rng, (s, f), fmt, kc)
+    dual = _saturating_operand(rng, (s, c), fmt, kc)
+    icept = _saturating_operand(rng, (c,), fmt, kc)
+    one = int(fmt.scale)  # 1.0 in Qn.m
+    qgamma = int(rng.randint(1, 3 * one))
+    qcoef0 = int(rng.randint(-one, one))
+    dec_shift = fmt.frac_bits
+
+    mega = ops.fxp_svm_model(qx, sv, dual, icept, kind, fmt, fmt,
+                             qgamma, qcoef0, degree, dec_shift)
+
+    # the chained (per-stage) spelling the lowering falls back to past VMEM
+    dot = ops.fxp_qmatmul(qx, sv.T, fmt)
+    if kind == "poly":
+        kv = fxp.qadd(fxp.qmul(dot, jnp.int32(qgamma).astype(fmt.dtype),
+                               fmt), jnp.int32(qcoef0).astype(fmt.dtype), fmt)
+        kv = fxp.qpow_int(kv, degree, fmt)
+    else:
+        def qsq(v):
+            wide = v.astype(fmt.wide_dtype)
+            return fxp.rshift_round_saturate(jnp.sum(wide * wide, -1), fmt)
+        d2 = fxp.qadd(fxp.qsub(qsq(qx)[:, None],
+                               fxp.qadd(dot, dot, fmt), fmt),
+                      qsq(sv)[None, :], fmt)
+        arg = fxp.qneg(fxp.qmul(d2, jnp.int32(qgamma).astype(fmt.dtype),
+                                fmt), fmt)
+        kv = fxp.qexp(arg, fmt)
+    chained = ops.fxp_layer(kv, dual, icept, fmt, activation="none",
+                            shift=dec_shift)
+
+    ref = R.fxp_svm_model_ref(qx, sv, dual, icept, kind, fmt, fmt,
+                              qgamma, qcoef0, degree, dec_shift)
+    np.testing.assert_array_equal(np.asarray(mega), np.asarray(chained))
+    np.testing.assert_array_equal(np.asarray(mega), np.asarray(ref))
+
+
+def test_mlp_megakernel_activation_matches_chained_qsigmoid():
+    """Direct spelling check: the megakernel's hidden-layer epilogue is the
+    same shared ``get_qsigmoid`` the chained form applies out-of-kernel."""
+    fmt = FXP16
+    rng = np.random.RandomState(7)
+    x = _saturating_operand(rng, (9, 20), fmt, 20)
+    w = _saturating_operand(rng, (20, 5), fmt, 20)
+    b = _saturating_operand(rng, (5,), fmt, 20)
+    for act in ("none", "pwl4", "exact"):
+        schedule = ((fmt.frac_bits, fmt, act),)
+        mega = ops.fxp_mlp_model(x, (w,), (b,), schedule)
+        chained = fxp.qadd(ops.fxp_qmatmul(x, w, fmt), b[None, :], fmt)
+        if act != "none":
+            chained = get_qsigmoid(act)(chained, fmt)
+        np.testing.assert_array_equal(np.asarray(mega), np.asarray(chained))
+
+
+# ---------------------------------------------------------------------------
+# VMEM-overflow fallback
+# ---------------------------------------------------------------------------
+def test_vmem_fallback_per_layer_is_bit_identical(classifiers, dataset,
+                                                  goldens, monkeypatch):
+    """A zero VMEM budget forces the per-layer route on every model: more
+    dispatches, the same golden bytes, and a distinct cache key (the
+    strategy is part of the compiled artifact's identity)."""
+    xtr, _, xte, _ = dataset
+    mega = {k: G.compile_for_tag(classifiers[k], "fxp16", "pallas", xtr)
+            for k in MEGA_KINDS}
+    monkeypatch.setenv("REPRO_MEGAKERNEL_VMEM", "0")
+    for kind in MEGA_KINDS:
+        art = G.compile_for_tag(classifiers[kind], "fxp16", "pallas", xtr)
+        assert art.kernel_strategy == "per-layer", kind
+        assert art.cache_key != mega[kind].cache_key, kind
+        with ops.count_dispatches() as c:
+            got = art.predict(xte)
+        assert c.count > 1, f"{kind}: fallback should chain dispatches"
+        np.testing.assert_array_equal(
+            got, goldens[kind]["fxp16"],
+            err_msg=f"{kind}: per-layer fallback diverged from golden")

@@ -36,6 +36,7 @@ from repro.serve import (BatchingPolicy, DegradationPolicy, InferenceService,
 from repro.serve.net import (AdmissionController, AdmissionPolicy,
                              HttpServer, ProtocolError, RollingHistogram,
                              SLOTracker, read_request, response_bytes)
+from repro.serve.net.slo import BUCKET_EDGES_S
 
 pytestmark = pytest.mark.filterwarnings("ignore")
 
@@ -202,6 +203,54 @@ def test_rolling_histogram_window_expiry():
     assert h.count(now=11.0) == 1
 
 
+def test_rolling_histogram_boundary_slice_ages_out():
+    """Regression: a load spike must stop influencing percentiles once it
+    is ``window_s`` old.  The ring keeps a slice only while
+    ``epoch > now_epoch - slices`` — the strict ``>`` drops the boundary
+    slice exactly at the window edge (a ``>=`` would report up to
+    ``window_s + slice_s`` of history; see RollingHistogram.merged)."""
+    h = RollingHistogram(window_s=60.0, slices=12)
+    # a spike spread over the first slice (and a bit of the second)
+    for t in (0.1, 2.5, 4.9, 5.1):
+        h.record(5.0, now=t)  # 5 s latencies: a real spike
+    assert h.percentile(99, now=30.0) >= 4.0
+    # advance now past window_s from the last spike sample: spike gone
+    assert h.count(now=65.2) == 0
+    assert h.percentile(99, now=65.2) == 0.0
+    # fresh traffic after the spike aged out reports clean percentiles
+    h.record(0.010, now=66.0)
+    assert h.percentile(99, now=66.0) <= 0.012
+    # and at no point past the window edge does the boundary slice leak:
+    # records from [0, slice_s) are dropped no later than now == window_s
+    h2 = RollingHistogram(window_s=60.0, slices=12)
+    h2.record(5.0, now=0.1)
+    assert h2.count(now=60.0) == 0  # not 65.0 — no slice_s over-inclusion
+
+
+def test_rolling_histogram_overflow_bucket_is_surfaced():
+    """Latencies beyond the last finite edge (~12 s) report AT that edge
+    (">= edge" floor semantics) — and the overflow count exposes that the
+    percentile is saturated rather than exact."""
+    h = RollingHistogram(window_s=60.0)
+    last_edge = float(BUCKET_EDGES_S[-1])
+    h.record(last_edge * 10, now=1.0)  # way past the histogram range
+    h.record(last_edge * 99, now=1.0)
+    h.record(0.010, now=1.0)
+    assert h.percentile(99, now=1.0) == pytest.approx(last_edge)
+    assert h.overflow(now=1.0) == 2
+    assert h.count(now=1.0) == 3  # overflow values still count in ranks
+    # overflow ages out with its slices like any other count
+    assert h.overflow(now=120.0) == 0
+
+    trk = SLOTracker(window_s=60.0, default_slo_ms=50.0)
+    trk.record("ep", last_edge * 10, now=1.0)
+    snap = trk.snapshot(now=1.0)["ep"]
+    assert snap["window_overflow"] == 1
+    assert snap["p99_ms"] == pytest.approx(last_edge * 1e3)
+    snap2 = trk.snapshot(now=120.0)["ep"]
+    assert snap2["window_overflow"] == 0
+
+
 def test_slo_tracker_violations_and_snapshot():
     trk = SLOTracker(window_s=60.0, default_slo_ms=50.0,
                      targets={"fast": 1000.0})
@@ -240,6 +289,43 @@ def test_governor_recovery_is_conjunctive():
     assert not g.observe(1, 10.0, now=3.0)  # both low: recover
     assert g.snapshot() == {"degraded": False, "observations": 4,
                             "engagements": 1, "recoveries": 1}
+
+
+def test_governor_holds_on_empty_window_p99():
+    """Regression: with the latency trigger armed, an endpoint whose
+    requests are all *queued* (zero completions in the rolling window)
+    must not recover — unknown p99 is not low p99.  The stats layer
+    reports None for an empty window and the governor treats None as
+    blocking recovery / never engaging the latency trigger by itself."""
+    g = PrecisionGovernor(DegradationPolicy(
+        queue_high=10, queue_low=2, p99_high_ms=100.0, p99_low_ms=40.0,
+        min_hold_s=0.0))
+    assert g.observe(50, 500.0, now=0.0)      # engaged under real overload
+    # queue drained below queue_low but NOTHING completed: p99 unknown.
+    assert g.observe(0, None, now=1.0)        # must hold degraded
+    assert g.observe(1, None, now=2.0)        # still holding
+    assert g.recoveries == 0
+    assert not g.observe(0, 10.0, now=3.0)    # a real low p99: recover
+    # unknown p99 never *engages* the latency trigger either
+    g2 = PrecisionGovernor(DegradationPolicy(
+        queue_high=10, queue_low=2, p99_high_ms=100.0, min_hold_s=0.0))
+    assert not g2.observe(0, None, now=0.0)
+    # queue-only policies are unaffected by an unknown latency signal
+    g3 = PrecisionGovernor(DegradationPolicy(queue_high=10, queue_low=2,
+                                             min_hold_s=0.0))
+    assert g3.observe(50, None, now=0.0)
+    assert not g3.observe(0, None, now=1.0)
+
+
+def test_rolling_p99_none_on_empty_window():
+    """EndpointStats reports None (not 0.0) before any request completes —
+    the signal the governor needs to distinguish idle from overloaded."""
+    from repro.serve.router import EndpointStats
+
+    stats = EndpointStats()
+    assert stats.rolling_p99_ms() is None
+    stats.record_batch(1, 1, 1, [0.050])
+    assert stats.rolling_p99_ms() == pytest.approx(50.0)
 
 
 def test_governor_min_hold_prevents_flapping():

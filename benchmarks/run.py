@@ -27,9 +27,9 @@ def main(argv=None) -> None:
 
     from . import (compile_backends, fig3_4_time, fig5_6_memory,
                    fig7_8_modifications, kernels_bench, lm_quantized,
-                   megakernel, quant_accuracy, roofline_table, serve_http,
-                   serve_sharded, serve_throughput, table_v_accuracy,
-                   table_vi_vii_sigmoid, table_viii_tools)
+                   megakernel, quant_accuracy, roofline_table, serve_chaos,
+                   serve_http, serve_sharded, serve_throughput,
+                   table_v_accuracy, table_vi_vii_sigmoid, table_viii_tools)
     from .common import RESULTS_DIR
 
     datasets = ("D5", "D2") if args.quick else None
@@ -49,6 +49,7 @@ def main(argv=None) -> None:
         "serve": lambda: serve_throughput.run(smoke=args.quick)["rows"],
         "serve_sharded": lambda: serve_sharded.run(smoke=args.quick)["rows"],
         "serve_http": lambda: serve_http.run(smoke=args.quick)["rows"],
+        "chaos": lambda: serve_chaos.run(smoke=args.quick)["rows"],
         "quant": lambda: quant_accuracy.run(smoke=args.quick),
     }
     if args.only:

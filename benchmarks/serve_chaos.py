@@ -1,0 +1,356 @@
+"""Chaos gate: traffic replay under deterministic fault injection.
+
+Replays the HTTP traffic harness of ``serve_http`` against a service whose
+serving stack is being deliberately broken by a seeded
+:class:`repro.serve.faults.FaultPlan`, one scenario per failure mode the
+repo claims to tolerate:
+
+* ``dispatch_transient``  — every 3rd dispatch attempt raises a retryable
+  fault; the endpoint's :class:`RetryPolicy` must absorb all of them.
+* ``dispatch_poison``     — every 7th dispatch fails *non-retryably*;
+  poison-batch bisection must fail the offending requests alone (typed
+  500) while their batchmates are served bit-identically.
+* ``slow_dispatch``       — every 5th dispatch sleeps 50 ms; latency
+  spikes, availability must not.
+* ``http_malformed``      — garbage connections (binary junk, truncated
+  bodies, mid-request disconnects) are fuzzed *concurrently with* live
+  traffic; the fuzz must not cost a single good request.
+* ``replica_loss``        — a mesh replica hard-faults; shards fail over
+  to the survivors bit-identically (skipped below 2 devices).
+* ``compile_failure``     — the single-flight cache owner's compile
+  raises; every racing waiter sees the error, the slot un-wedges, a
+  retry compiles clean.
+* ``corrupt_archive``     — archive bytes are flipped on load; the v3
+  integrity check must raise :class:`ArtifactIntegrityError` (and the
+  untouched file keeps round-tripping bit-identically).
+
+Gates (enforced by ``--smoke`` and CI): every scheduled request resolves
+(answered == scheduled, no transport errors — nothing hangs), every 200
+response is byte-identical to the stored golden vectors, each scenario
+clears its availability floor, and the golden files themselves are
+byte-unchanged by the whole run.
+
+  PYTHONPATH=src python benchmarks/serve_chaos.py --smoke
+  PYTHONPATH=src python benchmarks/serve_chaos.py --out BENCH_serve_chaos.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import hashlib
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.compile import ArtifactIntegrityError, Target, load
+from repro.serve import (ArtifactCache, BatchingPolicy, FaultPlan, FaultRule,
+                         InferenceService, RetryPolicy)
+from repro.serve import faults
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "tests"))
+from golden import regenerate as G  # noqa: E402
+
+try:  # sibling module: package-relative under benchmarks.run, flat as a CLI
+    from . import serve_http as SH
+except ImportError:
+    import serve_http as SH
+
+MAX_BATCH = 32
+
+# name -> (fault plan rules, retry policy, availability floor)
+HTTP_SCENARIOS = {
+    "baseline": ([], None, 0.98),
+    "dispatch_transient": (
+        [FaultRule(site="endpoint.dispatch", every=3, transient=True)],
+        RetryPolicy(max_attempts=4, backoff_base_s=1e-3, backoff_max_s=0.02),
+        0.95),
+    "dispatch_poison": (
+        [FaultRule(site="endpoint.dispatch", every=7, transient=False)],
+        None, 0.70),
+    "slow_dispatch": (
+        [FaultRule(site="endpoint.dispatch", kind="delay", delay_s=0.05,
+                   every=5)],
+        None, 0.95),
+    "http_malformed": ([], None, 0.95),
+}
+
+# (raw bytes, expect_response) — truncated requests legitimately get no
+# reply (the server is still waiting for the rest); just hang up on those
+_GARBAGE = [
+    (b"\x00\xff\xfe not http at all\r\n\r\n", True),
+    (b"POST /v1/predict/tree HTTP/1.1\r\nContent-Length: nope\r\n\r\n", True),
+    (b"POST /v1/predict/tree HTTP/1.1\r\nContent-Length: 9\r\n\r\nnot json!",
+     True),
+    (b"POST /v1/pre", False),                      # disconnect mid-request
+    (b"GET /v1/health HTTP/1.1\r\nHost:", False),  # disconnect mid-header
+    (b"POST /v1/predict/tree HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n{}",
+     True),
+]
+
+
+async def _fuzz_connections(host, port, stop, counters):
+    """Hurl garbage at the listener until told to stop."""
+    i = 0
+    while not stop.is_set():
+        raw, expect_response = _GARBAGE[i % len(_GARBAGE)]
+        i += 1
+        try:
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write(raw)
+            await writer.drain()
+            if expect_response:
+                try:
+                    await asyncio.wait_for(reader.read(4096), 2.0)
+                except asyncio.TimeoutError:
+                    counters["fuzz_hung"] += 1
+            writer.close()
+            counters["fuzz_sent"] += 1
+        except OSError:
+            counters["fuzz_refused"] += 1
+        await asyncio.sleep(0.01)
+
+
+def run_http_scenario(name: str, art16, rows: np.ndarray, goldens,
+                      duration_s: float, qps: float) -> dict:
+    rules, retry, floor = HTTP_SCENARIOS[name]
+    svc = InferenceService()
+    svc.register("tree", artifact=art16,
+                 policy=BatchingPolicy(max_batch=MAX_BATCH, max_wait_ms=2.0),
+                 retry=retry)
+    server = svc.serve_http()  # no admission: chaos, not backpressure
+    arrivals = SH.bursty_arrivals(qps, duration_s, seed=7)
+    counters = {"fuzz_sent": 0, "fuzz_hung": 0, "fuzz_refused": 0}
+
+    async def main():
+        await server.start()
+        # prime warmup/jit BEFORE the plan installs, so fault event
+        # counters line up with real traffic, not trace warmup
+        r, w = await asyncio.open_connection(server.host, server.port)
+        await SH._http_post(r, w, "/v1/predict/tree",
+                            json.dumps({"rows": [rows[0].tolist()]}).encode(),
+                            timeout_s=120.0)
+        w.close()
+        if rules:
+            faults.install(FaultPlan(rules, seed=0))
+        stop = asyncio.Event()
+        fuzzer = None
+        if name == "http_malformed":
+            fuzzer = asyncio.create_task(
+                _fuzz_connections(server.host, server.port, stop, counters))
+        try:
+            return await SH._replay(server.host, server.port, "tree",
+                                    arrivals, rows, n_conns=64)
+        finally:
+            stop.set()
+            if fuzzer is not None:
+                await fuzzer
+            faults.uninstall()
+            await server.stop()
+
+    try:
+        records = asyncio.run(main())
+    finally:
+        faults.uninstall()
+        svc.close(timeout=10.0)
+
+    ok = [r for r in records if r["status"] == 200]
+    mismatches = sum(
+        1 for r in ok if int(r["prediction"]) != int(goldens["auto16"][r["idx"]]))
+    lat = [r["latency_s"] * 1e3 for r in ok]
+    out = {
+        "scenario": name,
+        "scheduled": len(arrivals),
+        "answered": len(records),
+        "n_200": len(ok),
+        "n_500": sum(r["status"] == 500 for r in records),
+        "n_504": sum(r["status"] == 504 for r in records),
+        "n_transport_errors": sum(r["status"] == -1 for r in records),
+        "availability": len(ok) / max(1, len(records)),
+        "availability_floor": floor,
+        "bit_mismatches": mismatches,
+        "p50_ms": SH._p(lat, 50), "p99_ms": SH._p(lat, 99),
+        **{k: v for k, v in counters.items() if v},
+    }
+    print(f"serve_chaos/{name}: {out['n_200']}/{out['scheduled']} ok "
+          f"({out['n_500']} x500, {out['n_transport_errors']} transport) | "
+          f"availability {out['availability']:.3f} (floor {floor}) | "
+          f"p99 {out['p99_ms']:.0f}ms | {mismatches} golden mismatches")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# non-HTTP scenarios
+# ---------------------------------------------------------------------------
+def scenario_replica_loss(art16, xte, goldens) -> dict:
+    import jax
+
+    if jax.device_count() < 2:
+        print("serve_chaos/replica_loss: skipped (single device)")
+        return {"scenario": "replica_loss", "skipped": True, "ok": True}
+    from repro.sharding.rules import make_serving_mesh
+
+    golden = np.asarray(goldens["auto16"][:64])
+    sharded = art16.specialize_mesh(make_serving_mesh(), "fused")
+    clean = np.array_equal(sharded.predict(xte[:64]), golden)
+    plan = FaultPlan([FaultRule(site="mesh.replica", match="0",
+                                transient=True)])
+    with faults.inject(plan):
+        faulted = np.array_equal(sharded.predict(xte[:64]), golden)
+    recovered = np.array_equal(sharded.predict(xte[:64]), golden)
+    health = sharded.replica_health.snapshot()
+    ok = clean and faulted and recovered and health["faults"] >= 1
+    print(f"serve_chaos/replica_loss: bit-identical clean={clean} "
+          f"under-fault={faulted} after={recovered} | health {health}")
+    return {"scenario": "replica_loss", "skipped": False, "ok": ok,
+            "replica_health": health}
+
+
+def scenario_compile_failure(model) -> dict:
+    cache = ArtifactCache()
+    target = Target(number_format="fxp16", backend="xla")
+    errors, results = [], []
+    barrier = threading.Barrier(4)
+
+    def racer():
+        barrier.wait()
+        try:
+            results.append(cache.get_or_compile(model, target))
+        except Exception as e:  # noqa: BLE001 — the injected failure
+            errors.append(e)
+
+    with faults.inject(FaultPlan([FaultRule(site="cache.compile",
+                                            count=1)])):
+        threads = [threading.Thread(target=racer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        hung = any(t.is_alive() for t in threads)
+        retry = cache.get_or_compile(model, target)  # slot must be clear
+    hit = cache.get_or_compile(model, target)
+    ok = (not hung and len(errors) >= 1
+          and all(isinstance(e, faults.InjectedFault) for e in errors)
+          and retry is hit and cache.stats()["entries"] == 1)
+    print(f"serve_chaos/compile_failure: {len(errors)} waiters failed, "
+          f"{len(results)} raced past, hung={hung}, retry_cached={retry is hit}")
+    return {"scenario": "compile_failure", "ok": ok, "waiters_failed":
+            len(errors), "hung": hung}
+
+
+def scenario_corrupt_archive(art16, xte, tmp_dir: str) -> dict:
+    path = os.path.join(tmp_dir, "chaos_tree.embml")
+    art16.save(path)
+    golden = art16.predict(xte[:64])
+    roundtrip = np.array_equal(load(path).predict(xte[:64]), golden)
+    typed = False
+    plan = FaultPlan([FaultRule(site="artifact.load", kind="corrupt",
+                                corrupt_bytes=16)], seed=11)
+    with faults.inject(plan):
+        try:
+            load(path)
+        except ArtifactIntegrityError:
+            typed = True
+        except Exception:  # noqa: BLE001 — wrong type = gate failure
+            typed = False
+    after = np.array_equal(load(path).predict(xte[:64]), golden)
+    os.remove(path)
+    ok = roundtrip and typed and after
+    print(f"serve_chaos/corrupt_archive: roundtrip={roundtrip} "
+          f"typed_error={typed} clean_after={after}")
+    return {"scenario": "corrupt_archive", "ok": ok, "roundtrip": roundtrip,
+            "typed_error": typed}
+
+
+def _golden_digests() -> dict:
+    out = {}
+    gdir = os.path.dirname(G.golden_path("tree"))
+    for fname in sorted(os.listdir(gdir)):
+        if fname.endswith(".npz"):
+            with open(os.path.join(gdir, fname), "rb") as f:
+                out[fname] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    duration = 3.0 if smoke else 8.0
+    qps = 150.0
+    digests_before = _golden_digests()
+
+    xtr, ytr, xte, c = G.make_dataset()
+    model = G.train_classifiers(xtr, ytr, c)["tree"]
+    art16 = G.compile_for_tag(model, "auto16", "xla", xtr)
+    with np.load(G.golden_path("tree")) as z:
+        goldens = {"auto16": z["auto16"].copy()}
+
+    rows_out = []
+    for name in HTTP_SCENARIOS:
+        rows_out.append(run_http_scenario(name, art16, xte, goldens,
+                                          duration, qps))
+    rows_out.append(scenario_replica_loss(art16, xte, goldens))
+    rows_out.append(scenario_compile_failure(model))
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as td:
+        rows_out.append(scenario_corrupt_archive(art16, xte, td))
+
+    return {
+        "rows": rows_out, "smoke": smoke,
+        "goldens_unchanged": _golden_digests() == digests_before,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short traces + enforce the acceptance gates")
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    args = ap.parse_args(argv)
+    result = run(smoke=args.smoke)
+    text = json.dumps(result, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    # Gates live in the CLI, not run(): benchmarks/run.py drives run()
+    # inside a keep-going harness that a hard exit would abort.
+    if args.smoke:
+        failures = []
+        for row in result["rows"]:
+            name = row["scenario"]
+            if "answered" in row:  # HTTP scenarios
+                if row["answered"] != row["scheduled"]:
+                    failures.append(
+                        f"{name}: {row['scheduled']} scheduled, only "
+                        f"{row['answered']} resolved — requests hung")
+                if row["n_transport_errors"]:
+                    failures.append(f"{name}: {row['n_transport_errors']} "
+                                    f"transport errors — service fell over")
+                if row["bit_mismatches"]:
+                    failures.append(f"{name}: {row['bit_mismatches']} "
+                                    f"responses diverged from the goldens")
+                if row["availability"] < row["availability_floor"]:
+                    failures.append(
+                        f"{name}: availability {row['availability']:.3f} "
+                        f"under the {row['availability_floor']} floor")
+                if row.get("fuzz_hung"):
+                    failures.append(f"{name}: {row['fuzz_hung']} fuzz "
+                                    f"connections hung without a response")
+            elif not row.get("skipped") and not row.get("ok"):
+                failures.append(f"{name}: scenario gate failed: {row}")
+        if not result["goldens_unchanged"]:
+            failures.append("golden vector files changed on disk during "
+                            "the chaos run")
+        if failures:
+            raise SystemExit("ACCEPTANCE FAIL:\n  " + "\n  ".join(failures))
+        print("serve_chaos: all gates passed "
+              f"({len(result['rows'])} scenarios, goldens byte-unchanged)")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,7 @@ for ``auto*`` number formats: ``compile(model, Target(number_format=
 
 from .api import (compile, compile_from_params, resolve_mesh_strategy,
                   specialize_mesh)
-from .artifact import CompiledArtifact, load
+from .artifact import ArtifactIntegrityError, CompiledArtifact, load
 from .fingerprint import fingerprint_params
 from .registry import (Lowered, Lowering, get_lowering, lowering_kinds,
                        model_kind, register_lowering)
@@ -36,6 +36,7 @@ __all__ = [
     "specialize_mesh",
     "resolve_mesh_strategy",
     "CompiledArtifact",
+    "ArtifactIntegrityError",
     "load",
     "Target",
     "NUMBER_FORMATS",

@@ -168,9 +168,19 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
       where all "devices" share one physical host and per-replica dispatch
       is pure overhead; bit-identical to ``spmd`` by row independence.
     * ``auto``  — ``fused`` on host-emulated meshes, ``spmd`` otherwise.
+
+    The ``fused`` path additionally tracks per-replica health
+    (:class:`repro.sharding.ReplicaHealthTracker`, surfaced as
+    ``artifact.replica_health``): a replica whose shard dispatch keeps
+    faulting is evicted and its shards fail over to the survivors — still
+    bit-identical, because rows are independent and every replica runs the
+    same specialized program — then periodically probed for re-admission.
+    While every replica is healthy and no ``mesh.replica`` fault rules are
+    installed, dispatch takes the original untracked fast path.
     """
     import dataclasses as _dc
 
+    from repro.sharding import ReplicaHealthTracker
     from repro.sharding import rules as shrules
 
     if artifact.kind == "lm":
@@ -217,6 +227,36 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
     else:
         inner = artifact._predict  # already specialized (jit + batch policy)
 
+    tracker = ReplicaHealthTracker(replicas) if strategy == "fused" else None
+
+    def _mesh_faults():
+        """The installed fault injector, iff it has ``mesh.replica`` rules
+        (lazy import: repro.serve depends on repro.compile, not vice versa)."""
+        try:
+            from repro.serve import faults
+        except Exception:
+            return None
+        return faults.current() if faults.active_for("mesh.replica") else None
+
+    def _replica_dispatch(shard_x, slot, injector):
+        """Run one shard on the healthiest available replica (nominal
+        replica first), reporting outcomes to the tracker.  Raises the last
+        failure only when every candidate replica refused the shard."""
+        last = None
+        for replica in tracker.candidates(slot):
+            try:
+                if injector is not None:
+                    injector.fire("mesh.replica", name=str(replica),
+                                  batch=shard_x)
+                o, s = inner(shard_x)
+            except Exception as e:
+                tracker.record_failure(replica)
+                last = e
+                continue
+            tracker.record_success(replica)
+            return o, s
+        raise last
+
     # Replica-aware padding must not leak phantom overflow/underflow counts
     # into predict_with_stats — shares the fixed-batch wrapper's correction.
     pad_row_stats: list = []
@@ -235,10 +275,17 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
         if total > n:
             pad = [(0, total - n)] + [(0, 0)] * (x.ndim - 1)
             x = np.pad(x, pad)
-        if strategy == "fused" and fixed_shard is not None:
+        injector = _mesh_faults() if strategy == "fused" else None
+        tracked = tracker is not None and (injector is not None
+                                           or not tracker.all_healthy())
+        if strategy == "fused" and (fixed_shard is not None or tracked):
             outs, stats = [], None
             for r in range(replicas):
-                o, s = inner(x[r * shard:(r + 1) * shard])
+                shard_x = x[r * shard:(r + 1) * shard]
+                if tracked:
+                    o, s = _replica_dispatch(shard_x, r, injector)
+                else:
+                    o, s = inner(shard_x)
                 outs.append(np.asarray(o))
                 stats = s if stats is None else stats.merge(s)
             out = np.concatenate(outs, axis=0)
@@ -253,7 +300,8 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
         return out[:n], stats
 
     return _dc.replace(artifact, _predict=predict, mesh=mesh,
-                       replicas=replicas, mesh_strategy=strategy)
+                       replicas=replicas, mesh_strategy=strategy,
+                       replica_health=tracker)
 
 
 def compile(model: Any, target: Optional[Target] = None,

@@ -27,7 +27,15 @@ from repro.train.checkpoint import (LEAF_KEY as _LEAF_KEY,
 
 from .target import Target
 
-__all__ = ["CompiledArtifact", "load", "mesh_descriptor"]
+__all__ = ["CompiledArtifact", "ArtifactIntegrityError", "load",
+           "mesh_descriptor"]
+
+
+class ArtifactIntegrityError(ValueError):
+    """The archive's bytes do not match what was saved (member checksum
+    mismatch, undecodable container, truncation).  Raised *before* any
+    corrupted member is deserialized: a flipped bit in stored weights must
+    fail loudly at load, never become a silently-wrong classifier."""
 
 
 def mesh_descriptor(mesh: Optional[Any], strategy: Optional[str]) -> Optional[Tuple]:
@@ -47,9 +55,13 @@ def mesh_descriptor(mesh: Optional[Any], strategy: Optional[str]) -> Optional[Tu
             tuple(int(d.id) for d in devs), strategy)
 
 _ARCHIVE_FORMAT = "repro-compiled-artifact"
-# v2: optional ``quant_plan`` payload (calibrated per-tensor formats); v1
-# archives (no plan) still load.
-_ARCHIVE_VERSION = 2
+# v2: optional ``quant_plan`` payload (calibrated per-tensor formats).
+# v3: members stored as individually-packed blobs with per-member sha256
+# verified on load.  v1/v2 archives still load (without integrity checks —
+# they carry none).
+_ARCHIVE_VERSION = 3
+# The v3 member blobs, in the order they are hashed into the archive.
+_ARCHIVE_MEMBERS = ("kind", "target", "params", "quant_plan", "metadata")
 
 
 # --------------------------------------------------------------------------
@@ -101,6 +113,10 @@ class CompiledArtifact:
     # Calibrated per-tensor formats (repro.quant.QuantPlan); None for fixed
     # and float targets.  Rides in the archive and keys the serving cache.
     quant_plan: Optional[Any] = dataclasses.field(default=None, repr=False)
+    # Replica health tracker (repro.sharding.ReplicaHealthTracker) for
+    # mesh-specialized artifacts on the fused dispatch path; None elsewhere.
+    # Surfaced into /v1/stats by the serving router.
+    replica_health: Optional[Any] = dataclasses.field(default=None, repr=False)
 
     @property
     def mesh_key(self) -> Optional[Tuple]:
@@ -289,12 +305,9 @@ class CompiledArtifact:
             raise ValueError(
                 "cannot save: parameters were dropped via discard_params(); "
                 "recompile the model to obtain a saveable artifact")
-        payload = {
-            "format": _ARCHIVE_FORMAT,
-            # Version-stamp what the payload actually needs: a plan-less
-            # archive is fully v1-compatible, so stamping it v2 would only
-            # lock out older readers for nothing.
-            "version": _ARCHIVE_VERSION if self.quant_plan is not None else 1,
+        import hashlib
+
+        members = {
             "kind": self.kind,
             "target": dataclasses.asdict(self.target),
             "params": _encode(self.params),
@@ -303,10 +316,36 @@ class CompiledArtifact:
             "quant_plan": (None if self.quant_plan is None
                            else self.quant_plan.to_dict()),
             "metadata": metadata or {},
+        }
+        # v3: every member is its own msgpack blob, checksummed so load()
+        # can prove the bytes it is about to deserialize are the bytes that
+        # were saved — weights that rotted in flash fail loudly, not subtly.
+        blobs = {name: msgpack.packb(members[name], use_bin_type=True)
+                 for name in _ARCHIVE_MEMBERS}
+        payload = {
+            "format": _ARCHIVE_FORMAT,
+            "version": _ARCHIVE_VERSION,
+            "members": blobs,
+            "integrity": {
+                "algo": "sha256",
+                "members": {name: hashlib.sha256(blob).hexdigest()
+                            for name, blob in blobs.items()},
+            },
             "saved_at": time.time(),
         }
         atomic_write_bytes(
             path, compress_bytes(msgpack.packb(payload, use_bin_type=True)))
+
+
+def _filter_archive_bytes(data: bytes, path: str) -> bytes:
+    """Fault-injection hook (``artifact.load`` byte-filter site): the chaos
+    harness corrupts archives here to prove the integrity check catches it.
+    Lazy import — repro.serve imports repro.compile, not vice versa."""
+    try:
+        from repro.serve import faults
+    except Exception:
+        return data
+    return faults.filter_bytes("artifact.load", data, name=path)
 
 
 def load(path: str) -> CompiledArtifact:
@@ -315,24 +354,68 @@ def load(path: str) -> CompiledArtifact:
     The stored parameters are re-run through the quantize/lower/specialize
     stages of the recorded Target, so the loaded artifact predicts
     identically to the one that was saved.
+
+    v3 archives are integrity-checked first: every member blob's sha256
+    must match the stored digest before it is deserialized.  Any mismatch
+    — or an archive too mangled to decode at all — raises
+    :class:`ArtifactIntegrityError`; corrupted weights never load.
     """
+    import hashlib
+
     import msgpack
 
     from .api import compile_from_params
 
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(decompress_bytes(f.read()), raw=False,
+        data = _filter_archive_bytes(f.read(), path)
+    try:
+        payload = msgpack.unpackb(decompress_bytes(data), raw=False,
                                   strict_map_key=False)
+        if not isinstance(payload, dict):
+            raise ValueError("archive container is not a map")
+    except ArtifactIntegrityError:
+        raise
+    except Exception as e:
+        raise ArtifactIntegrityError(
+            f"{path}: archive is not decodable ({e!r}); the file is "
+            f"corrupt or truncated") from e
     if payload.get("format") != _ARCHIVE_FORMAT:
         raise ValueError(f"{path} is not a {_ARCHIVE_FORMAT} archive")
-    if payload.get("version", 0) > _ARCHIVE_VERSION:
-        raise ValueError(f"archive version {payload['version']} is newer than "
+    version = payload.get("version", 0)
+    if version > _ARCHIVE_VERSION:
+        raise ValueError(f"archive version {version} is newer than "
                          f"this reader ({_ARCHIVE_VERSION})")
-    target = Target(**payload["target"])
-    params = _decode(payload["params"])
+    if version >= 3:
+        blobs = payload.get("members") or {}
+        digests = (payload.get("integrity") or {}).get("members") or {}
+        fields = {}
+        for name in _ARCHIVE_MEMBERS:
+            blob = blobs.get(name)
+            want = digests.get(name)
+            if not isinstance(blob, (bytes, bytearray)) or want is None:
+                raise ArtifactIntegrityError(
+                    f"{path}: archive member '{name}' is missing or "
+                    f"unchecksummed")
+            got = hashlib.sha256(blob).hexdigest()
+            if got != want:
+                raise ArtifactIntegrityError(
+                    f"{path}: sha256 mismatch on member '{name}' "
+                    f"(stored {want[:12]}…, computed {got[:12]}…); refusing "
+                    f"to deserialize a corrupt archive")
+            try:
+                fields[name] = msgpack.unpackb(bytes(blob), raw=False,
+                                               strict_map_key=False)
+            except Exception as e:
+                raise ArtifactIntegrityError(
+                    f"{path}: member '{name}' passed its checksum but is "
+                    f"undecodable ({e!r})") from e
+    else:
+        fields = payload  # v1/v2: members inline, no integrity section
+    target = Target(**fields["target"])
+    params = _decode(fields["params"])
     plan = None
-    if payload.get("quant_plan") is not None:
+    if fields.get("quant_plan") is not None:
         from repro.quant import QuantPlan
 
-        plan = QuantPlan.from_dict(payload["quant_plan"])
-    return compile_from_params(payload["kind"], params, target, plan=plan)
+        plan = QuantPlan.from_dict(fields["quant_plan"])
+    return compile_from_params(fields["kind"], params, target, plan=plan)

@@ -191,10 +191,20 @@ def main(argv=None):
     ap.add_argument("--fallback-format", choices=["auto32", "auto16", "auto8"],
                     default="auto8",
                     help="degraded-precision artifact format for --degrade")
+    ap.add_argument("--faults", metavar="SPEC",
+                    help="install a deterministic fault plan: JSON text or "
+                         "@path/to/plan.json (see repro.serve.faults); "
+                         "equivalent to exporting REPRO_FAULTS")
     args = ap.parse_args(argv)
 
     if (args.arch is None) == (args.classifier is None):
         ap.error("pass exactly one of --arch or --classifier")
+    if args.faults:
+        from repro.serve import faults as _faults
+
+        inj = _faults.install(_faults.FaultPlan.from_json(args.faults))
+        print(f"fault plan installed: {len(inj.plan.rules)} rule(s), "
+              f"seed {inj.plan.seed}")
     if args.classifier:
         return serve_classifier(args)
 

@@ -20,11 +20,23 @@ Layers (bottom-up):
 * :mod:`repro.serve.net` — the network serving plane: asyncio HTTP front
   end with admission control (429/503 + Retry-After) and rolling-window
   SLO tracking (imported on demand; ``InferenceService.serve_http``).
+* :mod:`repro.serve.reliability` — fault-tolerance primitives: structured
+  serve errors (:class:`DeadlineExceeded` 504, :class:`CircuitOpenError`
+  503, :class:`DispatchError` 500), bounded jittered retry
+  (:class:`RetryPolicy`), and the per-endpoint :class:`CircuitBreaker`.
+* :mod:`repro.serve.faults` — deterministic fault injection
+  (:class:`FaultPlan` / :class:`FaultInjector`): seeded chaos hooks
+  threaded through dispatch, compile, archive load, mesh replicas, and the
+  HTTP boundary, env-gated via ``REPRO_FAULTS``.
 """
 
 from .batching import BatchingPolicy, MicroBatcher
 from .cache import ArtifactCache
 from .degrade import DegradationPolicy, PrecisionGovernor
+from .faults import FaultInjector, FaultPlan, FaultRule, InjectedFault
+from .reliability import (BreakerPolicy, CircuitBreaker, CircuitOpenError,
+                          DeadlineExceeded, DispatchError, RetryPolicy,
+                          ServeError, TransientError)
 from .router import Endpoint, EndpointStats, ModelRouter
 from .service import InferenceService
 
@@ -38,4 +50,16 @@ __all__ = [
     "EndpointStats",
     "ModelRouter",
     "InferenceService",
+    "ServeError",
+    "TransientError",
+    "DeadlineExceeded",
+    "CircuitOpenError",
+    "DispatchError",
+    "RetryPolicy",
+    "BreakerPolicy",
+    "CircuitBreaker",
+    "FaultRule",
+    "FaultPlan",
+    "FaultInjector",
+    "InjectedFault",
 ]

@@ -11,18 +11,43 @@ callers' futures.
 Padding uses zero rows and is sliced off before results are returned —
 every lowering is row-independent, so padding can never perturb a real
 row's prediction (the batch-invariance property tests assert exactly this).
+
+Fault tolerance (see :mod:`repro.serve.reliability`):
+
+* **deadlines** — ``submit(x, timeout_s=...)`` attaches a deadline; a
+  request that expires while queued is resolved with
+  :class:`DeadlineExceeded` and *skipped* when batches form — never
+  dispatched, never holding up live batchmates.
+* **bounded retry** — a dispatch that raises a :class:`TransientError` is
+  retried under the endpoint's :class:`RetryPolicy` (exponential backoff +
+  jitter over an injectable clock/sleep).
+* **poison-batch bisection** — a batch whose dispatch keeps failing is
+  split in halves and the halves retried, recursively: the offending
+  request(s) fail alone with a structured :class:`DispatchError`
+  (``isolated=True``) while their batchmates are served normally —
+  bit-identically, because rows are independent and every sub-batch pads
+  to a warmed bucket.  A single poison request in a batch of n costs
+  O(log n) extra dispatches.
+* **worker survival** — no exception (predict, concatenation of
+  incompatible rows, a cancelled future) can kill the worker loop: every
+  future of the affected batch resolves with a structured error and the
+  loop keeps serving.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import queue
+import random
 import threading
 import time
+import zlib
 from concurrent.futures import Future
 from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
+
+from .reliability import DeadlineExceeded, DispatchError, RetryPolicy
 
 __all__ = ["BatchingPolicy", "MicroBatcher"]
 
@@ -129,50 +154,88 @@ class _Request:
     x: np.ndarray  # (n, ...) rows
     future: Future
     t_enqueue: float
+    deadline: Optional[float] = None  # absolute, on the batcher's clock
+
+
+def _fail(fut: Future, exc: BaseException) -> None:
+    """Resolve a future with an exception, tolerating cancelled/raced
+    futures — resolving a batch must never abort mid-scatter."""
+    try:
+        fut.set_exception(exc)
+    except BaseException:
+        pass
 
 
 # on_batch(n_requests, n_rows, bucket, per-request latencies in seconds,
 #          meta=batch metadata dict or None)
 OnBatch = Callable[[int, int, int, Sequence[float]], None]
+# on_dispatch(ok: bool, exc) — one call per dispatch *attempt* (the circuit
+# breaker's outcome feed; retries and bisection sub-dispatches each count)
+OnDispatch = Callable[[bool, Optional[BaseException]], None]
 
 
 class MicroBatcher:
     """Single-worker dynamic micro-batching loop over one predict callable.
 
     ``predict(x: (bucket, ...)) -> (bucket, ...) per-row outputs``; any
-    exception it raises is delivered to every future of that micro-batch
-    (the worker keeps serving subsequent batches).
+    exception it raises is delivered to the futures of that micro-batch —
+    after retries (transient failures, per ``retry``) and poison isolation
+    (persistent failures: the batch is bisected so only the offending
+    requests fail).  The worker keeps serving subsequent batches no matter
+    what predict does.
 
     ``predict`` may instead return ``(outputs, meta)`` where ``meta`` is a
     dict describing how the batch was served (e.g. the degraded-precision
     flag): the meta dict is stamped onto every future of the batch as
     ``future.batch_meta`` *before* the result is set, and forwarded to the
     ``on_batch`` stats sink.
+
+    ``clock``/``sleep`` default to ``time.perf_counter``/``time.sleep`` and
+    are injectable so deadline and backoff behavior is unit-testable.
     """
 
     def __init__(self, predict: Callable[[np.ndarray], np.ndarray],
                  policy: Optional[BatchingPolicy] = None,
                  on_batch: Optional[OnBatch] = None,
-                 name: str = "endpoint"):
+                 name: str = "endpoint",
+                 retry: Optional[RetryPolicy] = None,
+                 on_dispatch: Optional[OnDispatch] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.predict = predict
         self.policy = policy or BatchingPolicy()
         self.name = name
+        self.retry = retry
         self._on_batch = on_batch
+        self._on_dispatch = on_dispatch
+        self._clock = clock or time.perf_counter
+        self._sleep = sleep or time.sleep
+        # Deterministic per-endpoint jitter stream (stable across restarts).
+        self._rng = random.Random(zlib.crc32(name.encode()) & 0xFFFFFFFF)
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._carry: Optional[_Request] = None  # didn't fit the last batch
         self._warmed = False
         self._closed = False
         self._submit_lock = threading.Lock()  # orders submit() vs close()
+        # Reliability counters (single-writer: the worker thread; readers
+        # tolerate torn reads — they are monotone gauges for stats).
+        self.n_expired = 0        # requests resolved with DeadlineExceeded
+        self.n_retries = 0        # dispatch retries after transient faults
+        self.n_dispatch_failures = 0  # failed dispatch attempts
+        self.n_failed_requests = 0    # requests resolved with an error
         self._worker = threading.Thread(
             target=self._run, name=f"microbatch-{name}", daemon=True)
         self._worker.start()
 
     # -- client side ---------------------------------------------------------
-    def submit(self, x: np.ndarray) -> Future:
+    def submit(self, x: np.ndarray,
+               timeout_s: Optional[float] = None) -> Future:
         """Enqueue rows; the future resolves to the (n,) per-row outputs.
 
         ``x`` is one row (1-D, resolves to a length-1 array) or an (n, ...)
-        row block with ``n <= max_batch``.
+        row block with ``n <= max_batch``.  ``timeout_s`` attaches a
+        deadline: if the request is still queued when it passes, the future
+        resolves with :class:`DeadlineExceeded` instead of being computed.
         """
         x = np.asarray(x)
         if x.ndim == 1:
@@ -181,6 +244,8 @@ class MicroBatcher:
             raise ValueError(
                 f"request of {x.shape[0]} rows exceeds max_batch "
                 f"{self.policy.max_batch}; split it across submissions")
+        now = self._clock()
+        deadline = None if timeout_s is None else now + max(0.0, timeout_s)
         fut: Future = Future()
         # The closed check and the enqueue must be atomic vs close(), or a
         # racing submit could land a request in a dead queue after the final
@@ -188,7 +253,7 @@ class MicroBatcher:
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError(f"MicroBatcher '{self.name}' is closed")
-            self._queue.put(_Request(x, fut, time.perf_counter()))
+            self._queue.put(_Request(x, fut, now, deadline))
         return fut
 
     def depth(self) -> int:
@@ -240,7 +305,7 @@ class MicroBatcher:
                     deadline is None or time.perf_counter() < deadline):
                 self._serve([req])
             else:
-                req.future.set_exception(RuntimeError(
+                _fail(req.future, RuntimeError(
                     f"MicroBatcher '{self.name}' closed"
                     + (" (drain deadline exceeded)" if drain else "")))
 
@@ -251,20 +316,41 @@ class MicroBatcher:
         self.close()
 
     # -- worker side ---------------------------------------------------------
+    def _expired(self, req: _Request, now: Optional[float] = None) -> bool:
+        if req.deadline is None:
+            return False
+        if now is None:
+            now = self._clock()
+        return now >= req.deadline
+
+    def _expire(self, req: _Request) -> None:
+        self.n_expired += 1
+        self.n_failed_requests += 1
+        _fail(req.future, DeadlineExceeded(
+            f"deadline passed after {self._clock() - req.t_enqueue:.3f}s in "
+            f"queue on '{self.name}'"))
+
     def _collect(self) -> Optional[list]:
-        """Block for the first request, then gather until the batch is full
-        or the first request's ``max_wait_ms`` budget runs out.  Returns
-        None on shutdown sentinel."""
+        """Block for the first live request, then gather until the batch is
+        full or the first request's ``max_wait_ms`` budget runs out.
+        Requests already past their deadline are resolved with
+        :class:`DeadlineExceeded` and never join a batch.  Returns None on
+        shutdown sentinel."""
         first = self._carry
         self._carry = None
-        if first is None:
-            first = self._queue.get()
+        while True:
             if first is None:
-                return None
+                first = self._queue.get()
+                if first is None:
+                    return None
+            if not self._expired(first):
+                break
+            self._expire(first)
+            first = None
         batch, rows = [first], first.x.shape[0]
         deadline = first.t_enqueue + self.policy.max_wait_ms / 1e3
         while rows < self.policy.max_batch:
-            wait = deadline - time.perf_counter()
+            wait = deadline - self._clock()
             try:
                 if wait <= 0 or self.policy.eager_when_idle:
                     req = self._queue.get_nowait()
@@ -277,6 +363,9 @@ class MicroBatcher:
             if req is None:  # shutdown: serve what we have, then exit
                 self._queue.put(None)
                 break
+            if self._expired(req):
+                self._expire(req)
+                continue
             if rows + req.x.shape[0] > self.policy.max_batch:
                 self._carry = req  # head-of-line for the next batch
                 break
@@ -294,24 +383,27 @@ class MicroBatcher:
                 pass  # real traffic will surface the error with context
         self._warmed = True
 
-    def _serve(self, batch: list) -> None:
+    def _dispatch_once(self, batch: list) -> None:
+        """One dispatch attempt for ``batch``: pad to the bucket, run
+        predict, record stats, scatter results.  Raises on predict failure
+        (nothing resolved); on success every future in ``batch`` resolves."""
         rows = sum(r.x.shape[0] for r in batch)
         bucket = self.policy.bucket_for(rows)
         x = np.concatenate([r.x for r in batch], axis=0)
         if bucket > rows:
             pad = np.zeros((bucket - rows,) + x.shape[1:], x.dtype)
             x = np.concatenate([x, pad], axis=0)
-        try:
-            out = self.predict(x)
-            meta = None
-            if type(out) is tuple:  # (outputs, batch metadata)
-                out, meta = out
-            y = np.asarray(out)[:rows]
-        except Exception as e:
-            for r in batch:
-                r.future.set_exception(e)
-            return
-        done = time.perf_counter()
+        out = self.predict(x)
+        meta = None
+        if type(out) is tuple:  # (outputs, batch metadata)
+            out, meta = out
+        y = np.asarray(out)[:rows]
+        if self._on_dispatch is not None:
+            try:
+                self._on_dispatch(True, None)
+            except Exception:
+                pass
+        done = self._clock()
         # Stats are recorded BEFORE the futures resolve: a caller woken by
         # its result (e.g. an HTTP client that immediately queries
         # /v1/stats) must already see the batch that served it counted.
@@ -328,14 +420,83 @@ class MicroBatcher:
                 # Stamped before set_result: a waiter woken by the result
                 # can always read the meta of the batch that served it.
                 r.future.batch_meta = meta
-            r.future.set_result(y[off:off + n])
+            try:
+                r.future.set_result(y[off:off + n])
+            except BaseException:
+                pass  # cancelled/raced future; keep scattering the rest
             off += n
+
+    def _try_dispatch(self, batch: list) -> Optional[BaseException]:
+        """Dispatch with bounded transient retry; returns None on success
+        (futures resolved) or the final exception (nothing resolved)."""
+        attempts = self.retry.max_attempts if self.retry is not None else 1
+        last: Optional[BaseException] = None
+        for attempt in range(attempts):
+            try:
+                self._dispatch_once(batch)
+                return None
+            except Exception as e:
+                last = e
+                self.n_dispatch_failures += 1
+                if self._on_dispatch is not None:
+                    try:
+                        self._on_dispatch(False, e)
+                    except Exception:
+                        pass
+                if (self.retry is None or attempt + 1 >= attempts
+                        or not self.retry.retryable(e)):
+                    return last
+                self.n_retries += 1
+                self._sleep(self.retry.backoff_s(attempt, self._rng))
+        return last
+
+    def _serve(self, batch: list, isolated: bool = False) -> None:
+        """Serve ``batch``: expire the stale, dispatch the live, bisect on
+        failure so a poison request fails alone.  Every future in ``batch``
+        is resolved by the time this returns; nothing escapes (the worker
+        loop must survive any predict/concatenate/future misbehavior)."""
+        try:
+            now = self._clock()
+            live = []
+            for r in batch:
+                if self._expired(r, now):
+                    self._expire(r)
+                else:
+                    live.append(r)
+            if not live:
+                return
+            err = self._try_dispatch(live)
+            if err is None:
+                return
+            if len(live) == 1:
+                self.n_failed_requests += 1
+                final = DispatchError(
+                    f"dispatch failed on '{self.name}': {err!r}",
+                    cause=err, isolated=isolated)
+                final.__cause__ = err
+                _fail(live[0].future, final)
+                return
+            # Poison-batch bisection: retry the halves independently so the
+            # offending request(s) fail alone.  Each half re-pads to its own
+            # (warmed) bucket; row independence keeps survivors' results
+            # bit-identical to any other batch composition.
+            mid = len(live) // 2
+            self._serve(live[:mid], isolated=True)
+            self._serve(live[mid:], isolated=True)
+        except BaseException as e:  # belt-and-braces: resolve, don't die
+            for r in batch:
+                if not r.future.done():
+                    self.n_failed_requests += 1
+                    _fail(r.future, DispatchError(
+                        f"scheduler error on '{self.name}': {e!r}", cause=e))
 
     def _run(self) -> None:
         while True:
             batch = self._collect()
             if batch is None:
                 return
+            if not batch:
+                continue  # everything collected had already expired
             if self.policy.warmup and not self._warmed:
                 self._warmup(batch[0].x)
             self._serve(batch)

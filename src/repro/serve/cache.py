@@ -28,10 +28,29 @@ from repro.compile import (CompiledArtifact, Target, compile_from_params,
                            resolve_mesh_strategy, specialize_mesh)
 from repro.compile.artifact import mesh_descriptor
 
+from . import faults
+
 __all__ = ["ArtifactCache"]
 
-# (fingerprint, Target, mesh descriptor or None, QuantPlan descriptor or None)
-CacheKey = Tuple[str, Target, Optional[Tuple], Optional[Tuple]]
+# (fingerprint, Target, mesh descriptor or None, QuantPlan descriptor or None,
+#  ambient kernel-routing token or None)
+CacheKey = Tuple[str, Target, Optional[Tuple], Optional[Tuple], Optional[str]]
+
+
+def _kernel_env_token(target: Target) -> Optional[str]:
+    """Ambient state that changes what a pallas compile produces.
+
+    The megakernel/per-layer routing depends on the ``REPRO_MEGAKERNEL_VMEM``
+    budget override, which lives *outside* the Target — so it must be part
+    of the cache key (the pre-compile analogue of
+    ``CompiledArtifact.kernel_strategy``): two compiles of one model under
+    different budgets must not alias to one cache entry.
+    """
+    if target.backend != "pallas":
+        return None
+    import os
+
+    return os.environ.get("REPRO_MEGAKERNEL_VMEM")
 
 
 class ArtifactCache:
@@ -69,9 +88,12 @@ class ArtifactCache:
         if not artifact.fingerprint:
             raise ValueError("artifact has no fingerprint; compile it through "
                              "repro.compile.compile")
+        return self._insert(artifact.cache_key, artifact)
+
+    def _insert(self, key, artifact: CompiledArtifact) -> CompiledArtifact:
         with self._lock:
-            self._entries[artifact.cache_key] = artifact
-            self._entries.move_to_end(artifact.cache_key)
+            self._entries[key] = artifact
+            self._entries.move_to_end(key)
             while self.capacity is not None and len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
         return artifact
@@ -133,7 +155,8 @@ class ArtifactCache:
             plan = self._plan_for(lowering, params, fingerprint, target,
                                   calibration)
         key: CacheKey = (fingerprint, target, mesh_key,
-                         None if plan is None else plan.descriptor())
+                         None if plan is None else plan.descriptor(),
+                         _kernel_env_token(target))
         with self._lock:
             art = self._entries.get(key)
             if art is not None:
@@ -148,22 +171,32 @@ class ArtifactCache:
             else:
                 owner = False
         if not owner:
+            # fut.result() re-raises the owner's compile failure verbatim —
+            # waiters share the owner's fate for THIS flight only; the slot
+            # is already cleared, so any of them may simply call again.
             art = fut.result()
             with self._lock:
                 self.hits += 1
             return art
+        # Owner path.  Everything through put() runs inside the guard: a
+        # failure anywhere (compile, mesh specialization, the cache insert
+        # itself) must clear the in-flight slot and resolve the waiters with
+        # the exception — never leave them blocked, never cache a broken
+        # entry.  The slot is popped *before* the future resolves so a
+        # waiter that catches the error and retries starts a fresh flight.
         try:
+            faults.fire("cache.compile", name=kind)
             art = compile_from_params(kind, params, target, plan=plan)
             if mesh is not None:
                 art = specialize_mesh(art, mesh, strategy)
+            with self._lock:
+                self.misses += 1
+            self._insert(key, art)
         except BaseException as e:
             with self._lock:
                 self._inflight.pop(key, None)
             fut.set_exception(e)
             raise
-        with self._lock:
-            self.misses += 1
-        self.put(art)
         with self._lock:
             self._inflight.pop(key, None)
         fut.set_result(art)

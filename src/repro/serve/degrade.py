@@ -94,7 +94,8 @@ class PrecisionGovernor:
             return self._degraded
 
     def observe(self, queue_depth: int, p99_ms: Optional[float],
-                now: Optional[float] = None) -> bool:
+                now: Optional[float] = None,
+                overload_hint: bool = False) -> bool:
         """Feed one load observation; returns the (possibly new) state.
 
         ``p99_ms=None`` means the latency signal is *unknown* (the rolling
@@ -104,14 +105,20 @@ class PrecisionGovernor:
         recovery either: an endpoint at peak overload whose requests are
         all waiting must not flap back to full precision just because
         nothing has completed to prove the latency is still bad.
+
+        ``overload_hint`` lets other health machinery vote "this endpoint
+        is struggling" (the circuit breaker passes True while open or
+        half-open): a hint engages degradation like a watermark breach and
+        blocks recovery while asserted, so probes after a trip run on the
+        cheap artifact first.
         """
         if now is None:
             now = time.perf_counter()
         p = self.policy
-        overloaded = queue_depth >= p.queue_high or (
+        overloaded = overload_hint or queue_depth >= p.queue_high or (
             p.p99_high_ms is not None and p99_ms is not None
             and p99_ms >= p.p99_high_ms)
-        recovered = queue_depth <= p.queue_low and (
+        recovered = not overload_hint and queue_depth <= p.queue_low and (
             p.p99_high_ms is None
             or (p99_ms is not None and p99_ms <= p.p99_low_ms))
         with self._lock:

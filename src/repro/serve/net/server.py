@@ -33,6 +33,8 @@ from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
+from .. import faults
+from ..reliability import ServeError
 from ..router import Endpoint
 from ..service import InferenceService
 from .admission import AdmissionController, AdmissionPolicy
@@ -165,6 +167,9 @@ class HttpServer:
 
     # -- routing -------------------------------------------------------------
     async def _route(self, req: Request) -> Tuple[int, bytes]:
+        # Chaos hook: lets a fault plan fail/delay whole requests at the
+        # boundary (an InjectedFault here answers as a typed 500).
+        faults.fire("http.request", name=req.path)
         if req.path.startswith(_PREDICT_PREFIX):
             if req.method != "POST":
                 raise ProtocolError(405, "predict requires POST")
@@ -231,11 +236,26 @@ class HttpServer:
                     headers={"Retry-After":
                              f"{verdict.retry_after_s:.3f}"},
                     keep_alive=req.keep_alive)
-        rows = self._parse_rows(req)
-        futs = [ep.submit(chunk)
-                for chunk in self._chunks(rows, ep.policy.max_batch)]
+        body = req.json()
+        rows = self._parse_rows(req, body)
+        timeout_s = self._deadline_s(req, body, t0)
         try:
+            futs = [ep.submit(chunk, timeout_s=timeout_s)
+                    for chunk in self._chunks(rows, ep.policy.max_batch)]
             parts = [await asyncio.wrap_future(f) for f in futs]
+        except ServeError as e:
+            # Structured serving failure (deadline, open circuit, isolated
+            # dispatch error): a typed JSON response with a stable machine
+            # code, Retry-After when the error knows its horizon.
+            latency = time.perf_counter() - t0
+            self.slo.record(name, latency)
+            headers = None
+            if e.retry_after_s is not None:
+                headers = {"Retry-After": f"{e.retry_after_s:.3f}"}
+            return e.status, response_bytes(
+                e.status, {"error": str(e), "code": e.code,
+                           "endpoint": name},
+                headers=headers, keep_alive=req.keep_alive)
         except RuntimeError as e:  # scheduler closed mid-drain
             raise ProtocolError(503, str(e))
         preds = np.concatenate(parts, axis=0)
@@ -254,8 +274,29 @@ class HttpServer:
         }, keep_alive=req.keep_alive)
 
     @staticmethod
-    def _parse_rows(req: Request) -> np.ndarray:
-        body = req.json()
+    def _deadline_s(req: Request, body, t0: float) -> Optional[float]:
+        """Per-request deadline: ``deadline_ms`` in the JSON body, or an
+        ``x-deadline-ms`` header (body wins).  Returns the remaining budget
+        in seconds relative to ``t0`` (request arrival), or None."""
+        raw = None
+        if isinstance(body, dict) and body.get("deadline_ms") is not None:
+            raw = body["deadline_ms"]
+        elif req.headers.get("x-deadline-ms"):
+            raw = req.headers["x-deadline-ms"]
+        if raw is None:
+            return None
+        try:
+            deadline_ms = float(raw)
+        except (TypeError, ValueError):
+            raise ProtocolError(400, f"deadline_ms is not a number: {raw!r}")
+        if deadline_ms <= 0:
+            raise ProtocolError(400, "deadline_ms must be > 0")
+        return max(0.0, deadline_ms / 1e3 - (time.perf_counter() - t0))
+
+    @staticmethod
+    def _parse_rows(req: Request, body=None) -> np.ndarray:
+        if body is None:
+            body = req.json()
         if not isinstance(body, dict) or "rows" not in body:
             raise ProtocolError(400, 'body must be {"rows": [[...], ...]}')
         try:

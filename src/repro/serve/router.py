@@ -30,8 +30,11 @@ import numpy as np
 
 from repro.compile.artifact import CompiledArtifact
 
+from . import faults
 from .batching import BatchingPolicy, MicroBatcher
 from .degrade import DegradationPolicy, PrecisionGovernor
+from .reliability import (BreakerPolicy, CircuitBreaker, CircuitOpenError,
+                          RetryPolicy)
 
 __all__ = ["EndpointStats", "Endpoint", "ModelRouter"]
 
@@ -137,12 +140,15 @@ class Endpoint:
     """
 
     def __init__(self, name: str, artifact: CompiledArtifact,
-                 policy: Optional[BatchingPolicy] = None):
+                 policy: Optional[BatchingPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None):
         self.name = name
         self.artifact = artifact
         self.stats = EndpointStats()
         self.fallback: Optional[CompiledArtifact] = None
         self.governor: Optional[PrecisionGovernor] = None
+        self.breaker = breaker
         # Never build buckets the artifact would reject (fixed batch policy),
         # and make the bucket ladder replica-aware for mesh-specialized
         # artifacts (each bucket = replicas x a pow2 per-device shard; the
@@ -156,7 +162,8 @@ class Endpoint:
         if artifact.kind != "lm":
             self.batcher = MicroBatcher(self._dispatch, self.policy,
                                         on_batch=self.stats.record_batch,
-                                        name=name)
+                                        name=name, retry=retry,
+                                        on_dispatch=self._on_dispatch)
 
     # -- load-adaptive precision ---------------------------------------------
     def set_fallback(self, artifact: CompiledArtifact,
@@ -181,9 +188,23 @@ class Endpoint:
         self.fallback = artifact
         self.governor = PrecisionGovernor(policy)
 
+    def set_breaker(self, policy: Optional[BreakerPolicy] = None) -> None:
+        """Arm (or replace) the endpoint's circuit breaker."""
+        self.breaker = CircuitBreaker(policy)
+
     @property
     def degraded(self) -> bool:
         return self.governor is not None and self.governor.degraded
+
+    def _on_dispatch(self, ok: bool, exc) -> None:
+        """Dispatch-outcome feed from the scheduler (one call per attempt,
+        including retries and bisection sub-dispatches)."""
+        if self.breaker is None:
+            return
+        if ok:
+            self.breaker.record_success()
+        else:
+            self.breaker.record_failure()
 
     def _dispatch(self, x: np.ndarray):
         """The batcher's predict: resolve which artifact serves this batch.
@@ -193,21 +214,31 @@ class Endpoint:
         the batch, so callers (the HTTP front end) can report whether their
         prediction came from the degraded artifact.
         """
+        faults.fire("endpoint.dispatch", name=self.name, batch=x)
         if self.governor is None:
             return self.artifact.predict(x)
+        # A tripped breaker is an overload vote: serve probes (and the
+        # post-trip backlog) on the cheap artifact until health returns.
+        hint = (self.breaker is not None
+                and self.breaker.state != CircuitBreaker.CLOSED)
         degraded = self.governor.observe(
             self.batcher.depth() if self.batcher is not None else 0,
-            self.stats.rolling_p99_ms())
+            self.stats.rolling_p99_ms(), overload_hint=hint)
         art = self.fallback if degraded else self.artifact
         return art.predict(x), {"degraded": degraded,
                                 "number_format": art.target.number_format}
 
     # -- classifier surface --------------------------------------------------
-    def submit(self, x: np.ndarray) -> Future:
+    def submit(self, x: np.ndarray,
+               timeout_s: Optional[float] = None) -> Future:
         if self.batcher is None:
             raise TypeError(f"endpoint '{self.name}' hosts an LM artifact; "
                             f"use generate()")
-        return self.batcher.submit(x)
+        if self.breaker is not None and not self.breaker.allow():
+            raise CircuitOpenError(
+                f"endpoint '{self.name}' circuit is open",
+                retry_after_s=self.breaker.retry_after_s())
+        return self.batcher.submit(x, timeout_s=timeout_s)
 
     def predict(self, x: np.ndarray) -> np.ndarray:
         """Sync convenience: rows larger than one micro-batch are split
@@ -231,6 +262,27 @@ class Endpoint:
         self.stats.record_batch(1, n * n_tokens, n * n_tokens, [dt])
         return seqs
 
+    def snapshot(self) -> Dict[str, object]:
+        """Full stats surface: serving stats + reliability counters +
+        breaker/governor/replica-health state (what ``/v1/stats`` shows)."""
+        snap: Dict[str, object] = self.stats.snapshot()
+        if self.batcher is not None:
+            # Flat scalars (every plain-stats consumer keeps iterating
+            # numbers); breaker/governor/replica state stay nested because
+            # they only appear when armed.
+            snap["expired_requests"] = self.batcher.n_expired
+            snap["dispatch_retries"] = self.batcher.n_retries
+            snap["dispatch_failures"] = self.batcher.n_dispatch_failures
+            snap["failed_requests"] = self.batcher.n_failed_requests
+        if self.breaker is not None:
+            snap["breaker"] = self.breaker.snapshot()
+        if self.governor is not None:
+            snap["governor"] = self.governor.snapshot()
+        health = getattr(self.artifact, "replica_health", None)
+        if health is not None:
+            snap["replica_health"] = health.snapshot()
+        return snap
+
     def close(self, timeout: Optional[float] = None) -> None:
         if self.batcher is not None:
             self.batcher.close(timeout=timeout)
@@ -244,11 +296,14 @@ class ModelRouter:
         self._lock = threading.Lock()
 
     def register(self, name: str, artifact: CompiledArtifact,
-                 policy: Optional[BatchingPolicy] = None) -> Endpoint:
+                 policy: Optional[BatchingPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None) -> Endpoint:
         with self._lock:
             if name in self._endpoints:
                 raise KeyError(f"endpoint '{name}' already registered")
-            ep = Endpoint(name, artifact, policy)
+            ep = Endpoint(name, artifact, policy, retry=retry,
+                          breaker=breaker)
             self._endpoints[name] = ep
             return ep
 
@@ -271,8 +326,9 @@ class ModelRouter:
         with self._lock:
             return sorted(self._endpoints)
 
-    def submit(self, name: str, x: np.ndarray) -> Future:
-        return self[name].submit(x)
+    def submit(self, name: str, x: np.ndarray,
+               timeout_s: Optional[float] = None) -> Future:
+        return self[name].submit(x, timeout_s=timeout_s)
 
     def predict(self, name: str, x: np.ndarray) -> np.ndarray:
         return self[name].predict(x)
@@ -280,7 +336,7 @@ class ModelRouter:
     def stats(self) -> Dict[str, Dict[str, float]]:
         with self._lock:
             eps = sorted(self._endpoints.items())
-        return {name: ep.stats.snapshot() for name, ep in eps}
+        return {name: ep.snapshot() for name, ep in eps}
 
     def close(self, timeout: Optional[float] = None) -> None:
         """Close every endpoint; ``timeout`` bounds the *total* drain time

@@ -32,9 +32,11 @@ import numpy as np
 
 from repro.compile import CompiledArtifact, Target
 
+from . import faults
 from .batching import BatchingPolicy
 from .cache import ArtifactCache
 from .degrade import DegradationPolicy
+from .reliability import BreakerPolicy, CircuitBreaker, RetryPolicy
 from .router import Endpoint, ModelRouter
 
 __all__ = ["InferenceService"]
@@ -51,7 +53,9 @@ class InferenceService:
                  artifact: Optional[CompiledArtifact] = None,
                  policy: Optional[BatchingPolicy] = None,
                  mesh: Any = None, mesh_strategy: str = "auto",
-                 calibration: Any = None) -> Endpoint:
+                 calibration: Any = None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None) -> Endpoint:
         """Host ``model`` compiled for ``target`` (deduped through the
         artifact cache), or a pre-compiled ``artifact``, under ``name``.
 
@@ -66,6 +70,10 @@ class InferenceService:
         uses a calibrated number format (``auto16``/``auto8``/``auto32``):
         the compile pipeline derives the per-tensor QuantPlan from it, and
         the cache keys on the resulting plan.
+
+        ``retry`` arms bounded transient-failure retry in the endpoint's
+        scheduler; ``breaker`` attaches a circuit breaker (or use
+        :meth:`enable_breaker` after registration).
         """
         if (artifact is None) == (model is None):
             raise TypeError("pass either model (+ target) or artifact")
@@ -89,7 +97,8 @@ class InferenceService:
                         f"{want}; pass the unspecialized artifact (or drop "
                         f"the mesh argument to host it as-is)")
             art = self.cache.put(artifact) if artifact.fingerprint else artifact
-        return self.router.register(name, art, policy)
+        return self.router.register(name, art, policy, retry=retry,
+                                    breaker=breaker)
 
     def enable_degradation(self, name: str, model: Any = None,
                            target: Optional[Target] = None,
@@ -113,6 +122,17 @@ class InferenceService:
             artifact = self.cache.get_or_compile(model, target or Target(),
                                                  calibration=calibration)
         ep.set_fallback(artifact, policy)
+        return ep
+
+    def enable_breaker(self, name: str,
+                       policy: Optional[BreakerPolicy] = None) -> Endpoint:
+        """Arm endpoint ``name`` with a circuit breaker: after repeated
+        dispatch failures (``policy`` triggers) new submissions fail fast
+        with :class:`~repro.serve.reliability.CircuitOpenError` until
+        half-open probes succeed.  Breaker state shows in :meth:`stats`.
+        """
+        ep = self.router[name]
+        ep.set_breaker(policy)
         return ep
 
     def unregister(self, name: str) -> None:
@@ -153,8 +173,9 @@ class InferenceService:
         self.close()
 
     # -- inference -----------------------------------------------------------
-    def submit(self, name: str, x: np.ndarray) -> Future:
-        return self.router.submit(name, x)
+    def submit(self, name: str, x: np.ndarray,
+               timeout_s: Optional[float] = None) -> Future:
+        return self.router.submit(name, x, timeout_s=timeout_s)
 
     def predict(self, name: str, x: np.ndarray) -> np.ndarray:
         return self.router.predict(name, x)
@@ -167,4 +188,7 @@ class InferenceService:
     def stats(self) -> Dict[str, Dict[str, float]]:
         out = self.router.stats()
         out["_cache"] = self.cache.stats()
+        inj = faults.current()
+        if inj is not None:
+            out["_faults"] = inj.stats()
         return out

@@ -1,10 +1,11 @@
 """Sharding rules: logical axes -> PartitionSpec with divisibility guards,
 plus the serving-mesh helpers behind replica-sharded classifier endpoints."""
 
+from .health import ReplicaHealthPolicy, ReplicaHealthTracker
 from .rules import (Rules, batch_axes, batch_spec, dp_size, is_host_emulated,
                     make_serving_mesh, model_axis, replica_bucket, shard,
                     spec_for)
 
 __all__ = ["batch_axes", "model_axis", "spec_for", "shard", "Rules",
            "make_serving_mesh", "dp_size", "batch_spec", "replica_bucket",
-           "is_host_emulated"]
+           "is_host_emulated", "ReplicaHealthPolicy", "ReplicaHealthTracker"]

@@ -175,3 +175,35 @@ def test_concurrent_same_key_tuning_is_consistent(isolated_tune):
     with open(isolated_tune) as f:
         raw = json.load(f)
     assert len(raw) == 1
+
+
+def test_insert_failure_resolves_waiters_and_clears_slot(blobs_model,
+                                                         monkeypatch):
+    """Regression: a failure *after* the compile succeeds (mesh
+    specialization, the cache insert itself) used to leave the in-flight
+    future unresolved — every waiter blocked forever and the key was
+    wedged.  The whole owner path now runs inside one guard: waiters get
+    the exception, the slot clears, and a retry compiles fresh."""
+    cache = ArtifactCache()
+    boom = [True]
+    real_insert = ArtifactCache._insert
+
+    def flaky_insert(self, key, artifact):
+        if boom[0]:
+            boom[0] = False
+            time.sleep(0.05)  # hold the window so the waiters overlap
+            raise RuntimeError("cache backend down")
+        return real_insert(self, key, artifact)
+
+    monkeypatch.setattr(ArtifactCache, "_insert", flaky_insert)
+    target = Target(number_format="fxp16")
+    results, errors = _race(
+        4, lambda i: cache.get_or_compile(blobs_model, target))
+    assert all(r is None for r in results)
+    assert all(isinstance(e, RuntimeError) for e in errors), (
+        "owner AND waiters must all see the post-compile failure")
+    # the key is not wedged: the next call compiles and caches normally
+    art = cache.get_or_compile(blobs_model, target)
+    assert art.fingerprint
+    assert cache.stats()["entries"] == 1
+    assert cache.get_or_compile(blobs_model, target) is art

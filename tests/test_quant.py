@@ -225,26 +225,35 @@ def test_plan_archive_roundtrip(tmp_path, trained, data, kind):
     assert s1 == s2
 
 
-def test_archive_version_stamps_by_content(tmp_path, trained, data):
-    """Plan-less archives stay v1 (readable by pre-quant releases); only
-    archives that actually carry a QuantPlan advance to v2."""
+def test_archive_version_stamps_v3_with_integrity(tmp_path, trained, data):
+    """Every archive now stamps v3 and carries a per-member sha256 map —
+    integrity checking protects plan-less and calibrated archives alike
+    (a bit-rotted tree is as wrong as a bit-rotted plan)."""
+    import hashlib
+
     import msgpack
 
     from repro.train.checkpoint import decompress_bytes
 
-    def version_of(path):
+    def payload_of(path):
         with open(path, "rb") as f:
             return msgpack.unpackb(decompress_bytes(f.read()),
-                                   raw=False, strict_map_key=False)["version"]
+                                   raw=False, strict_map_key=False)
 
     xtr, _, _, _, _ = data
-    fixed_path = os.path.join(tmp_path, "fixed.embml")
-    compile(trained["tree"], Target(number_format="fxp16")).save(fixed_path)
-    assert version_of(fixed_path) == 1
-    auto_path = os.path.join(tmp_path, "auto.embml")
-    compile(trained["tree"], Target(number_format="auto16"),
-            calibration=xtr).save(auto_path)
-    assert version_of(auto_path) == 2
+    for name, target, calibration in (
+            ("fixed", Target(number_format="fxp16"), None),
+            ("auto", Target(number_format="auto16"), xtr)):
+        path = os.path.join(tmp_path, f"{name}.embml")
+        compile(trained["tree"], target, calibration=calibration).save(path)
+        payload = payload_of(path)
+        assert payload["version"] == 3
+        digests = payload["integrity"]["members"]
+        assert payload["integrity"]["algo"] == "sha256"
+        assert set(digests) == set(payload["members"]) >= {
+            "kind", "target", "params", "quant_plan"}
+        for member, blob in payload["members"].items():
+            assert hashlib.sha256(blob).hexdigest() == digests[member]
 
 
 def test_artifact_cache_keys_on_plan(trained, data):

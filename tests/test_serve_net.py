@@ -702,3 +702,182 @@ def test_serve_cli_http_smoke(capsys):
     assert not th.is_alive()
     out = capsys.readouterr().out
     assert "degradation armed: auto16 -> auto8" in out
+
+
+# ---------------------------------------------------------------------------
+# HTTP robustness: malformed, truncated, oversized, disconnecting clients
+# ---------------------------------------------------------------------------
+async def _send_raw(server, raw, close_early=False, timeout=5.0):
+    """Write raw bytes to the server; return the response bytes (or None
+    when ``close_early`` drops the connection mid-request)."""
+    reader, writer = await asyncio.open_connection(server.host, server.port)
+    writer.write(raw)
+    await writer.drain()
+    if close_early:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+        return None
+    try:
+        data = await asyncio.wait_for(reader.read(65536), timeout)
+    finally:
+        writer.close()
+    return data
+
+
+def test_http_fuzz_malformed_inputs_answer_typed_errors(golden_tree):
+    """Garbage on the wire gets a typed 4xx/5xx — never a hang, never a
+    dead server."""
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+
+    async def scenario(server):
+        cases = [
+            # body is not JSON
+            (b"POST /v1/predict/tree HTTP/1.1\r\n"
+             b"Content-Length: 9\r\n\r\nnot json!", 400),
+            # binary garbage where a request line should be
+            (b"\x00\xff\xfe garbage\r\n\r\n", 400),
+            # unparseable Content-Length
+            (b"POST /v1/predict/tree HTTP/1.1\r\n"
+             b"Content-Length: nope\r\n\r\n", 400),
+            # Content-Length far past the body cap: refused before reading
+            (b"POST /v1/predict/tree HTTP/1.1\r\n"
+             b"Content-Length: 99999999\r\n\r\n{}", 413),
+            # unimplemented framing
+            (b"POST /v1/predict/tree HTTP/1.1\r\n"
+             b"Transfer-Encoding: chunked\r\n\r\n", 501),
+            # JSON that parses but is the wrong shape
+            (b'POST /v1/predict/tree HTTP/1.1\r\n'
+             b'Content-Length: 17\r\n\r\n{"rows": "nope!"}', 400),
+        ]
+        for raw, want in cases:
+            data = await _send_raw(server, raw)
+            assert data and data.startswith(b"HTTP/1.1"), raw[:30]
+            status = int(data.split()[1])
+            assert status == want, (raw[:30], status)
+        # after all that abuse the server still serves real traffic
+        status, _, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree", {"rows": [xte[0].tolist()]})
+        assert status == 200 and len(body["predictions"]) == 1
+
+    _run_with_server(svc, scenario)
+    svc.close()
+
+
+def test_http_fuzz_disconnecting_clients_leave_server_healthy(golden_tree):
+    """Clients that vanish mid-request (truncated bodies, half-written
+    request lines) must not wedge a handler or take the listener down."""
+    art16, _, _, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+
+    async def scenario(server):
+        # truncated body: Content-Length promises 50, client sends 1, leaves
+        await _send_raw(server, b"POST /v1/predict/tree HTTP/1.1\r\n"
+                                b"Content-Length: 50\r\n\r\n{",
+                        close_early=True)
+        # disconnect mid-request-line
+        await _send_raw(server, b"POST /v1/pre", close_early=True)
+        # disconnect mid-header
+        await _send_raw(server, b"GET /v1/health HTTP/1.1\r\nHost:",
+                        close_early=True)
+        # a zero-byte connection (open, immediately close)
+        await _send_raw(server, b"", close_early=True)
+        await asyncio.sleep(0.05)  # let the handlers observe the EOFs
+        status, _, body = await _roundtrip(server, "GET", "/v1/health")
+        assert status == 200 and body["status"] == "ok"
+
+    _run_with_server(svc, scenario)
+    svc.close()
+
+
+def test_http_deadline_maps_to_504(golden_tree):
+    """A request whose ``deadline_ms`` passes while it queues answers a
+    typed 504 (code deadline_exceeded) and is never dispatched; requests
+    without deadlines are unaffected."""
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=_slowed(art16, 0.05),
+                 policy=BatchingPolicy(max_batch=4, warmup=False,
+                                       max_wait_ms=0.0))
+
+    async def scenario(server):
+        row = {"rows": [xte[0].tolist()]}
+        # back the queue up so a deadline-carrying request provably waits
+        flood = [asyncio.ensure_future(
+            _roundtrip(server, "POST", "/v1/predict/tree", row))
+            for _ in range(16)]
+        await asyncio.sleep(0.05)
+        status, _, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree",
+            {"rows": [xte[0].tolist()], "deadline_ms": 1})
+        assert status == 504, body
+        assert body["code"] == "deadline_exceeded"
+        for s, _, b in await asyncio.gather(*flood):
+            assert s == 200, b  # batchmates without deadlines all served
+        # malformed deadline is a 400, not a silent default
+        status, _, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree",
+            {"rows": [xte[0].tolist()], "deadline_ms": "soon"})
+        assert status == 400
+        status, _, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree",
+            {"rows": [xte[0].tolist()], "deadline_ms": -5})
+        assert status == 400
+
+    _run_with_server(svc, scenario)
+    svc.close(timeout=30.0)
+
+
+def test_http_circuit_open_maps_to_503(golden_tree):
+    from repro.serve import BreakerPolicy, CircuitBreaker
+
+    art16, _, xte, _ = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16,
+                 breaker=CircuitBreaker(BreakerPolicy(
+                     consecutive_failures=1, open_s=60.0)))
+    svc.endpoint("tree").breaker.record_failure()  # trips immediately
+
+    async def scenario(server):
+        status, headers, body = await _roundtrip(
+            server, "POST", "/v1/predict/tree", {"rows": [xte[0].tolist()]})
+        assert status == 503, body
+        assert body["code"] == "circuit_open"
+        assert float(headers["retry-after"]) > 0
+        status, _, stats = await _roundtrip(server, "GET", "/v1/stats")
+        assert stats["endpoints"]["tree"]["breaker"]["state"] == "open"
+
+    _run_with_server(svc, scenario)
+    svc.close()
+
+
+def test_http_injected_fault_answers_500_and_recovers(golden_tree):
+    """The http.request chaos site: an injected fault at the boundary is a
+    typed 500 for that request; the next request is served normally."""
+    from repro.serve import FaultPlan, FaultRule
+    from repro.serve import faults as faults_mod
+
+    art16, _, xte, goldens = golden_tree
+    svc = InferenceService()
+    svc.register("tree", artifact=art16)
+    plan = FaultPlan([FaultRule(site="http.request", match="/v1/predict",
+                                count=1)])
+
+    async def scenario(server):
+        row = {"rows": [xte[0].tolist()]}
+        status, _, body = await _roundtrip(server, "POST",
+                                           "/v1/predict/tree", row)
+        assert status == 500 and "injected fault" in body["error"]
+        status, _, body = await _roundtrip(server, "POST",
+                                           "/v1/predict/tree", row)
+        assert status == 200
+        assert body["predictions"] == [int(goldens["auto16"][0])]
+
+    with faults_mod.inject(plan):
+        _run_with_server(svc, scenario)
+    svc.close()

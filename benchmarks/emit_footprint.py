@@ -1,0 +1,121 @@
+"""Measured C flash footprint per lowering x number format (Tables IV-VI).
+
+The paper reports the memory cost of each exported classifier as compiled
+for the target MCU.  This benchmark compiles the generated freestanding C
+for every quantized lowering at every canonical number format with the host
+toolchain and reports the *measured* section sizes — ``flash = .text +
+.rodata + .data`` (what occupies program memory), ``bss`` (RAM) — next to
+the analytic ``model_bytes`` estimate, plus a golden replay check so a row
+is only reported for C that provably computes the right answers.
+
+CLI (``--smoke`` is the CI acceptance gate):
+
+  PYTHONPATH=src python benchmarks/emit_footprint.py --smoke --out BENCH_emit.json
+
+Gate: every quantized lowering x format compiles under -Werror, replays its
+golden vector byte-identically, and .rodata covers model_bytes wherever the
+compiler cannot constant-fold the weights away.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+KINDS = ("tree", "logistic", "mlp", "svm-linear", "svm-poly", "svm-rbf")
+SMOKE_KINDS = ("tree", "logistic", "mlp", "svm-rbf")
+FORMATS = ("fxp32", "fxp16", "auto16", "auto8")
+SMOKE_FORMATS = ("fxp16", "auto8")
+
+
+def run(smoke: bool = False) -> Dict:
+    import os
+    import sys
+
+    from repro import emit as E
+
+    # The golden fixtures double as the bench inputs (tests/ is not a
+    # package on the default path when run via benchmarks.run).
+    tests_dir = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tests")
+    if tests_dir not in sys.path:
+        sys.path.insert(0, tests_dir)
+    from golden import regenerate as G
+
+    cc = E.find_cc()
+    if cc is None:
+        return {"rows": [], "cc": None, "skipped": "no C compiler on PATH"}
+
+    xtr, ytr, xte, c = G.make_dataset()
+    classifiers = G.train_classifiers(xtr, ytr, c)
+    goldens = {}
+    for kind in KINDS:
+        with np.load(G.golden_path(kind)) as z:
+            goldens[kind] = {tag: z[tag] for tag in z.files}
+
+    kinds = SMOKE_KINDS if smoke else KINDS
+    formats = SMOKE_FORMATS if smoke else FORMATS
+    rows: List[Dict] = []
+    for kind in kinds:
+        for tag in formats:
+            art = G.compile_for_tag(classifiers[kind], tag, "ref", xtr)
+            spec = E.spec_of(art)
+            src = E.emit_c(spec, kind=kind, target_name=tag,
+                           fingerprint=art.fingerprint)
+            with E.CRunner(src, E.input_format(spec), cc=cc) as runner:
+                sizes = runner.sizes()
+                labels, _ = runner.predict(xte)
+            golden_ok = bool(np.array_equal(labels, goldens[kind][tag]))
+            rows.append({
+                "kind": kind,
+                "format": tag,
+                "model_bytes": int(art.flash_bytes),
+                "flash_bytes": sizes["flash"],
+                "text": sizes["text"],
+                "rodata": sizes["rodata"],
+                "data": sizes["data"],
+                "bss": sizes["bss"],
+                "c_source_bytes": len(src.encode()),
+                "golden_match": golden_ok,
+            })
+            print(f"emit_footprint,{kind}/{tag},flash={sizes['flash']}B,"
+                  f"rodata={sizes['rodata']}B,golden={'ok' if golden_ok else 'FAIL'}")
+    return {"rows": rows, "cc": cc, "smoke": smoke}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="subset of kinds/formats + enforce the gates")
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    args = ap.parse_args(argv)
+    result = run(smoke=args.smoke)
+    text = json.dumps(result, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    if args.smoke and result.get("rows"):
+        bad = [r for r in result["rows"] if not r["golden_match"]]
+        if bad:
+            raise SystemExit(
+                f"ACCEPTANCE FAIL: compiled C diverged from goldens: "
+                f"{[(r['kind'], r['format']) for r in bad]}")
+        # The weights must really be in the object.  Kernel SVMs are
+        # excluded: a coarse format can quantize gamma/coef0 to 0, folding
+        # the kernel row to a constant and letting the compiler legitimately
+        # dead-strip the support vectors.
+        solid = [r for r in result["rows"]
+                 if r["kind"] in ("tree", "logistic", "mlp", "svm-linear")]
+        thin = [r for r in solid if r["rodata"] < r["model_bytes"]]
+        if thin:
+            raise SystemExit(
+                f"ACCEPTANCE FAIL: .rodata smaller than the modeled "
+                f"parameters: {[(r['kind'], r['format']) for r in thin]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,10 +25,10 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, help="comma-separated module list")
     args = ap.parse_args(argv)
 
-    from . import (compile_backends, fig3_4_time, fig5_6_memory,
-                   fig7_8_modifications, kernels_bench, lm_quantized,
-                   megakernel, quant_accuracy, roofline_table, serve_chaos,
-                   serve_http, serve_sharded, serve_throughput,
+    from . import (compile_backends, emit_footprint, fig3_4_time,
+                   fig5_6_memory, fig7_8_modifications, kernels_bench,
+                   lm_quantized, megakernel, quant_accuracy, roofline_table,
+                   serve_chaos, serve_http, serve_sharded, serve_throughput,
                    table_v_accuracy, table_vi_vii_sigmoid, table_viii_tools)
     from .common import RESULTS_DIR
 
@@ -51,6 +51,7 @@ def main(argv=None) -> None:
         "serve_http": lambda: serve_http.run(smoke=args.quick)["rows"],
         "chaos": lambda: serve_chaos.run(smoke=args.quick)["rows"],
         "quant": lambda: quant_accuracy.run(smoke=args.quick),
+        "emit_footprint": lambda: emit_footprint.run(smoke=args.quick)["rows"],
     }
     if args.only:
         keep = set(args.only.split(","))

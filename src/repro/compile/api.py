@@ -73,11 +73,17 @@ def _subtract_phantom_rows(stats: FxpStats, k: int, pad_row_cache: list,
                     np.asarray(stats.total) - k * per.total)
 
 
-def _specialize(program: Lowered, target: Target) -> Callable:
+def _specialize(program: Lowered, target: Target, kind: str = "") -> Callable:
     """Stage 4: backend jit + batch policy.
 
     * ``ref`` runs the program eagerly (op-by-op oracle semantics, easiest to
       debug); ``xla``/``pallas`` wrap the whole program in ``jax.jit``.
+    * ``emit`` serves through the generated C: the lowering's ``emit_spec``
+      is templated into a freestanding translation unit, built once with the
+      system ``cc`` on first predict (lazy — emission itself needs no
+      toolchain), inputs are quantized host-side with the exact traced
+      rounding, and the compiled binary produces the labels.  Stats cover
+      input quantization only (the C program has no stats plumbing).
     * ``fixed`` batch policy pads every call up to ``batch_size`` (one traced
       shape, the embedded static-allocation posture) and rejects larger
       batches; padded rows are sliced off the output.
@@ -85,6 +91,29 @@ def _specialize(program: Lowered, target: Target) -> Callable:
     predict = program.predict
     if target.backend in ("xla", "pallas") and program.jittable:
         predict = jax.jit(predict)
+    elif target.backend == "emit":
+        from repro import emit as emit_mod
+
+        spec = (program.extras or {}).get("emit_spec")
+        if spec is None:
+            if not target.is_quantized:
+                raise TypeError(
+                    "the 'emit' backend serves quantized targets only — "
+                    "float models have no fixed-point program to emit "
+                    "(use number_format='fxp*'/'auto*')")
+            raise TypeError(
+                f"the '{kind or 'requested'}' lowering does not support the "
+                f"'emit' backend (no emit_spec); C emission covers the "
+                f"classifier lowerings (tree/logistic/mlp/svm-*)")
+        runner_cell: list = []
+
+        def predict(x):
+            if not runner_cell:
+                src = emit_mod.emit_c(spec, kind=kind,
+                                      target_name=target.number_format)
+                runner_cell.append(emit_mod.CRunner(
+                    src, emit_mod.input_format(spec)))
+            return runner_cell[0].predict(x)
 
     if target.batch_policy == "fixed":
         inner = predict
@@ -136,7 +165,7 @@ def compile_from_params(kind: str, params: Any, target: Target,
         plan = None  # fixed/float targets ignore stray plans
     qparams = lowering.quantize(params, target, plan)
     program = lowering.lower(qparams, target, plan)
-    predict = _specialize(program, target)
+    predict = _specialize(program, target, kind=kind)
     return CompiledArtifact(kind=kind, target=target, params=params,
                             _predict=predict, flash_bytes=program.flash_bytes,
                             sram_bytes=program.sram_bytes,
@@ -187,6 +216,12 @@ def specialize_mesh(artifact: CompiledArtifact, mesh: Any,
         raise TypeError(
             "specialize_mesh supports classifier artifacts only; LM decode "
             "shards via the model-parallel LM stack, not batch replicas")
+    if artifact.target.backend == "emit":
+        raise TypeError(
+            "specialize_mesh does not apply to the 'emit' backend: the C "
+            "binary serves on the host, not a device mesh (spmd would "
+            "silently fall back to the traced program) — specialize a "
+            "ref/xla/pallas artifact instead")
     if artifact.mesh is not None:
         raise ValueError(
             f"artifact is already specialized for mesh {artifact.mesh_key}; "

@@ -226,6 +226,21 @@ class CompiledArtifact:
             self.predict(np.zeros((int(b),) + row.shape, row.dtype))
         return self
 
+    # -- C emission ----------------------------------------------------------
+    def emit_c(self) -> str:
+        """The freestanding C99 translation unit for this artifact.
+
+        Available for any quantized classifier artifact regardless of its
+        execution backend (the emit spec rides on the lowered program);
+        raises :class:`repro.emit.EmitError` for float targets and the
+        ``lm`` lowering.  Emission is pure templating — no C compiler is
+        needed (that's only for :meth:`report`'s measured sizes and the
+        ``emit`` backend's replay harness).
+        """
+        from repro import emit as emit_mod
+
+        return emit_mod.emit_artifact_c(self)
+
     # -- memory model --------------------------------------------------------
     def memory_report(self) -> Dict[str, int]:
         return {"flash": self.flash_bytes, "sram": self.sram_bytes,
@@ -236,17 +251,28 @@ class CompiledArtifact:
         return self.memory_report()
 
     def report(self, x: Optional[np.ndarray] = None,
-               y: Optional[np.ndarray] = None) -> Dict[str, Any]:
+               y: Optional[np.ndarray] = None,
+               measure_c: Any = "auto") -> Dict[str, Any]:
         """Paper-style resource report for this artifact.
 
         Always includes the memory model and the per-tensor number formats
         (the QuantPlan table for calibrated targets, the single global
-        format otherwise).  Given an evaluation batch ``x``, adds the
-        observed saturation/underflow counts (paper §V-A); given labels
-        ``y`` as well, adds accuracy and the delta vs a float recompile of
-        the same parameters (paper Tables V-VII) — that comparison needs
-        the retained parameter tree, so it is skipped after
+        format otherwise).  ``model_bytes`` is computed from the *actual
+        quantized tensors* (per-tensor container widths), not a float-size
+        estimate.  Given an evaluation batch ``x``, adds the observed
+        saturation/underflow counts (paper §V-A); given labels ``y`` as
+        well, adds accuracy and the delta vs a float recompile of the same
+        parameters (paper Tables V-VII) — that comparison needs the
+        retained parameter tree, so it is skipped after
         :meth:`discard_params`.
+
+        ``measure_c`` controls the *measured* footprint (paper Tables
+        IV-VI): compile the generated C freestanding and report its real
+        ``.text``/``.rodata``/``.data`` section sizes as ``c_sections``
+        (with ``model_bytes_measured = flash``).  ``"auto"`` measures for
+        ``emit``-backend artifacts when a toolchain exists and silently
+        skips otherwise; ``True`` forces measurement (raising without a C
+        compiler or for un-emittable artifacts); ``False`` disables it.
         """
         rep: Dict[str, Any] = {
             "kind": self.kind,
@@ -255,6 +281,19 @@ class CompiledArtifact:
             "model_bytes": self.flash_bytes,
             "sram_bytes": self.sram_bytes,
         }
+        want_measure = (measure_c is True
+                        or (measure_c == "auto"
+                            and self.target.backend == "emit"))
+        if want_measure:
+            try:
+                from repro import emit as emit_mod
+
+                rep["c_sections"] = emit_mod.measure_artifact(self)
+                rep["model_bytes_measured"] = rep["c_sections"]["flash"]
+            except Exception:
+                if measure_c is True:
+                    raise
+                # auto mode: no toolchain / un-emittable — estimate only.
         if self.quant_plan is not None:
             rep["formats"] = {
                 path: repr(self.quant_plan.fmt(path))
@@ -295,8 +334,15 @@ class CompiledArtifact:
         return self
 
     # -- persistence ---------------------------------------------------------
-    def save(self, path: str, metadata: Optional[Dict] = None) -> None:
-        """Write the self-contained archive (paper Fig. 1 'output file')."""
+    def save(self, path: str, metadata: Optional[Dict] = None,
+             include_c: bool = False) -> None:
+        """Write the self-contained archive (paper Fig. 1 'output file').
+
+        ``include_c=True`` additionally embeds the generated freestanding C
+        source in the checksummed ``metadata`` member (key ``"emit_c"``) —
+        the shippable MCU source travels with the archive that produced it.
+        Quantized classifier artifacts only.
+        """
         import time
 
         import msgpack
@@ -307,6 +353,9 @@ class CompiledArtifact:
                 "recompile the model to obtain a saveable artifact")
         import hashlib
 
+        meta = dict(metadata or {})
+        if include_c:
+            meta["emit_c"] = self.emit_c()
         members = {
             "kind": self.kind,
             "target": dataclasses.asdict(self.target),
@@ -315,7 +364,7 @@ class CompiledArtifact:
             # reproduce this artifact bit-for-bit without re-calibrating.
             "quant_plan": (None if self.quant_plan is None
                            else self.quant_plan.to_dict()),
-            "metadata": metadata or {},
+            "metadata": meta,
         }
         # v3: every member is its own msgpack blob, checksummed so load()
         # can prove the bytes it is about to deserialize are the bytes that

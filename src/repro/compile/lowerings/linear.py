@@ -51,6 +51,7 @@ def lower_linear(coef: np.ndarray, intercept: np.ndarray, target: Target,
                  plan: Optional[Any] = None) -> Lowered:
     """Build the Lowered program for ``argmax(x @ coef + intercept)``."""
     F = resolve_formats(target, plan)
+    extras: Dict[str, Any] = {}
     if F is None:
         w = jnp.asarray(coef, jnp.float32)
         b = jnp.asarray(intercept, jnp.float32)
@@ -87,7 +88,18 @@ def lower_linear(coef: np.ndarray, intercept: np.ndarray, target: Target,
 
         flash = nbytes(np.asarray(qw), np.asarray(qb))
         sram = int(np.asarray(coef).shape[1]) * elem_bytes(in_fmt)
-    return Lowered(predict, flash, sram)
+        # Everything the C emitter (repro.emit) needs to regenerate this
+        # exact program: the already-quantized tensors and the shift the
+        # predict above closes over — one source of truth for both backends.
+        extras["emit_spec"] = {
+            "family": "linear",
+            "in_fmt": in_fmt,
+            "out_fmt": out_fmt,
+            "w": np.asarray(qw),
+            "b": np.asarray(qb),
+            "shift": shift,
+        }
+    return Lowered(predict, flash, sram, extras=extras)
 
 
 @register_lowering("logistic")

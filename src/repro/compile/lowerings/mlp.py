@@ -172,4 +172,15 @@ class MLPLowering(Lowering):
                            *[np.asarray(b) for b in qbs])
             # One reused activation buffer (paper §III-D): the widest layer.
             sram = max(widths) * elem_bytes(in_fmt)
+            # The C emitter regenerates this program from the same quantized
+            # tensors and per-layer shift/activation schedule.
+            extras["emit_spec"] = {
+                "family": "mlp",
+                "in_fmt": in_fmt,
+                "out_fmts": out_fmts,
+                "ws": [np.asarray(w) for w in qws],
+                "bs": [np.asarray(b) for b in qbs],
+                "shifts": shifts,
+                "acts": acts,
+            }
         return Lowered(predict, flash, sram, extras=extras)

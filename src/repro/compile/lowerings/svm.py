@@ -243,4 +243,19 @@ def _lower_kernel_svm(p: Dict[str, Any], target: Target,
 
         flash = nbytes(np.asarray(qsv), np.asarray(qd), np.asarray(qb))
         sram = (sv.shape[0] + dual.shape[1]) * elem_bytes(fmt)
+        # The C emitter regenerates the same decision function from the
+        # quantized tensors and constants the predict paths close over.
+        extras["emit_spec"] = {
+            "family": "svm",
+            "kernel": kernel,
+            "fmt": fmt,
+            "out_fmt": out_fmt,
+            "sv": np.asarray(qsv),
+            "dual": np.asarray(qd),
+            "b": np.asarray(qb),
+            "qgamma": int(np.asarray(qgamma)),
+            "qcoef0": int(np.asarray(qcoef0)),
+            "degree": int(degree),
+            "dec_shift": dec_shift,
+        }
     return Lowered(predict, flash, sram, extras=extras)

@@ -109,4 +109,18 @@ class TreeLowering(Lowering):
 
         flash = trees_mod.tree_memory_bytes(tree, target.tree_layout, fmt)
         sram = 8  # node index + feature value registers
-        return Lowered(predict, flash, sram)
+        extras: Dict[str, Any] = {}
+        if fmt is not None:
+            # The C emitter walks the same node arrays; thresholds are
+            # already quantized into the shared input/threshold format.
+            extras["emit_spec"] = {
+                "family": "tree",
+                "in_fmt": fmt,
+                "feature": np.asarray(tree.feature, np.int32),
+                "threshold": np.asarray(tree.threshold),
+                "left": np.asarray(tree.left, np.int32),
+                "right": np.asarray(tree.right, np.int32),
+                "leaf_class": np.asarray(tree.leaf_class, np.int32),
+                "max_depth": int(tree.max_depth),
+            }
+        return Lowered(predict, flash, sram, extras=extras)

@@ -26,7 +26,7 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from .fixedpoint import FxpFormat, _rshift_round, _saturate, qdiv, qsigmoid
+from .fixedpoint import FxpFormat, _rshift_round, _saturate, one_q, qdiv, qsigmoid
 
 __all__ = [
     "sigmoid_exact",
@@ -35,6 +35,7 @@ __all__ = [
     "sigmoid_pwl4",
     "get_sigmoid",
     "get_qsigmoid",
+    "pwl4_consts",
     "SIGMOID_MAX_ERR",
     "SIGMOID_NAMES",
 ]
@@ -109,24 +110,51 @@ def qsigmoid_rational(x: jax.Array, fmt: FxpFormat) -> jax.Array:
 
 
 def qsigmoid_pwl2(x: jax.Array, fmt: FxpFormat) -> jax.Array:
-    """clip(x>>2 + 0.5, 0, 1) in Qn.m — two shifts, one clamp."""
-    one = int(fmt.scale)
-    half = one >> 1
+    """clip(x>>2 + 0.5, 0, 1) in Qn.m — two shifts, one clamp.
+
+    The upper clamp is ``min(1.0, qmax)``: for formats with no integer bits
+    (m == total_bits - 1) the raw ``1 << m`` exceeds the container, and the
+    old ``astype`` narrowing wrapped it to ``qmin`` — sigmoid(large x) came
+    out as the most negative representable value.  Saturate instead.
+    """
+    one = one_q(fmt)
+    half = int(fmt.scale) >> 1
     ramp = _rshift_round(x.astype(fmt.wide_dtype), 2) + half
-    return jnp.clip(ramp, 0, one).astype(fmt.dtype)
+    return _saturate(jnp.clip(ramp, 0, one), fmt)
+
+
+def pwl4_consts(fmt: FxpFormat) -> Dict[str, int]:
+    """Integer constants of the PLAN approximation for ``fmt``.
+
+    One definition shared by the traced op below and the C emitter
+    (:mod:`repro.emit`).  Thresholds are exact (wide-domain) values; the
+    ``one`` used for the final ``1 - y`` reflection stays unsaturated so the
+    symmetry identity holds before the final saturation.
+    """
+    one = int(fmt.scale)
+    return {
+        "one": one,
+        "half": one >> 1,
+        "t5": 5 * one,
+        "t2375": int(round(2.375 * fmt.scale)),
+        "t1": one,
+        "c84375": int(round(0.84375 * fmt.scale)),
+        "c625": int(round(0.625 * fmt.scale)),
+    }
 
 
 def qsigmoid_pwl4(x: jax.Array, fmt: FxpFormat) -> jax.Array:
     """PLAN segments in Qn.m.  Constants quantized once per format."""
-    one = int(fmt.scale)
+    consts = pwl4_consts(fmt)
+    one = consts["one"]
     wide = fmt.wide_dtype
     ax = jnp.abs(x.astype(wide))
-    t5 = 5 * one
-    t2375 = int(round(2.375 * fmt.scale))
-    t1 = one
-    c84375 = int(round(0.84375 * fmt.scale))
-    c625 = int(round(0.625 * fmt.scale))
-    half = one >> 1
+    t5 = consts["t5"]
+    t2375 = consts["t2375"]
+    t1 = consts["t1"]
+    c84375 = consts["c84375"]
+    c625 = consts["c625"]
+    half = consts["half"]
     y = jnp.where(
         ax >= t5,
         jnp.asarray(one, wide),

@@ -59,6 +59,8 @@ __all__ = [
     "qpow_int",
     "qrelu",
     "FxpStats",
+    "one_q",
+    "exp_poly_consts",
 ]
 
 
@@ -184,6 +186,30 @@ jax.tree_util.register_pytree_node(
 
 def _saturate(x_wide: jax.Array, fmt: FxpFormat) -> jax.Array:
     return jnp.clip(x_wide, fmt.qmin, fmt.qmax).astype(fmt.dtype)
+
+
+def one_q(fmt: FxpFormat) -> int:
+    """The constant 1.0 quantized into ``fmt``, saturating.
+
+    For formats with at least one integer bit this is exactly ``1 << m``.
+    Formats with zero integer bits (``m == total_bits - 1``, e.g. Q0.31)
+    cannot represent 1.0; the saturated value ``qmax`` is the closest
+    representable number.  Materializing the raw ``1 << m`` as a container
+    constant raises ``OverflowError`` on those formats, which is what every
+    sigmoid/recip path used to do.
+    """
+    return min(1 << fmt.frac_bits, fmt.qmax)
+
+
+def exp_poly_consts(fmt: FxpFormat) -> Tuple[int, Tuple[int, int, int, int]]:
+    """Per-format integer constants of :func:`qexp`: ``(log2e_q, (c0..c3))``.
+
+    Shared between the traced implementation below and the C emitter
+    (:mod:`repro.emit`), so both quantize the polynomial identically.
+    """
+    log2e_q = int(round(_LOG2_E * fmt.scale))
+    coeffs = tuple(int(round(c * fmt.scale)) for c in _EXP2_COEFFS)
+    return log2e_q, coeffs
 
 
 # --------------------------------------------------------------------------
@@ -366,12 +392,11 @@ def qexp(x: jax.Array, fmt: FxpFormat) -> jax.Array:
     """
     m = fmt.frac_bits
     wide = fmt.wide_dtype
-    log2e_q = int(round(_LOG2_E * fmt.scale))
+    log2e_q, (c0, c1, c2, c3) = exp_poly_consts(fmt)
     y = _rshift_round(x.astype(wide) * log2e_q, m)  # y = x*log2e in Qn.m (wide)
     k = y >> m  # floor(y): arithmetic shift == floor for two's complement
     f = y - (k << m)  # fractional part in [0, 2^m)
     # Horner in Qn.m on the wide dtype.
-    c0, c1, c2, c3 = (int(round(c * fmt.scale)) for c in _EXP2_COEFFS)
     acc = jnp.full_like(f, c3)
     acc = _rshift_round(acc * f, m) + c2
     acc = _rshift_round(acc * f, m) + c1
@@ -395,7 +420,7 @@ def qexp(x: jax.Array, fmt: FxpFormat) -> jax.Array:
 
 def qrecip(x: jax.Array, fmt: FxpFormat) -> jax.Array:
     """1/x in Qn.m via exact integer division (2^(2m) / q)."""
-    one = jnp.asarray(int(fmt.scale), fmt.dtype)
+    one = jnp.asarray(one_q(fmt), fmt.dtype)
     return qdiv(jnp.broadcast_to(one, x.shape), x, fmt)
 
 
@@ -407,7 +432,7 @@ def qsigmoid(x: jax.Array, fmt: FxpFormat) -> jax.Array:
     """
     neg_abs = -jnp.abs(x.astype(fmt.wide_dtype))
     e = qexp(_saturate(neg_abs, fmt), fmt)  # exp(-|x|) in (0, 1]
-    one = jnp.asarray(int(fmt.scale), fmt.dtype)
+    one = jnp.asarray(one_q(fmt), fmt.dtype)
     denom = qadd(jnp.broadcast_to(one, e.shape), e, fmt)
     pos = qdiv(jnp.broadcast_to(one, e.shape), denom, fmt)  # sigmoid(|x|)
     neg = qsub(jnp.broadcast_to(one, e.shape), pos, fmt)
@@ -448,7 +473,7 @@ def qpow_int(x: jax.Array, p: int, fmt: FxpFormat) -> jax.Array:
     """x**p for small non-negative integer p (poly-kernel SVM degree)."""
     if p < 0:
         raise ValueError("qpow_int only supports non-negative integer powers")
-    out = jnp.full_like(x, int(fmt.scale))  # 1.0 in Qn.m
+    out = jnp.full_like(x, one_q(fmt))  # 1.0 in Qn.m (saturated if n == 0)
     base = x
     while p:
         if p & 1:

@@ -8,8 +8,9 @@ map, so restore validates structure and shapes before touching the model.
 
 Production posture (1000+ nodes):
 
-* **Atomicity** — write to ``<name>.tmp-<pid>`` then ``os.replace`` (rename is
-  atomic on POSIX); a crash mid-write never corrupts the latest checkpoint.
+* **Atomicity** — write to a private ``mkstemp`` file then ``os.replace``
+  (rename is atomic on POSIX); a crash mid-write never corrupts the latest
+  checkpoint, and concurrent writers (threads included) never share a tmp.
 * **Retention** — ``CheckpointManager`` keeps the newest ``keep`` steps plus
   every ``keep_period``-th step (for rollback after silent corruption).
 * **Multi-host** — each host writes only its addressable shards under
@@ -25,6 +26,7 @@ import dataclasses
 import os
 import re
 import shutil
+import tempfile
 import time
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
@@ -68,14 +70,34 @@ LEAF_KEY = _LEAF_KEY = "__leaf__"
 
 
 def atomic_write_bytes(path: str, blob: bytes) -> None:
-    """Write-to-tmp + fsync + rename: a crash never corrupts ``path``."""
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    tmp = f"{path}.tmp-{os.getpid()}"
-    with open(tmp, "wb") as f:
-        f.write(blob)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+    """Write-to-tmp + fsync + rename: ``path`` is never observable
+    half-written.
+
+    The tmp file comes from ``tempfile.mkstemp`` in the destination
+    directory, so every writer — including two *threads* of one process
+    saving the same path concurrently, which the old ``.tmp-<pid>`` naming
+    let interleave into one corrupted tmp file — gets a private file, and
+    the final ``os.replace`` (atomic on POSIX) publishes a complete blob or
+    nothing.  On any failure the tmp file is removed; a crash mid-write can
+    strand at most a stale ``.tmp-*`` file, never a truncated ``path``.
+    """
+    apath = os.path.abspath(path)
+    directory = os.path.dirname(apath)
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory,
+                               prefix=os.path.basename(apath) + ".tmp-")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, apath)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def encode_leaf(x: Any) -> Any:

@@ -66,3 +66,46 @@ def test_property_pwl4_piecewise_exact(x):
     want = y if x >= 0 else 1 - y
     got = float(act.sigmoid_pwl4(jnp.float32(x)))
     assert abs(got - want) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# zero-integer-bit formats: the quantized sigmoids at the container edge
+# ---------------------------------------------------------------------------
+ZERO_IB_FORMATS = [fxp.FxpFormat(8, 7), fxp.FxpFormat(16, 15),
+                   fxp.FxpFormat(32, 31)]
+
+
+@pytest.mark.parametrize("fmt", ZERO_IB_FORMATS, ids=str)
+def test_pwl2_exact_ramp_on_q0(fmt):
+    """Regression: pwl2's upper clamp used to materialize the raw ``1 << m``
+    in the container, which overflows on every Q0.m format.  The whole input
+    range of Q0.m sits inside the ramp segment (|x| < 1 < 2), so the output
+    must be the exact rounded ``x/4 + 0.5`` — computed here with pure-python
+    integers as the second opinion."""
+    def ramp(v):
+        floor, rem = v >> 2, v & 3
+        return floor + (1 if rem > 2 - (v >= 0) else 0) + (int(fmt.scale) >> 1)
+
+    qs = np.asarray([fmt.qmin, -1, 0, 1, fmt.qmax], fmt.dtype)
+    got = np.asarray(act.qsigmoid_pwl2(jnp.asarray(qs), fmt))
+    want = [min(max(ramp(int(v)), 0), fxp.one_q(fmt)) for v in qs]
+    np.testing.assert_array_equal(got, np.asarray(want, fmt.dtype))
+
+
+def test_pwl2_upper_clamp_saturates():
+    """Where the ramp does exceed 1.0 (formats with integer bits), the clamp
+    lands on one_q — never a wrapped negative."""
+    for fmt in (fxp.FXP16, fxp.FXP8):
+        x = jnp.asarray(np.asarray([fmt.qmax], fmt.dtype))
+        assert int(act.qsigmoid_pwl2(x, fmt)[0]) == fxp.one_q(fmt)
+
+
+@pytest.mark.parametrize("name", ["pwl2", "pwl4", "rational"])
+@pytest.mark.parametrize("fmt", ZERO_IB_FORMATS, ids=str)
+def test_fxp_sigmoids_stay_in_unit_range_on_q0(fmt, name):
+    """Every approximation maps the full Q0.m input range into [0, one_q]
+    without overflowing the container."""
+    qs = np.linspace(fmt.qmin, fmt.qmax, 65).astype(fmt.dtype)
+    y = np.asarray(act.get_qsigmoid(name)(jnp.asarray(qs), fmt))
+    assert y.dtype == np.dtype(fmt.dtype)
+    assert (y >= 0).all() and (y <= fxp.one_q(fmt)).all()

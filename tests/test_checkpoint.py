@@ -104,3 +104,88 @@ def test_atomic_no_tmp_left_behind(tmp_path):
     save_pytree(p, _tree(0))
     leftovers = [f for f in os.listdir(tmp_path) if ".tmp-" in f]
     assert leftovers == []
+
+
+def test_atomic_crash_at_publish_preserves_original(tmp_path, monkeypatch):
+    """A crash between tmp-write and publish (os.replace raising here) must
+    leave the previously saved bytes intact and strand no tmp files."""
+    from repro.train import checkpoint as C
+
+    path = tmp_path / "model.bin"
+    C.atomic_write_bytes(str(path), b"v1-good")
+
+    def boom(src, dst):
+        raise OSError("simulated power loss at publish")
+
+    monkeypatch.setattr(C.os, "replace", boom)
+    with pytest.raises(OSError, match="power loss"):
+        C.atomic_write_bytes(str(path), b"v2-half")
+    monkeypatch.undo()
+    assert path.read_bytes() == b"v1-good"
+    assert [f for f in os.listdir(tmp_path) if ".tmp-" in f] == []
+
+
+def test_atomic_write_failure_cleans_tmp(tmp_path, monkeypatch):
+    """fsync failing (disk full mid-flush) removes the tmp file and never
+    creates the destination."""
+    from repro.train import checkpoint as C
+
+    def boom(fd):
+        raise OSError("simulated disk full")
+
+    monkeypatch.setattr(C.os, "fsync", boom)
+    with pytest.raises(OSError, match="disk full"):
+        C.atomic_write_bytes(str(tmp_path / "never.bin"), b"data")
+    monkeypatch.undo()
+    assert os.listdir(tmp_path) == []
+
+
+def test_atomic_concurrent_writers_publish_one_intact_blob(tmp_path):
+    """Racing threads on one path (the old .tmp-<pid> scheme interleaved
+    them into a corrupt tmp) each publish atomically: the survivor is one
+    writer's complete blob, never a mix."""
+    import threading
+
+    from repro.train import checkpoint as C
+
+    path = str(tmp_path / "shared.bin")
+    blobs = [bytes([i]) * (4096 + i) for i in range(8)]
+    threads = [threading.Thread(target=C.atomic_write_bytes, args=(path, b))
+               for b in blobs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data in blobs
+    assert [f for f in os.listdir(tmp_path) if ".tmp-" in f] == []
+
+
+def test_artifact_save_is_atomic(tmp_path, monkeypatch):
+    """CompiledArtifact.save goes through the same atomic path: a publish
+    crash leaves the prior archive loadable."""
+    import numpy as np_
+
+    from repro.compile import Target, compile, load
+    from repro.models import train_logistic
+    from repro.train import checkpoint as C
+
+    rng = np_.random.RandomState(0)
+    x = rng.randn(64, 4).astype(np_.float32)
+    y = (x[:, 0] > 0).astype(np_.int32)
+    art = compile(train_logistic(x, y, 2, epochs=2, seed=0),
+                  Target(number_format="fxp16"))
+    p = tmp_path / "art.rpa"
+    art.save(str(p))
+    want = load(str(p)).predict(x)
+
+    def boom(src, dst):
+        raise OSError("simulated power loss at publish")
+
+    monkeypatch.setattr(C.os, "replace", boom)
+    with pytest.raises(OSError, match="power loss"):
+        art.save(str(p), metadata={"attempt": 2})
+    monkeypatch.undo()
+    np_.testing.assert_array_equal(load(str(p)).predict(x), want)
+    assert [f for f in os.listdir(tmp_path) if ".tmp-" in f] == []

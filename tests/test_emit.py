@@ -1,0 +1,296 @@
+"""C emission backend conformance: goldens as the cross-language oracle.
+
+The paper's deliverable is *compilable C source* for FPU-less MCUs.  These
+tests close the loop end-to-end: every quantized lowering x canonical
+quantized Target is emitted as freestanding C99, compiled with the system
+``cc`` under ``-std=c99 -Wall -Wextra -Werror -ffreestanding``, and the
+binary must replay the stored golden vectors (``tests/golden/*.npz``)
+byte-identically — the same oracle that already gates ref == xla == pallas
+extends across the language boundary.
+
+Tests that need a toolchain skip with a reason when none is found; the
+source-level contracts (integer-only text, error paths, deterministic
+emission, archive embedding) run everywhere.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from golden import regenerate as G
+
+from repro import emit as E
+from repro.compile import Target, compile, load
+from repro.core import fixedpoint as fxp
+
+CLASSIFIER_KINDS = ("tree", "logistic", "mlp", "svm-linear", "svm-poly",
+                    "svm-rbf")
+# Every canonical golden tag except the float one: the emit backend serves
+# quantized programs only.
+QUANT_TAGS = tuple(t for t in G.CLASSIFIER_TARGETS if t != "flt")
+
+CC = E.find_cc()
+needs_cc = pytest.mark.skipif(
+    CC is None, reason="no C compiler (cc/gcc/clang) on PATH")
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return G.make_dataset()
+
+
+@pytest.fixture(scope="module")
+def classifiers(dataset):
+    xtr, ytr, _, c = dataset
+    return G.train_classifiers(xtr, ytr, c)
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    out = {}
+    for kind in CLASSIFIER_KINDS:
+        with np.load(G.golden_path(kind)) as z:
+            out[kind] = {tag: z[tag] for tag in z.files}
+    return out
+
+
+def _spec_arrays(spec):
+    """The quantized parameter tensors a spec ships to flash."""
+    fam = spec["family"]
+    if fam == "linear":
+        return [spec["w"], spec["b"]]
+    if fam == "mlp":
+        return list(spec["ws"]) + list(spec["bs"])
+    if fam == "svm":
+        return [spec["sv"], spec["dual"], spec["b"]]
+    if fam == "tree":
+        return [spec["feature"], spec["threshold"], spec["left"],
+                spec["right"], spec["leaf_class"]]
+    raise AssertionError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: compiled C replays every golden byte-identically
+# ---------------------------------------------------------------------------
+@needs_cc
+@pytest.mark.parametrize("kind", CLASSIFIER_KINDS)
+def test_emit_backend_replays_goldens(classifiers, dataset, goldens, kind):
+    """backend='emit' routes predict through a cc-compiled binary and must
+    reproduce the stored golden bytes for every quantized canonical Target
+    (fixed-format and calibrated alike)."""
+    xtr, _, xte, _ = dataset
+    for tag in QUANT_TAGS:
+        art = G.compile_for_tag(classifiers[kind], tag, "emit", xtr)
+        np.testing.assert_array_equal(
+            art.predict(xte), goldens[kind][tag],
+            err_msg=f"{kind}/{tag}/emit diverged from golden bytes")
+
+
+@needs_cc
+@pytest.mark.parametrize("kind", ["mlp", "svm-rbf"])
+def test_emit_matches_ref_beyond_goldens(classifiers, kind):
+    """Random out-of-distribution inputs (10x the data scale, forcing the
+    saturation and qexp-extreme paths the goldens may not reach) still agree
+    label-for-label with the traced reference backend."""
+    rng = np.random.RandomState(7)
+    x = (rng.randn(64, 12) * 10.0).astype(np.float32)
+    tgt = dict(number_format="fxp16")
+    ref = compile(classifiers[kind], Target(backend="ref", **tgt))
+    emitted = compile(classifiers[kind], Target(backend="emit", **tgt))
+    np.testing.assert_array_equal(
+        emitted.predict(x), ref.predict(x),
+        err_msg=f"{kind}: C diverged from ref on saturating inputs")
+
+
+# ---------------------------------------------------------------------------
+# source-level contracts (no toolchain required)
+# ---------------------------------------------------------------------------
+def test_generated_c_is_integer_only(classifiers, dataset):
+    """Every emitted translation unit passes the no-float audit and carries
+    only the stdint.h include — the freestanding contract at source level."""
+    xtr = dataset[0]
+    for kind in CLASSIFIER_KINDS:
+        for tag in QUANT_TAGS:
+            art = G.compile_for_tag(classifiers[kind], tag, "ref", xtr)
+            src = art.emit_c()
+            E.assert_integer_only(src)  # raises EmitError on violation
+            assert "#include <stdint.h>" in src
+            assert "emb_predict" in src
+
+
+def test_emit_is_deterministic(classifiers):
+    art = compile(classifiers["logistic"], Target(number_format="fxp16"))
+    assert art.emit_c() == art.emit_c()
+
+
+@pytest.mark.parametrize("snippet", [
+    "double x = 1;",
+    "float f;",
+    "long double d;",
+    "int32_t x = (int32_t)1.5;",
+    "int32_t x = 1e3;",
+    "uint64_t u = 0x1.8p3;",
+    "#include <math.h>",
+    "int32_t half = .5;",
+])
+def test_assert_integer_only_rejects(snippet):
+    with pytest.raises(E.EmitError):
+        E.assert_integer_only(f"#include <stdint.h>\n{snippet}\n")
+
+
+def test_assert_integer_only_accepts_comments_and_ints():
+    E.assert_integer_only(
+        "#include <stdint.h>\n"
+        "/* float semantics note: 1.5 would round to 2 */\n"
+        "static const int32_t x = 15;\n")
+
+
+def test_float_target_rejected(classifiers):
+    with pytest.raises(TypeError, match="quantized"):
+        compile(classifiers["mlp"], Target(number_format="flt",
+                                           backend="emit"))
+    flt = compile(classifiers["mlp"], Target(number_format="flt"))
+    with pytest.raises(E.EmitError):
+        flt.emit_c()
+
+
+def test_lm_lowering_rejected():
+    model = G.make_lm_model()
+    with pytest.raises(TypeError, match="emit"):
+        compile(model, Target(backend="emit",
+                              **G.LM_TARGETS["fxp8_qnm_pwl4"]))
+
+
+def test_specialize_mesh_rejected_for_emit(classifiers):
+    from repro.sharding.rules import make_serving_mesh
+
+    art = compile(classifiers["tree"], Target(number_format="fxp16",
+                                              backend="emit"))
+    with pytest.raises(TypeError, match="emit"):
+        art.specialize_mesh(make_serving_mesh(1))
+
+
+# ---------------------------------------------------------------------------
+# measured footprint: report() cross-checked against the object file
+# ---------------------------------------------------------------------------
+@needs_cc
+@pytest.mark.parametrize("kind,fmt", [("logistic", "fxp16"),
+                                      ("mlp", "fxp16"),
+                                      ("mlp", "fxp32"),
+                                      ("tree", "fxp16")])
+def test_report_measures_real_sections(classifiers, kind, fmt):
+    """For non-degenerate models (where the compiler cannot constant-fold
+    the weights away) the measured .rodata must hold at least the modeled
+    parameter bytes, and not exceed them by more than alignment padding."""
+    art = compile(classifiers[kind], Target(number_format=fmt,
+                                            backend="emit"))
+    rep = art.report()
+    assert "c_sections" in rep, "emit-backend report() must measure"
+    sec = rep["c_sections"]
+    assert sec["flash"] == sec["text"] + sec["rodata"] + sec["data"]
+    assert rep["model_bytes_measured"] == sec["flash"]
+    assert sec["text"] > 0
+    n_arrays = len(_spec_arrays(E.spec_of(art)))
+    slack = 16 * n_arrays  # per-array alignment padding at most
+    assert rep["model_bytes"] <= sec["rodata"] <= rep["model_bytes"] + slack, (
+        f"{kind}/{fmt}: modeled {rep['model_bytes']}B vs measured "
+        f".rodata {sec['rodata']}B")
+
+
+@pytest.mark.parametrize("tag", ["auto16", "auto8"])
+def test_model_bytes_uses_per_tensor_widths(classifiers, dataset, tag):
+    """Satellite regression: model_bytes is the sum of the *actual quantized
+    tensors'* bytes (per-tensor calibrated container widths), not a uniform
+    or float-sized estimate."""
+    xtr = dataset[0]
+    for kind in ("logistic", "mlp", "svm-rbf"):
+        art = G.compile_for_tag(classifiers[kind], tag, "ref", xtr)
+        want = sum(np.asarray(a).nbytes for a in _spec_arrays(E.spec_of(art)))
+        assert art.report()["model_bytes"] == want, (
+            f"{kind}/{tag}: model_bytes disagrees with the quantized tensors")
+
+
+def test_report_measure_modes(classifiers, monkeypatch):
+    """measure_c=False never measures; measure_c=True without a toolchain
+    raises instead of silently estimating; 'auto' on a non-emit backend
+    stays estimate-only."""
+    art = compile(classifiers["logistic"], Target(number_format="fxp16"))
+    assert "c_sections" not in art.report()  # ref backend, auto mode
+    emit_art = compile(classifiers["logistic"], Target(number_format="fxp16",
+                                                       backend="emit"))
+    assert "c_sections" not in emit_art.report(measure_c=False)
+    monkeypatch.setattr("repro.emit.harness.find_cc", lambda: None)
+    with pytest.raises(E.EmitToolchainError):
+        emit_art.report(measure_c=True)
+    # auto mode degrades to the estimate when the toolchain is missing.
+    rep = emit_art.report()
+    assert "c_sections" not in rep and rep["model_bytes"] > 0
+
+
+def test_crunner_requires_toolchain(classifiers, monkeypatch):
+    monkeypatch.setattr("repro.emit.harness.find_cc", lambda: None)
+    art = compile(classifiers["logistic"], Target(number_format="fxp16"))
+    spec = E.spec_of(art)
+    with pytest.raises(E.EmitToolchainError, match="no C compiler"):
+        E.CRunner(art.emit_c(), E.input_format(spec), cc=None)
+
+
+# ---------------------------------------------------------------------------
+# persistence + harness mechanics
+# ---------------------------------------------------------------------------
+def test_save_include_c_roundtrip(classifiers, dataset, tmp_path):
+    """include_c=True embeds the exact generated source in the checksummed
+    archive metadata; load() reproduces the predictions."""
+    import msgpack
+
+    from repro.train.checkpoint import decompress_bytes
+
+    _, _, xte, _ = dataset
+    art = compile(classifiers["tree"], Target(number_format="fxp16"))
+    src = art.emit_c()
+    p = str(tmp_path / "tree.rpa")
+    art.save(p, metadata={"note": "hello"}, include_c=True)
+    with open(p, "rb") as f:
+        payload = msgpack.unpackb(decompress_bytes(f.read()), raw=False)
+    meta = msgpack.unpackb(payload["members"]["metadata"], raw=False)
+    assert meta["note"] == "hello"
+    assert meta["emit_c"] == src, "archived C drifted from emit_c()"
+    np.testing.assert_array_equal(load(p).predict(xte), art.predict(xte))
+    # Default save stays lean: no C source unless asked for.
+    art.save(str(tmp_path / "lean.rpa"))
+    with open(str(tmp_path / "lean.rpa"), "rb") as f:
+        payload = msgpack.unpackb(decompress_bytes(f.read()), raw=False)
+    assert "emit_c" not in msgpack.unpackb(payload["members"]["metadata"],
+                                           raw=False)
+
+
+@needs_cc
+def test_crunner_mechanics(classifiers, dataset):
+    """Direct harness use: sizes() buckets, 1-D row handling, context-manager
+    cleanup of the build directory."""
+    _, _, xte, _ = dataset
+    art = compile(classifiers["logistic"], Target(number_format="fxp16"))
+    spec = E.spec_of(art)
+    with E.CRunner(art.emit_c(), E.input_format(spec)) as runner:
+        tmpdir = runner.tmpdir
+        sizes = runner.sizes()
+        assert set(sizes) == {"text", "rodata", "data", "bss", "flash"}
+        assert sizes["text"] > 0 and sizes["rodata"] > 0
+        labels, stats = runner.predict(xte[0])
+        assert labels.shape == (1,) and labels.dtype == np.int32
+        assert int(stats.total) == xte.shape[1]
+        batch, _ = runner.predict(xte[:5])
+        assert batch.shape == (5,)
+        assert os.path.isdir(tmpdir)
+    assert not os.path.exists(tmpdir), "close() must reclaim the build dir"
+
+
+@needs_cc
+def test_measure_artifact_matches_crunner(classifiers):
+    art = compile(classifiers["mlp"], Target(number_format="fxp16",
+                                             backend="emit"))
+    sizes = E.measure_artifact(art)
+    spec = E.spec_of(art)
+    with E.CRunner(art.emit_c(), E.input_format(spec)) as runner:
+        assert runner.sizes() == sizes

@@ -421,3 +421,51 @@ def test_fused_layer_shift_backend_parity():
             pal = np.asarray(ops.fxp_layer(a, w, b, fmt, act, shift=shift))
             np.testing.assert_array_equal(
                 ref, pal, err_msg=f"shift={shift}/{act}: kernel diverged")
+
+
+# ---------------------------------------------------------------------------
+# zero-integer-bit formats (Q0.m): 1.0 itself is not representable
+# ---------------------------------------------------------------------------
+ZERO_IB_FORMATS = [fxp.FxpFormat(8, 7), fxp.FxpFormat(16, 15),
+                   fxp.FxpFormat(32, 31)]
+
+
+class TestOneQ:
+    """one_q is the single definition of 'the constant 1.0' shared by the
+    traced ops and the C emitter; these pin its saturation contract."""
+
+    @pytest.mark.parametrize("fmt", FORMATS, ids=str)
+    def test_exact_when_representable(self, fmt):
+        assert fxp.one_q(fmt) == 1 << fmt.frac_bits
+
+    @pytest.mark.parametrize("fmt", ZERO_IB_FORMATS, ids=str)
+    def test_saturates_at_zero_integer_bits(self, fmt):
+        # The raw 1 << m exceeds the container; qmax is the closest value.
+        assert fmt.int_bits == 0
+        assert fxp.one_q(fmt) == fmt.qmax
+
+    @pytest.mark.parametrize("fmt", ZERO_IB_FORMATS, ids=str)
+    def test_one_dependent_ops_do_not_overflow(self, fmt):
+        """Regression: qrecip/qpow_int/qsigmoid used to materialize the raw
+        ``1 << m`` as a container constant, raising OverflowError on every
+        Q0.m format.  They must run and stay inside the container."""
+        x = jnp.asarray(np.asarray([fmt.qmin, -1, 0, 1, fmt.qmax], fmt.dtype))
+        for out in (fxp.qrecip(x, fmt), fxp.qpow_int(x, 3, fmt),
+                    fxp.qsigmoid(x, fmt)):
+            o = np.asarray(out)
+            assert o.dtype == np.dtype(fmt.dtype)
+            assert (o >= fmt.qmin).all() and (o <= fmt.qmax).all()
+
+    @pytest.mark.parametrize("fmt", ZERO_IB_FORMATS, ids=str)
+    def test_qpow_zero_is_one_q(self, fmt):
+        x = jnp.asarray(np.asarray([fmt.qmin, 0, fmt.qmax], fmt.dtype))
+        np.testing.assert_array_equal(
+            np.asarray(fxp.qpow_int(x, 0, fmt)),
+            np.full(3, fxp.one_q(fmt), fmt.dtype))
+
+    @settings(max_examples=40, deadline=None)
+    @given(xq=st.integers(-(2 ** 15), 2 ** 15 - 1))
+    def test_property_sigmoid_unit_range_q0_15(self, xq):
+        fmt = fxp.FxpFormat(16, 15)
+        y = int(fxp.qsigmoid(jnp.asarray(np.asarray(xq, fmt.dtype)), fmt))
+        assert 0 <= y <= fxp.one_q(fmt)

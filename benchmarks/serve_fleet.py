@@ -1,0 +1,320 @@
+"""Fleet megabatching: cross-endpoint stacked dispatch vs per-endpoint.
+
+The paper's deployment model is a *fleet* of KB-scale classifiers; this
+benchmark mirrors it server-side: E compatible fxp16 MLP endpoints (~1.3KB
+of quantized weights each — different weights, one fleet signature) under
+concurrent load, served two ways over the SAME artifacts:
+
+* **per-endpoint** — each endpoint's own micro-batcher dispatches its own
+  micro-batches (the PR-7 state of the world: one dispatch per endpoint
+  per round);
+* **coalesced** — ``InferenceService.enable_fleet()`` stacks the fleet
+  into one program and a :class:`~repro.serve.fleet.FleetCoalescer` serves
+  every endpoint's in-flight micro-batch with ONE stacked Pallas dispatch
+  per round.
+
+The load is deliberately dispatch-bound — small buckets, many endpoints —
+because that IS the fleet regime: models of a few KB never saturate the
+device, so per-dispatch fixed overhead (launch, assembly, scheduling)
+dominates and coalescing E dispatches into one is the available win.
+Throughput is the best of several timed drives (scheduler thread timing
+is noisy on a shared host; both arms of the comparison are measured the
+same way).
+
+Acceptance gates (checked by ``--smoke`` and CI):
+
+* coalesced serving >= 2x the total classifications/s of per-endpoint
+  serving under the same concurrent load;
+* kernel dispatches per coalesced round == 1 — at the stack level a fresh
+  :func:`repro.compile.stack_fleet` traces exactly one fleet kernel
+  (counted via ``ops.count_dispatches``, the same convention as the
+  megakernel gates), and at the coalescer level
+  ``stacked_dispatches == rounds``;
+* every response byte-identical to its endpoint's own golden vectors —
+  including a degradation-engaged member (served by its ``fxp8``
+  fallback, solo) and a breaker-tripped member (fails fast, recovers via
+  probes, then rides the stack again);
+* zero-copy assembly: staging allocations plateau while rounds grow, and
+  batch-assembly time is reported separately from device time.
+
+  PYTHONPATH=src python benchmarks/serve_fleet.py --smoke
+  PYTHONPATH=src python benchmarks/serve_fleet.py --out results.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.compile import Target, compile, fleet_signature, stack_fleet
+from repro.kernels import ops
+from repro.models import train_mlp
+from repro.serve import (BatchingPolicy, BreakerPolicy, CircuitOpenError,
+                         DegradationPolicy, InferenceService)
+
+N_ENDPOINTS = 32
+MAX_BATCH = 8   # small buckets: the dispatch-overhead-dominated regime
+CHUNK = 8       # rows per request (== bucket: full-bucket requests)
+N_ROWS = 192    # golden window; CHUNK divides it, so slices never wrap
+N_CLIENTS = 4   # client threads, each driving N_ENDPOINTS/N_CLIENTS eps
+
+
+def _make_blobs(n: int, f: int = 16, c: int = 4, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    means = rng.randn(c, f) * 4.0
+    y = rng.randint(0, c, n).astype(np.int32)
+    x = (means[y] + rng.randn(n, f)).astype(np.float32)
+    return x, y, c
+
+
+def _build_fleet(n_models: int):
+    """n_models KB-scale fxp16 MLP artifacts sharing one fleet signature
+    (same widths/container; different weights per seed), plus one fxp8
+    fallback of member 0 for the degradation gate."""
+    x, y, c = _make_blobs(2048)
+    xtr, ytr = x[:1500], y[:1500]
+    target = Target(number_format="fxp16", backend="pallas")
+    models = [train_mlp(xtr, ytr, c, hidden=(32,), epochs=4, seed=s)
+              for s in range(n_models)]
+    arts = [compile(m, target) for m in models]
+    sigs = {fleet_signature(a) for a in arts}
+    assert len(sigs) == 1 and None not in sigs, f"fleet not stackable: {sigs}"
+    fallback0 = compile(models[0], Target(number_format="fxp8",
+                                          backend="pallas"))
+    return arts, fallback0, x
+
+
+def _service(arts, policy, fleet: bool):
+    svc = InferenceService()
+    for i, art in enumerate(arts):
+        svc.register(f"m{i}", artifact=art, policy=policy)
+    if fleet:
+        formed = svc.enable_fleet()
+        assert formed, "enable_fleet formed no fleet"
+    return svc
+
+
+def _starts(n_requests: int):
+    return [(i * CHUNK) % N_ROWS for i in range(n_requests)]
+
+
+def _drive(svc, names, rows: np.ndarray, n_requests: int):
+    """Concurrent open-loop load: ``N_CLIENTS`` client threads, each
+    driving a disjoint slice of the endpoints with CHUNK-row requests
+    interleaved across its endpoints (submit-all-then-gather), so every
+    endpoint has requests in flight at once.  A bounded client pool
+    rather than a thread per endpoint: on one core, 32 submitting
+    threads measure GIL contention, not the serving path — and both
+    arms of the comparison are driven identically either way.
+    Returns (total rows/s, responses keyed by endpoint)."""
+    results = {}
+
+    def client(group):
+        futs = [(n, svc.submit(n, rows[s:s + CHUNK]))
+                for s in _starts(n_requests) for n in group]
+        gathered = {}
+        for n, f in futs:
+            gathered.setdefault(n, []).append(f.result(timeout=600))
+        for n, parts in gathered.items():
+            results[n] = np.concatenate(parts)
+
+    threads = [threading.Thread(target=client, args=(names[i::N_CLIENTS],))
+               for i in range(N_CLIENTS)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    return len(names) * n_requests * CHUNK / dt, results
+
+
+def bench_fleet(n_requests: int, trials: int) -> dict:
+    arts, fallback0, x = _build_fleet(N_ENDPOINTS)
+    names = [f"m{i}" for i in range(N_ENDPOINTS)]
+    rows = x[-N_ROWS:]
+    # max_wait doubles as the coalescer's straggler hold; full-bucket
+    # requests dispatch on arrival either way, so the solo arm is
+    # insensitive to it while wider stacked rounds amortize better.
+    policy = BatchingPolicy(max_batch=MAX_BATCH, max_wait_ms=5.0)
+    goldens = {n: arts[i].predict(rows) for i, n in enumerate(names)}
+    golden_by_req = {
+        n: np.concatenate([goldens[n][s:s + CHUNK]
+                           for s in _starts(n_requests)])
+        for n in names}
+
+    def check_results(all_results):
+        for res in all_results:
+            for n in names:
+                np.testing.assert_array_equal(res[n], golden_by_req[n])
+
+    # -- gate: a fresh stack traces exactly ONE kernel dispatch --------------
+    stack = stack_fleet(arts)
+    with ops.count_dispatches() as c:
+        stacked_out = stack.predict(
+            np.broadcast_to(rows[:MAX_BATCH],
+                            (N_ENDPOINTS, MAX_BATCH, rows.shape[1])).copy())
+    stack_dispatches = c.count
+    for i, n in enumerate(names):  # slot isolation, pre-serving
+        np.testing.assert_array_equal(stacked_out[i], goldens[n][:MAX_BATCH])
+
+    # -- per-endpoint vs coalesced serving, trials interleaved ---------------
+    # Both services stay alive and the timed drives alternate solo/fleet
+    # pairwise: on a shared host the machine's speed drifts on the scale
+    # of a whole measurement phase, so back-to-back pairs are the only
+    # honest ratio — each pair sees the same machine state.
+    svc_solo = _service(arts, policy, fleet=False)
+    try:
+        svc = _service(arts, policy, fleet=True)
+    except BaseException:
+        svc_solo.close()
+        raise
+    try:
+        for s in (svc_solo, svc):  # warm ladders + drive path
+            _drive(s, names, rows, 8)
+            _drive(s, names, rows, max(8, n_requests // 4))
+        solo_results, fleet_results = [], []
+        solo_tr, fleet_tr = [], []
+        for _ in range(trials):
+            sc, sres = _drive(svc_solo, names, rows, n_requests)
+            fc, fres = _drive(svc, names, rows, n_requests)
+            solo_tr.append(sc)
+            fleet_tr.append(fc)
+            solo_results.append(sres)
+            fleet_results.append(fres)
+        # Best of each arm: a slower trial of this fixed-work drive only
+        # ever means external interference (single shared core), so each
+        # arm's best trial is its capability — and comparing best to best
+        # never cherry-picks one arm's unlucky trial against the other's.
+        solo_cps, fleet_cps = max(solo_tr), max(fleet_tr)
+        svc_solo.close()
+        check_results(solo_results)
+        snap = svc.stats()
+        fl = snap["_fleets"][0]
+        coalesced_batches = sum(snap[n]["coalesced_batches"] for n in names)
+        total_batches = sum(snap[n]["batches"] for n in names)
+
+        # -- degradation honored per endpoint: engage m0's governor ----------
+        svc.enable_degradation(names[0], artifact=fallback0,
+                               policy=DegradationPolicy(min_hold_s=3600.0))
+        ep0 = svc.endpoint(names[0])
+        # Simulate sustained overload on this member: engage now; the huge
+        # dwell keeps it engaged for the rest of the run.
+        ep0.governor.observe(ep0.governor.policy.queue_high, None)
+        assert ep0.degraded
+        deg_golden = fallback0.predict(rows)
+        futs = [svc.submit(names[0], rows[i]) for i in range(64)]
+        deg_out = np.concatenate([f.result(timeout=600) for f in futs])
+        np.testing.assert_array_equal(deg_out, deg_golden[:64])
+        assert all(f.batch_meta["degraded"] for f in futs)
+        # ... while the rest of the fleet still serves at full precision.
+        futs = [svc.submit(names[1], rows[i]) for i in range(64)]
+        out1 = np.concatenate([f.result(timeout=600) for f in futs])
+        np.testing.assert_array_equal(out1, goldens[names[1]][:64])
+
+        # -- breaker honored per endpoint: trip m2, fail fast, recover -------
+        svc.enable_breaker(names[2], BreakerPolicy(consecutive_failures=2,
+                                                   open_s=0.05))
+        ep2 = svc.endpoint(names[2])
+        ep2.breaker.record_failure()
+        ep2.breaker.record_failure()  # tripped: OPEN
+        try:
+            svc.submit(names[2], rows[0])
+            raise AssertionError("open breaker accepted a submission")
+        except CircuitOpenError:
+            pass
+        time.sleep(0.1)  # open_s elapses: probes admitted (HALF_OPEN)
+        probe_out = []
+        for i in range(4):  # serve probes solo until the breaker closes
+            probe_out.append(svc.submit(names[2], rows[i]).result(timeout=600))
+        np.testing.assert_array_equal(np.concatenate(probe_out),
+                                      goldens[names[2]][:4])
+        assert ep2.breaker.state == ep2.breaker.CLOSED, ep2.breaker.state
+        # ... and a closed breaker rides the stack again, bit-identically.
+        futs = [svc.submit(names[2], rows[i]) for i in range(64)]
+        out2 = np.concatenate([f.result(timeout=600) for f in futs])
+        np.testing.assert_array_equal(out2, goldens[names[2]][:64])
+
+        snap_end = svc.stats()
+        fl_end = snap_end["_fleets"][0]
+    finally:
+        svc.close()
+        svc_solo.close()  # idempotent when the measurement closed it
+    check_results(fleet_results)
+
+    speedup = fleet_cps / solo_cps
+    flash = arts[0].memory_report()["flash"]
+    row = {
+        "kind": "mlp-fleet", "format": "fxp16", "backend": "pallas",
+        "n_endpoints": N_ENDPOINTS, "n_requests_per_endpoint": n_requests,
+        "rows_per_request": CHUNK, "max_batch": MAX_BATCH, "trials": trials,
+        "flash_bytes_per_model": flash,
+        "per_endpoint_cps": solo_cps,
+        "coalesced_cps": fleet_cps,
+        "fleet_speedup": speedup,
+        "stack_dispatches_per_round": stack_dispatches,
+        "coalescer_rounds": fl["rounds"],
+        "coalescer_stacked_dispatches": fl["stacked_dispatches"],
+        "coalescer_solo_batches": fl_end["solo_batches"],
+        "coalescer_stack_fallbacks": fl_end["stack_fallbacks"],
+        "coalesced_batch_fraction": (coalesced_batches / total_batches
+                                     if total_batches else 0.0),
+        "staging_allocs": fl_end["staging_allocs"],
+        "assembly_s": fl_end["assembly_s"],
+        "device_s": fl_end["device_s"],
+    }
+    print(f"serve_fleet: {N_ENDPOINTS} endpoints x {n_requests} x "
+          f"{CHUNK}-row reqs | per-endpoint {solo_cps:,.0f} cls/s | "
+          f"coalesced {fleet_cps:,.0f} cls/s ({speedup:.2f}x) | "
+          f"{fl['rounds']} rounds = {fl['stacked_dispatches']} stacked "
+          f"dispatches, {row['coalesced_batch_fraction']:.0%} batches "
+          f"coalesced | assembly {fl_end['assembly_s'] * 1e3:.1f}ms vs "
+          f"device {fl_end['device_s'] * 1e3:.1f}ms")
+    return row
+
+
+def run(smoke: bool = False) -> dict:
+    row = bench_fleet(n_requests=64 if smoke else 256,
+                      trials=5 if smoke else 7)
+    return {"rows": [row], "smoke": smoke,
+            "fleet_speedup": row["fleet_speedup"],
+            "stack_dispatches_per_round": row["stack_dispatches_per_round"],
+            "rounds_match_dispatches": (row["coalescer_rounds"]
+                                        == row["coalescer_stacked_dispatches"]),
+            "assembly_s": row["assembly_s"], "device_s": row["device_s"]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + enforce the acceptance gates")
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    args = ap.parse_args(argv)
+    result = run(smoke=args.smoke)
+    text = json.dumps(result, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    # Gates live in the CLI, not run(): benchmarks/run.py drives run()
+    # inside a keep-going harness that a hard exit would abort.
+    if args.smoke:
+        if result["fleet_speedup"] < 2.0:
+            raise SystemExit(
+                f"ACCEPTANCE FAIL: coalesced serving "
+                f"{result['fleet_speedup']:.2f}x < 2x per-endpoint dispatch")
+        if result["stack_dispatches_per_round"] != 1:
+            raise SystemExit(
+                f"ACCEPTANCE FAIL: {result['stack_dispatches_per_round']} "
+                f"kernel dispatches per coalesced round (want 1)")
+        if not result["rounds_match_dispatches"]:
+            raise SystemExit("ACCEPTANCE FAIL: coalescer rounds != stacked "
+                             "dispatches (extra per-round dispatches)")
+
+
+if __name__ == "__main__":
+    main()

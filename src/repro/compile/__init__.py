@@ -25,6 +25,7 @@ from .api import (compile, compile_from_params, resolve_mesh_strategy,
                   specialize_mesh)
 from .artifact import ArtifactIntegrityError, CompiledArtifact, load
 from .fingerprint import fingerprint_params
+from .fleet import FleetStack, fleet_signature, stack_fleet
 from .registry import (Lowered, Lowering, get_lowering, lowering_kinds,
                        model_kind, register_lowering)
 from .target import BACKENDS, CALIBRATED_FORMATS, NUMBER_FORMATS, Target
@@ -43,6 +44,9 @@ __all__ = [
     "CALIBRATED_FORMATS",
     "BACKENDS",
     "fingerprint_params",
+    "FleetStack",
+    "fleet_signature",
+    "stack_fleet",
     "Lowering",
     "Lowered",
     "register_lowering",

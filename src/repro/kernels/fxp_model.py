@@ -69,10 +69,17 @@ from .fxp_layer import LAYER_ACTIVATIONS
 from .tune import _VMEM_BUDGET
 
 __all__ = ["fxp_mlp_model_pallas", "fxp_svm_model_pallas", "LayerSchedule",
-           "mlp_fits_vmem", "svm_fits_vmem", "vmem_budget", "SVM_KERNELS"]
+           "mlp_fits_vmem", "svm_fits_vmem", "vmem_budget", "SVM_KERNELS",
+           "fxp_mlp_fleet_pallas", "fxp_svm_fleet_pallas", "FleetSchedules",
+           "SvmFleetParams", "mlp_fleet_fits_vmem", "svm_fleet_fits_vmem",
+           "mlp_fleet_vmem_bytes", "svm_fleet_vmem_bytes"]
 
 # One entry per layer: (requantization shift, output format, activation).
 LayerSchedule = Tuple[Tuple[int, FxpFormat, str], ...]
+# One LayerSchedule per stacked model (fleet kernels).
+FleetSchedules = Tuple[LayerSchedule, ...]
+# One per stacked SVM: (fmt, out_fmt, qgamma, qcoef0, degree, dec_shift).
+SvmFleetParams = Tuple[Tuple[FxpFormat, FxpFormat, int, int, int, int], ...]
 
 SVM_KERNELS = ("poly", "rbf")
 
@@ -145,6 +152,35 @@ def svm_fits_vmem(n_sv: int, n_feat: int, n_classes: int, bits: int,
     return svm_vmem_bytes(n_sv, n_feat, n_classes, bits, bm) <= vmem_budget()
 
 
+def mlp_fleet_vmem_bytes(n_models: int, widths: Sequence[int], bits: int,
+                         bm: int = 128) -> int:
+    """Worst-case resident bytes of one MLP *fleet* grid step: ``n_models``
+    stacked copies of a single-model step (every member's weights, the
+    model-block of inputs/outputs, and the widened intermediates all carry
+    the leading model axis)."""
+    return int(n_models) * mlp_vmem_bytes(widths, bits, bm)
+
+
+def svm_fleet_vmem_bytes(n_models: int, n_sv: int, n_feat: int,
+                         n_classes: int, bits: int, bm: int = 128) -> int:
+    """Worst-case resident bytes of one SVM *fleet* grid step."""
+    return int(n_models) * svm_vmem_bytes(n_sv, n_feat, n_classes, bits, bm)
+
+
+def mlp_fleet_fits_vmem(n_models: int, widths: Sequence[int], bits: int,
+                        bm: int = 128) -> bool:
+    """Whether a model-block of ``n_models`` stacked MLPs fits the budget
+    (the fleet-stacking eligibility check; ``n_models`` is the model-axis
+    block, not necessarily the whole fleet — the tuner may split it)."""
+    return mlp_fleet_vmem_bytes(n_models, widths, bits, bm) <= vmem_budget()
+
+
+def svm_fleet_fits_vmem(n_models: int, n_sv: int, n_feat: int,
+                        n_classes: int, bits: int, bm: int = 128) -> bool:
+    return (svm_fleet_vmem_bytes(n_models, n_sv, n_feat, n_classes, bits, bm)
+            <= vmem_budget())
+
+
 # --------------------------------------------------------------------------
 # MLP megakernel
 # --------------------------------------------------------------------------
@@ -212,11 +248,15 @@ def fxp_mlp_model_pallas(x: jax.Array, weights: Tuple[jax.Array, ...],
 # --------------------------------------------------------------------------
 # kernel-SVM megakernel (kernel evaluation + vote, one dispatch)
 # --------------------------------------------------------------------------
-def _svm_kernel(x_ref, sv_ref, dual_ref, icept_ref, o_ref, *, kind: str,
-                fmt: FxpFormat, out_fmt: FxpFormat, qgamma: int, qcoef0: int,
-                degree: int, dec_shift: int):
-    qx = x_ref[...]
-    qsv = sv_ref[...]
+def _svm_forward(qx, qsv, dual, icept, *, kind: str, fmt: FxpFormat,
+                 out_fmt: FxpFormat, qgamma: int, qcoef0: int, degree: int,
+                 dec_shift: int):
+    """The whole decision function on 2-D values (bm, F) -> (bm, C).
+
+    Shared between the single-model kernel body and the fleet kernel's
+    per-model branches — one spelling of the algebra, one bit-identity
+    contract.
+    """
     # x . sv^T without materializing the transpose: contract the shared
     # feature axis.  Integer dot == fxp_qmatmul's accumulate, then the
     # single-format requantize (input/sv/kernel share one plan group).
@@ -245,11 +285,20 @@ def _svm_kernel(x_ref, sv_ref, dual_ref, icept_ref, o_ref, *, kind: str,
     # Decision stage: the fused-layer epilogue (k @ dual, cross-format
     # shift, saturating intercept add) still inside the same kernel body.
     acc = jax.lax.dot_general(
-        k.astype(jnp.int32), dual_ref[...].astype(jnp.int32),
+        k.astype(jnp.int32), dual.astype(jnp.int32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
     out = fixedpoint.requantize(acc, dec_shift, out_fmt)
-    out = fixedpoint.qadd(out, icept_ref[...][None, :], out_fmt)
-    o_ref[...] = out.astype(out_fmt.dtype)
+    out = fixedpoint.qadd(out, icept[None, :], out_fmt)
+    return out.astype(out_fmt.dtype)
+
+
+def _svm_kernel(x_ref, sv_ref, dual_ref, icept_ref, o_ref, *, kind: str,
+                fmt: FxpFormat, out_fmt: FxpFormat, qgamma: int, qcoef0: int,
+                degree: int, dec_shift: int):
+    o_ref[...] = _svm_forward(
+        x_ref[...], sv_ref[...], dual_ref[...], icept_ref[...], kind=kind,
+        fmt=fmt, out_fmt=out_fmt, qgamma=qgamma, qcoef0=qcoef0,
+        degree=degree, dec_shift=dec_shift)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -290,5 +339,261 @@ def fxp_svm_model_pallas(qx: jax.Array, sv: jax.Array, dual: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, c), out_fmt.dtype),
+        interpret=interpret,
+    )(qx, sv, dual, icept)
+
+
+# --------------------------------------------------------------------------
+# Fleet kernels: E stacked models, ONE dispatch
+# --------------------------------------------------------------------------
+# Every operand gains a leading model axis and the grid iterates (model
+# blocks, batch blocks).  Two regimes:
+#
+# * **uniform** — every stacked model shares one LayerSchedule (fixed-format
+#   fleets: same shifts, formats, activations).  The kernel batches the MXU
+#   dot over the model axis (`be` models per grid step) and the shared
+#   epilogue applies elementwise — identical math to `be` single-model
+#   steps, one grid traversal.
+# * **heterogeneous** — calibrated fleets where each member froze its own
+#   shift/format schedule.  The model block is 1 and the kernel selects the
+#   member's *static* branch with ``jax.lax.switch`` over the distinct
+#   schedules (one traced branch per unique schedule, picked by the grid's
+#   model index) — per-model static arguments without per-model dispatches.
+#
+# Bit-safety of stacking mirrors single-model padding: models never mix
+# (the dot's batch/model axis never contracts), so slot e of the output is
+# exactly what model e's single dispatch computes.
+def _uniq_branches(items) -> Tuple[list, list]:
+    """Distinct entries (first-seen order) + the static model->entry map."""
+    uniq = []
+    for it in items:
+        if it not in uniq:
+            uniq.append(it)
+    return uniq, [uniq.index(it) for it in items]
+
+
+def _branch_index(indices) -> "jnp.ndarray":
+    """Traced branch index for the current grid step's model.
+
+    ``indices[e]`` is model e's (static) branch; pallas kernels cannot
+    capture array constants, so the lookup is an unrolled scalar
+    ``where``-chain over the grid's model index — fleets are small (tens
+    of members), the chain folds to a handful of scalar selects.
+    """
+    pid = pl.program_id(0)
+    idx = jnp.int32(0)
+    for e_i, u_i in enumerate(indices):
+        if u_i != 0:
+            idx = jnp.where(pid == e_i, jnp.int32(u_i), idx)
+    return idx
+
+
+def _mlp_layer_step(h, w, b, shift: int, fmt: FxpFormat, activation: str,
+                    batched: bool):
+    """One fused layer on (bm, K) values — or (be, bm, K) when ``batched``,
+    contracting K with the model axis as a dot_general batch dim."""
+    if batched:
+        dims = (((2,), (1,)), ((0,), (0,)))
+        bias = b[:, None, :]
+    else:
+        dims = (((1,), (0,)), ((), ()))
+        bias = b[None, :]
+    acc = jax.lax.dot_general(h.astype(jnp.int32), w.astype(jnp.int32),
+                              dims, preferred_element_type=jnp.int32)
+    h = fixedpoint.requantize(acc, shift, fmt)
+    h = fixedpoint.qadd(h, bias, fmt)
+    if activation != "none":
+        h = get_qsigmoid(activation)(h, fmt)
+    return h.astype(fmt.dtype)
+
+
+def _mlp_fleet_kernel(*refs, schedules: FleetSchedules, be: int):
+    # refs = (x, w0, b0, ..., out); every block carries a leading model axis
+    # of size ``be``.
+    x_ref, o_ref = refs[0], refs[-1]
+    wb = refs[1:-1]
+    uniq, indices = _uniq_branches(schedules)
+    if len(uniq) == 1:
+        # Uniform schedule: batch the dot over the model axis; the static
+        # layer loop unrolls exactly like the single-model megakernel.
+        h = x_ref[...]
+        for (shift, fmt, act), w_ref, b_ref in zip(uniq[0], wb[0::2],
+                                                   wb[1::2]):
+            h = _mlp_layer_step(h, w_ref[...], b_ref[...], shift, fmt, act,
+                                batched=True)
+        o_ref[...] = h
+        return
+    # Heterogeneous: one model per grid step (be == 1), one branch per
+    # distinct schedule, selected by the model index — static per-model
+    # schedules without per-model dispatches.
+    n = len(wb) // 2
+
+    def _branch(sched: LayerSchedule):
+        def run(h, *wb_vals):
+            for (shift, fmt, act), w, b in zip(sched, wb_vals[:n],
+                                               wb_vals[n:]):
+                h = _mlp_layer_step(h, w, b, shift, fmt, act, batched=False)
+            return h
+        return run
+
+    out = jax.lax.switch(
+        _branch_index(indices), [_branch(s) for s in uniq], x_ref[0],
+        *[w_ref[0] for w_ref in wb[0::2]],
+        *[b_ref[0] for b_ref in wb[1::2]])
+    o_ref[...] = out[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("schedules", "be", "bm", "interpret"))
+def fxp_mlp_fleet_pallas(x: jax.Array, weights: Tuple[jax.Array, ...],
+                         biases: Tuple[jax.Array, ...],
+                         schedules: FleetSchedules, be: int = 1,
+                         bm: int = 128, interpret: bool = False) -> jax.Array:
+    """E stacked MLP forward passes in one ``pallas_call``.
+
+    x: (E, M, K0); weights[i]: (E, K_i, K_{i+1}); biases[i]: (E, K_{i+1});
+    ``schedules`` holds model e's static layer plan at index e.  Grid =
+    (E/be, M/bm); heterogeneous schedules require ``be == 1`` (the kernel
+    switches per-model branches by grid index).  Slot e of the (E, M, C)
+    output is bit-identical to model e's own single-model dispatch.
+    """
+    e, m, k0 = x.shape
+    if len(schedules) != e:
+        raise ValueError(f"{len(schedules)} schedules for {e} stacked models")
+    if not (len(weights) == len(biases) == len(schedules[0]) >= 1):
+        raise ValueError("weights/biases/schedules must align, >= 1 layer")
+    for sched in schedules:
+        if len(sched) != len(schedules[0]):
+            raise ValueError("stacked models must share the layer count")
+        for _, fmt, activation in sched:
+            if activation not in LAYER_ACTIVATIONS:
+                raise KeyError(
+                    f"activation must be one of {LAYER_ACTIVATIONS}")
+            if fmt.dtype != schedules[0][0][1].dtype:
+                raise ValueError("stacked models must share the container")
+    if len(set(schedules)) > 1 and be != 1:
+        raise ValueError("heterogeneous schedules require be == 1")
+    assert e % be == 0 and m % bm == 0, (x.shape, be, bm)
+    out_fmt = schedules[0][-1][1]
+    n_out = weights[-1].shape[2]
+
+    in_specs = [pl.BlockSpec((be, bm, k0), lambda ei, mi: (ei, mi, 0))]
+    for w, b in zip(weights, biases):
+        in_specs.append(
+            pl.BlockSpec((be,) + w.shape[1:], lambda ei, mi: (ei, 0, 0)))
+        in_specs.append(
+            pl.BlockSpec((be,) + b.shape[1:], lambda ei, mi: (ei, 0)))
+
+    return pl.pallas_call(
+        functools.partial(_mlp_fleet_kernel, schedules=schedules, be=be),
+        grid=(e // be, m // bm),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((be, bm, n_out), lambda ei, mi: (ei, mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n_out), out_fmt.dtype),
+        interpret=interpret,
+    )(x, *chain.from_iterable(zip(weights, biases)))
+
+
+def _svm_forward_batched(qx, qsv, dual, icept, *, kind: str, fmt: FxpFormat,
+                         out_fmt: FxpFormat, qgamma: int, qcoef0: int,
+                         degree: int, dec_shift: int):
+    """The decision function on model-stacked values (be, bm, F) -> (be, bm,
+    C): the same algebra as :func:`_svm_forward` with the model axis riding
+    as a dot_general batch dimension (models never mix)."""
+    dot = jax.lax.dot_general(
+        qx.astype(jnp.int32), qsv.astype(jnp.int32),
+        (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    dot = fixedpoint.requantize(dot, fmt.frac_bits, fmt)
+    g = jnp.asarray(qgamma, fmt.dtype)
+    if kind == "poly":
+        k = fixedpoint.qadd(fixedpoint.qmul(dot, g, fmt),
+                            jnp.asarray(qcoef0, fmt.dtype), fmt)
+        k = fixedpoint.qpow_int(k, degree, fmt)
+    else:  # rbf
+        def _qsq_norm(qv):
+            wide = qv.astype(fmt.wide_dtype)
+            acc = jnp.sum(wide * wide, axis=-1)
+            return fixedpoint.rshift_round_saturate(acc, fmt)
+
+        x2 = _qsq_norm(qx)
+        sv2 = _qsq_norm(qsv)
+        d2 = fixedpoint.qadd(
+            fixedpoint.qsub(x2[:, :, None],
+                            fixedpoint.qadd(dot, dot, fmt), fmt),
+            sv2[:, None, :], fmt)
+        arg = fixedpoint.qneg(fixedpoint.qmul(d2, g, fmt), fmt)
+        k = fixedpoint.qexp(arg, fmt)
+    acc = jax.lax.dot_general(
+        k.astype(jnp.int32), dual.astype(jnp.int32),
+        (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.int32)
+    out = fixedpoint.requantize(acc, dec_shift, out_fmt)
+    out = fixedpoint.qadd(out, icept[:, None, :], out_fmt)
+    return out.astype(out_fmt.dtype)
+
+
+def _svm_fleet_kernel(x_ref, sv_ref, dual_ref, icept_ref, o_ref, *,
+                      kind: str, params: SvmFleetParams, be: int):
+    uniq, indices = _uniq_branches(params)
+    if len(uniq) == 1:
+        fmt, out_fmt, qgamma, qcoef0, degree, dec_shift = uniq[0]
+        o_ref[...] = _svm_forward_batched(
+            x_ref[...], sv_ref[...], dual_ref[...], icept_ref[...],
+            kind=kind, fmt=fmt, out_fmt=out_fmt, qgamma=qgamma,
+            qcoef0=qcoef0, degree=degree, dec_shift=dec_shift)
+        return
+
+    def _branch(p):
+        fmt, out_fmt, qgamma, qcoef0, degree, dec_shift = p
+
+        def run(qx, qsv, dual, icept):
+            return _svm_forward(qx, qsv, dual, icept, kind=kind, fmt=fmt,
+                                out_fmt=out_fmt, qgamma=qgamma,
+                                qcoef0=qcoef0, degree=degree,
+                                dec_shift=dec_shift)
+        return run
+
+    out = jax.lax.switch(
+        _branch_index(indices), [_branch(p) for p in uniq], x_ref[0],
+        sv_ref[0], dual_ref[0], icept_ref[0])
+    o_ref[...] = out[None]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "params", "be", "bm",
+                                             "interpret"))
+def fxp_svm_fleet_pallas(qx: jax.Array, sv: jax.Array, dual: jax.Array,
+                         icept: jax.Array, kind: str, params: SvmFleetParams,
+                         be: int = 1, bm: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """E stacked kernel-SVM decision functions in one ``pallas_call``.
+
+    qx: (E, M, F); sv: (E, S, F); dual: (E, S, C); icept: (E, C); ``params``
+    holds model e's static (fmt, out_fmt, qgamma, qcoef0, degree, dec_shift)
+    at index e.  Heterogeneous params require ``be == 1``.
+    """
+    if kind not in SVM_KERNELS:
+        raise KeyError(f"kind must be one of {SVM_KERNELS}")
+    e, m, f = qx.shape
+    s, c = dual.shape[1:]
+    if len(params) != e:
+        raise ValueError(f"{len(params)} param tuples for {e} stacked models")
+    assert sv.shape == (e, s, f) and icept.shape == (e, c), \
+        (qx.shape, sv.shape, dual.shape, icept.shape)
+    if len(set(params)) > 1 and be != 1:
+        raise ValueError("heterogeneous SVM params require be == 1")
+    assert e % be == 0 and m % bm == 0, (qx.shape, be, bm)
+    out_fmt = params[0][1]
+
+    return pl.pallas_call(
+        functools.partial(_svm_fleet_kernel, kind=kind, params=params,
+                          be=be),
+        grid=(e // be, m // bm),
+        in_specs=[
+            pl.BlockSpec((be, bm, f), lambda ei, mi: (ei, mi, 0)),
+            pl.BlockSpec((be, s, f), lambda ei, mi: (ei, 0, 0)),
+            pl.BlockSpec((be, s, c), lambda ei, mi: (ei, 0, 0)),
+            pl.BlockSpec((be, c), lambda ei, mi: (ei, 0)),
+        ],
+        out_specs=pl.BlockSpec((be, bm, c), lambda ei, mi: (ei, mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, m, c), out_fmt.dtype),
         interpret=interpret,
     )(qx, sv, dual, icept)

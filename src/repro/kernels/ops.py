@@ -36,14 +36,15 @@ from . import tune
 from . import fxp_model
 from .flash_attention import flash_attention_pallas
 from .fxp_layer import fxp_layer_pallas
-from .fxp_model import fxp_mlp_model_pallas, fxp_svm_model_pallas
+from .fxp_model import (fxp_mlp_fleet_pallas, fxp_mlp_model_pallas,
+                        fxp_svm_fleet_pallas, fxp_svm_model_pallas)
 from .fxp_qmatmul import fxp_qmatmul_pallas
 from .pwl_activation import pwl_activation_pallas
 from .tree_ensemble import pack_tree, tree_ensemble_pallas
 
 __all__ = ["fxp_qmatmul", "fxp_layer", "fxp_mlp_model", "fxp_svm_model",
-           "pwl_activation", "tree_predict", "flash_attention",
-           "count_dispatches"]
+           "fxp_mlp_fleet", "fxp_svm_fleet", "pwl_activation",
+           "tree_predict", "flash_attention", "count_dispatches"]
 
 
 def _on_tpu() -> bool:
@@ -335,6 +336,126 @@ def _padded_svm_operands(qx, sv, dual, icept):
     dp, _ = _pad_axis(dual, 0, _LANE)
     dp, _ = _pad_axis(dp, 1, _LANE)
     ip, _ = _pad_axis(icept, 0, _LANE)
+    return xp, svp, dp, ip
+
+
+def fxp_mlp_fleet(x: jax.Array, weights, biases, schedules,
+                  impl: str = "pallas", be: Optional[int] = None,
+                  bm: Optional[int] = None) -> jax.Array:
+    """E stacked MLP forward passes — the whole *fleet* — in ONE dispatch.
+
+    x: (E, M, K0); ``weights[i]``/``biases[i]`` carry the leading model
+    axis; ``schedules[e]`` is model e's static layer plan (heterogeneous
+    plans are legal — the kernel branches per model).  Slot e of the
+    output is bit-identical to model e's own :func:`fxp_mlp_model` call;
+    the (be, bm) blocking consults the fleet autotuner entry.
+    """
+    _tick()
+    weights, biases = tuple(weights), tuple(biases)
+    schedules = tuple(schedules)
+    if impl in ("xla", "ref"):
+        return ref_ops.fxp_mlp_fleet_ref(x, weights, biases, schedules)
+    e, m, k0 = x.shape
+    dims = (k0,) + tuple(int(w.shape[2]) for w in weights)
+    bits = schedules[0][0][1].total_bits
+    uniform = len(set(schedules)) == 1
+    if be is None or bm is None:
+        tbe, tbm = tune.fleet_blocks(
+            "mlp", e, m, dims, bits, uniform=uniform,
+            vmem_bytes=lambda eb, b: fxp_model.mlp_fleet_vmem_bytes(
+                eb, dims, bits, b),
+            budget=fxp_model.vmem_budget())
+        be = tbe if be is None else be
+        bm = tbm if bm is None else bm
+    if not uniform:
+        be = 1
+    xp, m0 = _pad_axis(x, 1, bm)
+    # Pad the model axis to the block multiple: padded slots run the first
+    # member's (static, uniform) schedule on zero weights and are sliced
+    # off — same bit-safety argument as batch padding.
+    rem = (-e) % be
+    if rem:
+        xp, _ = _pad_axis(xp, 0, be)
+        weights = tuple(_pad_axis(w, 0, be)[0] for w in weights)
+        biases = tuple(_pad_axis(b, 0, be)[0] for b in biases)
+        schedules = schedules + (schedules[0],) * rem
+    xp, wp, bp = _padded_fleet_mlp_operands(xp, weights, biases)
+    out = fxp_mlp_fleet_pallas(xp, wp, bp, schedules, be=be, bm=bm,
+                               interpret=not _on_tpu())
+    return out[:e, :m0, :dims[-1]]
+
+
+def _padded_fleet_mlp_operands(x, weights, biases):
+    """Lane-tile the fleet megakernel's feature axes on real TPU (no-op off
+    TPU) — the model axis is never tiled, only the trailing feature dims."""
+    if not _on_tpu():
+        return x, tuple(weights), tuple(biases)
+    xp, _ = _pad_axis(x, 2, _LANE)
+    ws, bs = [], []
+    for w, b in zip(weights, biases):
+        wpad, _ = _pad_axis(w, 1, _LANE)
+        wpad, _ = _pad_axis(wpad, 2, _LANE)
+        bpad, _ = _pad_axis(b, 1, _LANE)
+        ws.append(wpad)
+        bs.append(bpad)
+    return xp, tuple(ws), tuple(bs)
+
+
+def fxp_svm_fleet(qx: jax.Array, sv: jax.Array, dual: jax.Array,
+                  icept: jax.Array, kind: str, params,
+                  impl: str = "pallas", be: Optional[int] = None,
+                  bm: Optional[int] = None) -> jax.Array:
+    """E stacked kernel-SVM decision functions in ONE dispatch.
+
+    qx: (E, M, F); sv: (E, S, F); dual: (E, S, C); icept: (E, C);
+    ``params[e]`` = model e's static (fmt, out_fmt, qgamma, qcoef0, degree,
+    dec_shift) tuple.  Slot e is bit-identical to model e's own
+    :func:`fxp_svm_model` call.
+    """
+    _tick()
+    params = tuple(tuple(p) for p in params)
+    if impl in ("xla", "ref"):
+        return ref_ops.fxp_svm_fleet_ref(qx, sv, dual, icept, kind, params)
+    e, m, n_feat = qx.shape
+    n_sv, n_cls = dual.shape[1:]
+    bits = params[0][0].total_bits
+    uniform = len(set(params)) == 1
+    if be is None or bm is None:
+        tbe, tbm = tune.fleet_blocks(
+            f"svm-{kind}", e, m, (n_feat, n_sv, n_cls), bits,
+            uniform=uniform,
+            vmem_bytes=lambda eb, b: fxp_model.svm_fleet_vmem_bytes(
+                eb, n_sv, n_feat, n_cls, bits, b),
+            budget=fxp_model.vmem_budget())
+        be = tbe if be is None else be
+        bm = tbm if bm is None else bm
+    if not uniform:
+        be = 1
+    xp, m0 = _pad_axis(qx, 1, bm)
+    rem = (-e) % be
+    if rem:
+        xp, _ = _pad_axis(xp, 0, be)
+        sv, _ = _pad_axis(sv, 0, be)
+        dual, _ = _pad_axis(dual, 0, be)
+        icept, _ = _pad_axis(icept, 0, be)
+        params = params + (params[0],) * rem
+    xp, svp, dp, ip = _padded_fleet_svm_operands(xp, sv, dual, icept)
+    out = fxp_svm_fleet_pallas(xp, svp, dp, ip, kind, params, be=be, bm=bm,
+                               interpret=not _on_tpu())
+    return out[:e, :m0, :n_cls]
+
+
+def _padded_fleet_svm_operands(qx, sv, dual, icept):
+    """Lane-tile the SVM fleet operands' trailing dims on real TPU (no-op
+    off TPU); the model axis is never tiled."""
+    if not _on_tpu():
+        return qx, sv, dual, icept
+    xp, _ = _pad_axis(qx, 2, _LANE)
+    svp, _ = _pad_axis(sv, 1, _LANE)
+    svp, _ = _pad_axis(svp, 2, _LANE)
+    dp, _ = _pad_axis(dual, 1, _LANE)
+    dp, _ = _pad_axis(dp, 2, _LANE)
+    ip, _ = _pad_axis(icept, 1, _LANE)
     return xp, svp, dp, ip
 
 

@@ -17,8 +17,9 @@ from repro.core.activations import (get_qsigmoid, sigmoid_pwl2, sigmoid_pwl4,
 from repro.core.trees import TreeArrays, predict_oblivious
 
 __all__ = ["fxp_qmatmul_ref", "fxp_layer_ref", "fxp_layer_ref_with_stats",
-           "fxp_mlp_model_ref", "fxp_svm_model_ref", "pwl_activation_ref",
-           "tree_ensemble_ref", "flash_attention_ref"]
+           "fxp_mlp_model_ref", "fxp_svm_model_ref", "fxp_mlp_fleet_ref",
+           "fxp_svm_fleet_ref", "pwl_activation_ref", "tree_ensemble_ref",
+           "flash_attention_ref"]
 
 
 def fxp_qmatmul_ref(a: jax.Array, b: jax.Array, fmt: fxp.FxpFormat,
@@ -110,6 +111,29 @@ def fxp_svm_model_ref(qx: jax.Array, sv: jax.Array, dual: jax.Array,
     else:
         raise KeyError(f"kind must be 'poly' or 'rbf', got {kind!r}")
     return fxp_layer_ref(k, dual, icept, out_fmt, "none", dec_shift)
+
+
+def fxp_mlp_fleet_ref(x: jax.Array, weights, biases, schedules) -> jax.Array:
+    """Fleet-stacked MLP oracle: the single-model oracle per slot, stacked.
+
+    x: (E, M, K0); weights[i]: (E, K_i, K_{i+1}); biases[i]: (E, K_{i+1});
+    ``schedules[e]`` is model e's static layer plan.  Slot e of the output
+    IS model e's :func:`fxp_mlp_model_ref` — the fleet kernel's contract
+    that stacking never mixes models is checked against exactly this.
+    """
+    return jnp.stack([
+        fxp_mlp_model_ref(x[e], [w[e] for w in weights],
+                          [b[e] for b in biases], schedules[e])
+        for e in range(x.shape[0])])
+
+
+def fxp_svm_fleet_ref(qx: jax.Array, sv: jax.Array, dual: jax.Array,
+                      icept: jax.Array, kind: str, params) -> jax.Array:
+    """Fleet-stacked kernel-SVM oracle (see :func:`fxp_mlp_fleet_ref`);
+    ``params[e]`` = (fmt, out_fmt, qgamma, qcoef0, degree, dec_shift)."""
+    return jnp.stack([
+        fxp_svm_model_ref(qx[e], sv[e], dual[e], icept[e], kind, *params[e])
+        for e in range(qx.shape[0])])
 
 
 def pwl_activation_ref(x: jax.Array, variant: str) -> jax.Array:

@@ -38,9 +38,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 
-__all__ = ["matmul_blocks", "model_block_m", "batch_bucket", "pwl_blocks",
-           "pow2ceil", "cache_path", "clear_memory_cache", "cache_snapshot",
-           "device_key"]
+__all__ = ["matmul_blocks", "model_block_m", "fleet_blocks", "batch_bucket",
+           "pwl_blocks", "pow2ceil", "cache_path", "clear_memory_cache",
+           "cache_snapshot", "device_key"]
 
 Blocks = Tuple[int, int, int]
 Runner = Callable[[Blocks], float]
@@ -355,3 +355,73 @@ def model_block_m(kind: str, m: int, dims: Tuple[int, ...], bits: int,
         got = _memory.setdefault(key, (int(bm), 1, 1))
     _save_disk()
     return int(got[0])
+
+
+def fleet_blocks(kind: str, n_models: int, m: int, dims: Tuple[int, ...],
+                 bits: int, uniform: bool = True,
+                 vmem_bytes: Optional[Callable[[int, int], float]] = None,
+                 budget: Optional[int] = None,
+                 runner: Optional[Callable[[Tuple[int, int]], float]] = None,
+                 ) -> Tuple[int, int]:
+    """Tuned (be, bm) for a fleet-stacked megakernel dispatch.
+
+    A fleet dispatch has two grid axes — model blocks of ``be`` stacked
+    members and batch blocks of ``bm`` rows — so the tuning problem is a
+    2-D sweep bounded by ``vmem_bytes(be, bm) <= budget``.  Heterogeneous
+    fleets (``uniform=False``: members froze distinct layer schedules) pin
+    ``be = 1`` — the kernel switches per-model static branches by grid
+    index and cannot batch the dot across models.  Keys carry the fleet
+    size, uniformity, the pow2-bucketed batch, the member dim signature,
+    the container width, and the dispatching device; stored as
+    ``(be, bm, 1)`` so the disk format stays uniform with the other kinds.
+
+    Off TPU the deterministic cost model minimizes padded work plus a
+    per-grid-step charge; on TPU with a ``runner`` the feasible pairs are
+    wall-time swept like :func:`matmul_blocks`.
+    """
+    e = max(1, int(n_models))
+    mb = batch_bucket(m, cap=1 << 30)
+    sig = "x".join(str(int(d)) for d in dims)
+    key = (f"fleet-{kind}|E{e}|u{int(bool(uniform))}|{mb}|d{sig}"
+           f"|w{int(bits)}|{device_key()}")
+    with _lock:
+        hit = _memory.get(key)
+        if hit is None:
+            _load_disk()
+            hit = _memory.get(key)
+        if hit is not None:
+            return int(hit[0]), int(hit[1])
+    on_tpu = jax.default_backend() == "tpu"
+    floor = _TPU_SUBLANE[int(bits)] if on_tpu else 1
+    bms = _pow2s_upto(max(floor, min(128, pow2ceil(mb))), floor)
+    bes = ([b for b in _pow2s_upto(pow2ceil(e), 1) if b <= e]
+           if uniform else [1])
+    limit = _VMEM_BUDGET if budget is None else budget
+    cands = [(be, bm) for be in bes for bm in bms
+             if vmem_bytes is None or vmem_bytes(be, bm) <= limit]
+    if not cands:
+        cands = [(1, bms[0])]  # callers gate on the fleet fit predicate
+    # Per-row MAC weight of one stacked member: the matmul chain over dims.
+    row_macs = max(1, sum(i * o for i, o in zip(dims, dims[1:])))
+
+    def _cost(cand: Tuple[int, int]) -> float:
+        be, bm = cand
+        ep = -(-e // be) * be
+        mp = -(-mb // bm) * bm
+        steps = (ep // be) * (mp // bm)
+        return ep * mp * row_macs + steps * _STEP_COST
+
+    be, bm = min(cands, key=lambda c: (_cost(c), -(c[0] * c[1])))
+    if on_tpu and runner is not None:
+        best_t = float("inf")
+        for cand in cands:
+            try:
+                t = runner(cand)
+            except Exception:
+                continue  # candidate rejected by the compiler: skip
+            if t < best_t:
+                (be, bm), best_t = cand, t
+    with _lock:
+        got = _memory.setdefault(key, (int(be), int(bm), 1))
+    _save_disk()
+    return int(got[0]), int(got[1])

@@ -102,12 +102,16 @@ def serve_classifier(args) -> None:
         ep = svc.register(args.classifier, model, target, mesh=mesh,
                           policy=BatchingPolicy(max_batch=64 * max(1, args.dp)),
                           # auto* formats calibrate on the training split
-                          calibration=x[:1024] if target.is_calibrated else None)
+                          calibration=x[:1024] if target.is_calibrated else None,
+                          # warm tuner + jit caches over the bucket ladder at
+                          # registration instead of on the first live requests
+                          pretune=x[:1] if args.pretune else False)
         art = ep.artifact
         print(f"endpoint {args.classifier}: {target.number_format}/"
               f"{target.backend}, replicas={art.replicas}"
               + (f" ({art.mesh_strategy})" if art.mesh is not None else "")
-              + f", buckets={ep.policy.buckets()}")
+              + f", buckets={ep.policy.buckets()}"
+              + (" [pretuned]" if args.pretune else ""))
         if args.degrade:
             if not target.is_calibrated:
                 raise SystemExit("--degrade needs a calibrated --format "
@@ -166,6 +170,10 @@ def main(argv=None):
                     default="xla", help="classifier serving backend")
     ap.add_argument("--requests", type=int, default=512,
                     help="rows of traffic to drive in classifier mode")
+    ap.add_argument("--pretune", action="store_true",
+                    help="warm the kernel autotuner and jit trace caches "
+                         "over the endpoint's bucket ladder at registration "
+                         "(classifier mode)")
     # network serving (classifier mode)
     ap.add_argument("--http", metavar="HOST:PORT",
                     help="serve the classifier endpoint over HTTP instead "

@@ -15,6 +15,10 @@ Layers (bottom-up):
 * :mod:`repro.serve.degrade` — :class:`PrecisionGovernor`: the
   load-adaptive precision state machine (overload -> serve the ``auto8``
   fallback artifact instead of shedding load; hysteretic recovery).
+* :mod:`repro.serve.fleet` — :class:`FleetCoalescer`: cross-endpoint
+  megabatching — compatible endpoints' in-flight micro-batches stacked
+  along a model axis and served by ONE fleet Pallas dispatch per round
+  (``InferenceService.enable_fleet``; see :mod:`repro.compile.fleet`).
 * :mod:`repro.serve.service` — :class:`InferenceService`: the facade
   ``launch/serve.py`` and the benchmarks drive.
 * :mod:`repro.serve.net` — the network serving plane: asyncio HTTP front
@@ -34,6 +38,7 @@ from .batching import BatchingPolicy, MicroBatcher
 from .cache import ArtifactCache
 from .degrade import DegradationPolicy, PrecisionGovernor
 from .faults import FaultInjector, FaultPlan, FaultRule, InjectedFault
+from .fleet import FleetCoalescer
 from .reliability import (BreakerPolicy, CircuitBreaker, CircuitOpenError,
                           DeadlineExceeded, DispatchError, RetryPolicy,
                           ServeError, TransientError)
@@ -50,6 +55,7 @@ __all__ = [
     "EndpointStats",
     "ModelRouter",
     "InferenceService",
+    "FleetCoalescer",
     "ServeError",
     "TransientError",
     "DeadlineExceeded",

@@ -166,6 +166,11 @@ def _fail(fut: Future, exc: BaseException) -> None:
         pass
 
 
+# detach_worker() wake-up sentinel: tells the worker thread to exit while
+# leaving the batcher open for an external driver (the fleet coalescer).
+_DETACH = object()
+
+
 # on_batch(n_requests, n_rows, bucket, per-request latencies in seconds,
 #          meta=batch metadata dict or None)
 OnBatch = Callable[[int, int, int, Sequence[float]], None]
@@ -216,6 +221,7 @@ class MicroBatcher:
         self._carry: Optional[_Request] = None  # didn't fit the last batch
         self._warmed = False
         self._closed = False
+        self._detached = False
         self._submit_lock = threading.Lock()  # orders submit() vs close()
         # Reliability counters (single-writer: the worker thread; readers
         # tolerate torn reads — they are monotone gauges for stats).
@@ -223,7 +229,24 @@ class MicroBatcher:
         self.n_retries = 0        # dispatch retries after transient faults
         self.n_dispatch_failures = 0  # failed dispatch attempts
         self.n_failed_requests = 0    # requests resolved with an error
-        self._worker = threading.Thread(
+        # Zero-copy assembly state.  Per-(bucket, row shape, dtype) pair of
+        # preallocated staging buffers, used alternately: JAX dispatch is
+        # async, so the host->device copy of round t may still be reading
+        # buffer A while round t+1 assembles into buffer B.  Allocation
+        # happens once per key — the steady state writes rows into a
+        # long-lived buffer instead of concatenate + fresh pad per dispatch.
+        self._staging: dict = {}
+        self._staging_parity: dict = {}
+        self.n_staging_allocs = 0       # staging buffers ever allocated
+        self.n_zero_copy_assemblies = 0  # batches assembled into staging
+        self.n_concat_assemblies = 0    # legacy concatenate fallbacks
+        self.n_batch1_fastpath = 0      # lone full-bucket requests, no copy
+        self.assembly_s = 0.0           # host batch-assembly time
+        self.device_s = 0.0             # predict + result materialization
+        # Optional hook fired after every successful submit() enqueue — the
+        # fleet coalescer's wake-up signal (no-arg callable, must not raise).
+        self.on_enqueue: Optional[Callable[[], None]] = None
+        self._worker: Optional[threading.Thread] = threading.Thread(
             target=self._run, name=f"microbatch-{name}", daemon=True)
         self._worker.start()
 
@@ -254,6 +277,12 @@ class MicroBatcher:
             if self._closed:
                 raise RuntimeError(f"MicroBatcher '{self.name}' is closed")
             self._queue.put(_Request(x, fut, now, deadline))
+        cb = self.on_enqueue
+        if cb is not None:
+            try:
+                cb()
+            except Exception:
+                pass  # a wake-up hook must never fail a submit
         return fut
 
     def depth(self) -> int:
@@ -277,8 +306,9 @@ class MicroBatcher:
             self._queue.put(None)  # sentinel; no submit can follow it
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
-        self._worker.join(timeout)
-        worker_done = not self._worker.is_alive()
+        if self._worker is not None:
+            self._worker.join(timeout)
+        worker_done = self._worker is None or not self._worker.is_alive()
         leftovers = []
         if worker_done and self._carry is not None:
             leftovers.append(self._carry)
@@ -288,6 +318,8 @@ class MicroBatcher:
                 req = self._queue.get_nowait()
             except queue.Empty:
                 break
+            if req is _DETACH:
+                continue  # stale detach wake-up; nothing to resolve
             if req is None:
                 # Shutdown sentinel.  If the worker overran the join timeout
                 # it still needs it to terminate — hand it back and stop
@@ -340,9 +372,16 @@ class MicroBatcher:
         self._carry = None
         while True:
             if first is None:
+                if self._detached:
+                    return None
                 first = self._queue.get()
                 if first is None:
                     return None
+            if first is _DETACH:
+                return None
+            if self._detached:
+                self._carry = first  # hand head-of-line to the driver
+                return None
             if not self._expired(first):
                 break
             self._expire(first)
@@ -363,6 +402,8 @@ class MicroBatcher:
             if req is None:  # shutdown: serve what we have, then exit
                 self._queue.put(None)
                 break
+            if req is _DETACH:  # detach: serve what we have, then exit
+                break
             if self._expired(req):
                 self._expire(req)
                 continue
@@ -372,6 +413,70 @@ class MicroBatcher:
             batch.append(req)
             rows += req.x.shape[0]
         return batch
+
+    # -- external-driver interface (the fleet coalescer) ---------------------
+    def detach_worker(self, timeout: float = 5.0) -> None:
+        """Retire the internal worker thread WITHOUT closing the batcher.
+
+        Afterward ``submit`` keeps enqueueing but nothing serves the queue
+        until an external driver does, via :meth:`collect_nowait` +
+        :meth:`serve` — how the fleet coalescer takes over a member
+        endpoint's scheduling while preserving its client-facing API.
+        Idempotent; :meth:`close` still drains whatever remains.
+        """
+        if self._worker is None:
+            return
+        self._detached = True
+        self._queue.put(_DETACH)  # wake a blocked _collect
+        self._worker.join(timeout)
+        if self._worker.is_alive():  # pragma: no cover - defensive
+            raise RuntimeError(
+                f"MicroBatcher '{self.name}' worker did not detach")
+        self._worker = None
+
+    def collect_nowait(self) -> list:
+        """Gather the next micro-batch without blocking (external drivers
+        only — the internal worker must be detached).  Returns possibly-[].
+        Honors carry/deadlines/max_batch exactly like the worker's collect;
+        preserves a close() sentinel for the final drain."""
+        batch: list = []
+        rows = 0
+        first = self._carry
+        self._carry = None
+        if first is not None:
+            if self._expired(first):
+                self._expire(first)
+            else:
+                batch, rows = [first], first.x.shape[0]
+        while rows < self.policy.max_batch:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if req is None:
+                self._queue.put(None)  # keep the shutdown sentinel
+                break
+            if req is _DETACH:
+                continue  # stale wake-up; the driver is already here
+            if self._expired(req):
+                self._expire(req)
+                continue
+            if rows + req.x.shape[0] > self.policy.max_batch:
+                self._carry = req
+                break
+            batch.append(req)
+            rows += req.x.shape[0]
+        return batch
+
+    def serve(self, batch: list) -> None:
+        """Serve an externally-collected micro-batch on the caller's thread
+        (lazy bucket warmup included) — the coalescer's per-member solo and
+        fallback path.  Single-caller, like the worker loop it replaces."""
+        if not batch:
+            return
+        if self.policy.warmup and not self._warmed:
+            self._warmup(batch[0].x)
+        self._serve(batch)
 
     def _warmup(self, example: np.ndarray) -> None:
         """Trace every bucket once (zero rows shaped like the example)."""
@@ -383,21 +488,93 @@ class MicroBatcher:
                 pass  # real traffic will surface the error with context
         self._warmed = True
 
+    def _staging_buffer(self, bucket: int, trailing: tuple,
+                        dtype) -> np.ndarray:
+        """The next staging buffer for this (bucket, row shape, dtype).
+
+        Two buffers per key, returned alternately: with JAX async dispatch
+        the device copy of the previous round may still be in flight, so
+        the round being assembled must never write the buffer the in-flight
+        round was handed.  A pipeline depth of 1 (enforced by the
+        result-forcing ``np.asarray`` in :meth:`_dispatch_once` and by the
+        coalescer's finalize-before-next-round ordering) makes two enough.
+        """
+        key = (bucket,) + tuple(trailing) + (np.dtype(dtype).str,)
+        bufs = self._staging.get(key)
+        if bufs is None:
+            bufs = (np.zeros((bucket,) + tuple(trailing), dtype),
+                    np.zeros((bucket,) + tuple(trailing), dtype))
+            self._staging[key] = bufs
+            self._staging_parity[key] = 0
+            self.n_staging_allocs += 2
+        p = self._staging_parity[key]
+        self._staging_parity[key] = p ^ 1
+        return bufs[p]
+
+    def _assemble(self, batch: list, rows: int, bucket: int) -> np.ndarray:
+        """Gather ``batch`` into one (bucket, ...) input without per-dispatch
+        allocation on the steady-state path.
+
+        * lone full-bucket request — forwarded as-is, zero copies;
+        * homogeneous rows — written at offsets into a preallocated staging
+          buffer, tail zeroed (the padding contract: zero rows, sliced off);
+        * heterogeneous rows (mismatched trailing shape/dtype — a malformed
+          submit) — the legacy ``np.concatenate`` path, preserving its error
+          surface: the raise propagates to ``_serve``'s poison bisection.
+        """
+        first = batch[0].x
+        if len(batch) == 1 and rows == bucket:
+            self.n_batch1_fastpath += 1
+            return first
+        trailing, dtype = first.shape[1:], first.dtype
+        if any(r.x.shape[1:] != trailing or r.x.dtype != dtype
+               for r in batch):
+            self.n_concat_assemblies += 1
+            x = np.concatenate([r.x for r in batch], axis=0)
+            if bucket > rows:
+                pad = np.zeros((bucket - rows,) + x.shape[1:], x.dtype)
+                x = np.concatenate([x, pad], axis=0)
+            return x
+        buf = self._staging_buffer(bucket, trailing, dtype)
+        off = 0
+        for r in batch:
+            n = r.x.shape[0]
+            buf[off:off + n] = r.x
+            off += n
+        if rows < bucket:
+            buf[rows:bucket] = 0
+        self.n_zero_copy_assemblies += 1
+        return buf
+
+    def assembly_stats(self) -> dict:
+        """Allocation/timing accounting of the batch-assembly path (the
+        zero-copy acceptance hook: steady state must show assemblies growing
+        while staging allocations plateau at two per active bucket)."""
+        return {"n_staging_allocs": self.n_staging_allocs,
+                "n_zero_copy_assemblies": self.n_zero_copy_assemblies,
+                "n_concat_assemblies": self.n_concat_assemblies,
+                "n_batch1_fastpath": self.n_batch1_fastpath,
+                "assembly_s": self.assembly_s,
+                "device_s": self.device_s}
+
     def _dispatch_once(self, batch: list) -> None:
-        """One dispatch attempt for ``batch``: pad to the bucket, run
+        """One dispatch attempt for ``batch``: assemble into the bucket, run
         predict, record stats, scatter results.  Raises on predict failure
         (nothing resolved); on success every future in ``batch`` resolves."""
         rows = sum(r.x.shape[0] for r in batch)
         bucket = self.policy.bucket_for(rows)
-        x = np.concatenate([r.x for r in batch], axis=0)
-        if bucket > rows:
-            pad = np.zeros((bucket - rows,) + x.shape[1:], x.dtype)
-            x = np.concatenate([x, pad], axis=0)
+        t0 = self._clock()
+        x = self._assemble(batch, rows, bucket)
+        t1 = self._clock()
         out = self.predict(x)
         meta = None
         if type(out) is tuple:  # (outputs, batch metadata)
             out, meta = out
+        # np.asarray forces the async device computation — everything after
+        # t1 up to here is dispatch + device time, split from assembly time.
         y = np.asarray(out)[:rows]
+        self.assembly_s += t1 - t0
+        self.device_s += self._clock() - t1
         if self._on_dispatch is not None:
             try:
                 self._on_dispatch(True, None)
@@ -497,6 +674,4 @@ class MicroBatcher:
                 return
             if not batch:
                 continue  # everything collected had already expired
-            if self.policy.warmup and not self._warmed:
-                self._warmup(batch[0].x)
-            self._serve(batch)
+            self.serve(batch)

@@ -202,6 +202,54 @@ class ArtifactCache:
         fut.set_result(art)
         return art
 
+    def get_or_stack(self, artifacts) -> Any:
+        """Return the cached :class:`repro.compile.FleetStack` over exactly
+        these member artifacts (in order), stacking on miss.
+
+        Keyed by ``("fleet", <member cache keys>)`` — the member keys
+        already capture fingerprint/Target/plan/kernel routing, so two
+        fleets over the same artifact set share one stacked program while
+        any member change (recalibration, different budget) forces a
+        restack.  Single-flight like compiles: stacking materializes the
+        whole fleet's weights on device, which N racing enables must not
+        pay N times.
+        """
+        from repro.compile import stack_fleet
+
+        key = ("fleet", tuple(a.cache_key for a in artifacts))
+        with self._lock:
+            stack = self._entries.get(key)
+            if stack is not None:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return stack
+            fut = self._inflight.get(key)
+            if fut is None:
+                fut = Future()
+                self._inflight[key] = fut
+                owner = True
+            else:
+                owner = False
+        if not owner:
+            stack = fut.result()
+            with self._lock:
+                self.hits += 1
+            return stack
+        try:
+            stack = stack_fleet(artifacts)
+            with self._lock:
+                self.misses += 1
+            self._insert(key, stack)
+        except BaseException as e:
+            with self._lock:
+                self._inflight.pop(key, None)
+            fut.set_exception(e)
+            raise
+        with self._lock:
+            self._inflight.pop(key, None)
+        fut.set_result(stack)
+        return stack
+
     def stats(self) -> dict:
         with self._lock:
             return {"entries": len(self._entries), "hits": self.hits,

@@ -72,6 +72,8 @@ class EndpointStats:
         self.n_batches = 0
         self.n_degraded_batches = 0
         self.n_degraded_rows = 0
+        self.n_coalesced_batches = 0
+        self.n_coalesced_rows = 0
         self._bucket_rows = 0  # sum of dispatched bucket sizes
         self._latencies = deque(maxlen=_LATENCY_WINDOW)
 
@@ -86,6 +88,9 @@ class EndpointStats:
             if meta is not None and meta.get("degraded"):
                 self.n_degraded_batches += 1
                 self.n_degraded_rows += n_rows
+            if meta is not None and meta.get("coalesced"):
+                self.n_coalesced_batches += 1
+                self.n_coalesced_rows += n_rows
 
     def rolling_p99_ms(self) -> Optional[float]:
         """p99 (ms) over the rolling latency window — the degradation
@@ -125,6 +130,8 @@ class EndpointStats:
                                     if self.n_batches else 0.0),
                 "degraded_batches": self.n_degraded_batches,
                 "degraded_rows": self.n_degraded_rows,
+                "coalesced_batches": self.n_coalesced_batches,
+                "coalesced_rows": self.n_coalesced_rows,
                 "degraded_fraction": (self.n_degraded_rows / self.n_rows
                                       if self.n_rows else 0.0),
             }
@@ -228,6 +235,27 @@ class Endpoint:
         return art.predict(x), {"degraded": degraded,
                                 "number_format": art.target.number_format}
 
+    def fleet_route(self) -> bool:
+        """Whether this member's next micro-batch may ride the fleet's
+        stacked dispatch (True) or must serve on its own path (False).
+
+        The stacked program runs every member at *primary* precision with
+        no per-member dispatch, so anything that needs the member's own
+        dispatch semantics opts out of the round: a non-closed circuit
+        breaker (its probes must feed its own outcome counters) and an
+        overloaded endpoint whose governor selects the degraded artifact.
+        The governor observation here replaces the one its solo dispatch
+        would have made — coalesced serving keeps the same load signals.
+        """
+        if (self.breaker is not None
+                and self.breaker.state != CircuitBreaker.CLOSED):
+            return False
+        if self.governor is None:
+            return True
+        return not self.governor.observe(
+            self.batcher.depth() if self.batcher is not None else 0,
+            self.stats.rolling_p99_ms(), overload_hint=False)
+
     # -- classifier surface --------------------------------------------------
     def submit(self, x: np.ndarray,
                timeout_s: Optional[float] = None) -> Future:
@@ -274,6 +302,7 @@ class Endpoint:
             snap["dispatch_retries"] = self.batcher.n_retries
             snap["dispatch_failures"] = self.batcher.n_dispatch_failures
             snap["failed_requests"] = self.batcher.n_failed_requests
+            snap.update(self.batcher.assembly_stats())
         if self.breaker is not None:
             snap["breaker"] = self.breaker.snapshot()
         if self.governor is not None:

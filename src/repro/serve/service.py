@@ -42,10 +42,30 @@ from .router import Endpoint, ModelRouter
 __all__ = ["InferenceService"]
 
 
+def _example_row(artifact: CompiledArtifact,
+                 calibration: Any = None) -> Optional[np.ndarray]:
+    """One zero input row shaped for ``artifact`` (for pretune warmup):
+    from the calibration batch when given, else from the quantized tensors
+    in the emit spec.  None when the input shape is not recoverable."""
+    if calibration is not None:
+        return np.zeros_like(np.asarray(calibration, np.float32)[0])
+    spec = artifact.extras.get("emit_spec") or {}
+    fam = spec.get("family")
+    if fam == "mlp":
+        return np.zeros(spec["ws"][0].shape[0], np.float32)
+    if fam == "linear":
+        return np.zeros(spec["w"].shape[0], np.float32)
+    if fam == "svm":
+        return np.zeros(spec["sv"].shape[1], np.float32)
+    return None
+
+
 class InferenceService:
     def __init__(self, cache: Optional[ArtifactCache] = None):
         self.cache = cache or ArtifactCache()
         self.router = ModelRouter()
+        # Active fleet coalescers, keyed by their member-name tuple.
+        self._fleets: Dict[tuple, Any] = {}
 
     # -- lifecycle -----------------------------------------------------------
     def register(self, name: str, model: Any = None,
@@ -55,9 +75,19 @@ class InferenceService:
                  mesh: Any = None, mesh_strategy: str = "auto",
                  calibration: Any = None,
                  retry: Optional[RetryPolicy] = None,
-                 breaker: Optional[CircuitBreaker] = None) -> Endpoint:
+                 breaker: Optional[CircuitBreaker] = None,
+                 pretune: Any = False) -> Endpoint:
         """Host ``model`` compiled for ``target`` (deduped through the
         artifact cache), or a pre-compiled ``artifact``, under ``name``.
+
+        ``pretune`` warms the kernel autotuner and the jit trace caches
+        over the endpoint's *actual* bucket ladder at registration (see
+        :meth:`CompiledArtifact.pretune`), so the first live request in
+        every bucket hits warm caches instead of eating the tuning sweep.
+        Pass ``True`` to derive the example row from ``calibration`` or
+        the artifact's quantized tensors, or pass an example row/batch
+        directly (required for artifacts whose input shape is not
+        recoverable, e.g. trees registered without calibration).
 
         ``mesh`` shards the endpoint data-parallel across the mesh's
         replicas (``CompiledArtifact.specialize_mesh``): the scheduler's
@@ -97,8 +127,65 @@ class InferenceService:
                         f"{want}; pass the unspecialized artifact (or drop "
                         f"the mesh argument to host it as-is)")
             art = self.cache.put(artifact) if artifact.fingerprint else artifact
-        return self.router.register(name, art, policy, retry=retry,
-                                    breaker=breaker)
+        ep = self.router.register(name, art, policy, retry=retry,
+                                  breaker=breaker)
+        if pretune is not False and pretune is not None:
+            try:
+                example = (_example_row(art, calibration) if pretune is True
+                           else np.asarray(pretune))
+                if example is None:
+                    raise ValueError(
+                        f"pretune=True cannot infer an input row for "
+                        f"endpoint '{name}' ({art.kind}); pass "
+                        f"pretune=<example row>")
+                art.pretune(example, batches=ep.policy.buckets())
+            except BaseException:
+                self.router.unregister(name)  # never leave a half-made ep
+                raise
+        return ep
+
+    def enable_fleet(self, names: Optional[list] = None,
+                     min_members: int = 2) -> Dict[tuple, list]:
+        """Coalesce compatible endpoints into stacked fleet dispatches.
+
+        Groups the endpoints in ``names`` (default: all registered) by
+        :func:`repro.compile.fleet_signature`; every group with at least
+        ``min_members`` stackable members gets one
+        :class:`~repro.serve.fleet.FleetCoalescer` — their in-flight
+        micro-batches are served by ONE stacked Pallas dispatch per round,
+        bit-identically to per-endpoint serving (degradation and breaker
+        paths still honored per member, via per-member fallback).  The
+        stacked program is built through the artifact cache
+        (:meth:`ArtifactCache.get_or_stack`).  Endpoints already in a
+        fleet, unstackable artifacts (trees, LMs, mesh-sharded, non-pallas
+        backends) and under-sized groups keep their own workers.  Returns
+        ``{fleet signature: [member names]}`` for the fleets formed.
+        """
+        from repro.compile import fleet_signature
+
+        from .fleet import FleetCoalescer
+
+        coalesced = {n for members in self._fleets for n in members}
+        pool = [n for n in (names if names is not None
+                            else self.router.names())
+                if n not in coalesced]
+        groups: Dict[tuple, list] = {}
+        for n in pool:
+            ep = self.router[n]
+            if ep.batcher is None:
+                continue
+            sig = fleet_signature(ep.artifact)
+            if sig is not None:
+                groups.setdefault(sig, []).append(n)
+        formed: Dict[tuple, list] = {}
+        for sig, members in groups.items():
+            if len(members) < max(2, min_members):
+                continue
+            eps = [self.router[n] for n in members]
+            stack = self.cache.get_or_stack([ep.artifact for ep in eps])
+            self._fleets[tuple(members)] = FleetCoalescer(stack, eps)
+            formed[sig] = members
+        return formed
 
     def enable_degradation(self, name: str, model: Any = None,
                            target: Optional[Target] = None,
@@ -136,6 +223,12 @@ class InferenceService:
         return ep
 
     def unregister(self, name: str) -> None:
+        for members in self._fleets:
+            if name in members:
+                raise RuntimeError(
+                    f"endpoint '{name}' is coalesced into fleet {members}; "
+                    f"close the service (or the fleet) before unregistering "
+                    f"a member")
         self.router.unregister(name)
 
     def endpoint(self, name: str) -> Endpoint:
@@ -146,6 +239,12 @@ class InferenceService:
         bounds the total drain (seconds): requests that cannot be served in
         time are rejected with an error — every future resolves either way.
         """
+        # Fleet coalescers stop FIRST (finalizing in-flight rounds): the
+        # routers' batcher drains then serve each member's leftovers on the
+        # closing thread, which requires no other driver to be running.
+        fleets, self._fleets = self._fleets, {}
+        for co in fleets.values():
+            co.close(timeout)
         self.router.close(timeout=timeout)
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -188,6 +287,8 @@ class InferenceService:
     def stats(self) -> Dict[str, Dict[str, float]]:
         out = self.router.stats()
         out["_cache"] = self.cache.stats()
+        if self._fleets:
+            out["_fleets"] = [co.snapshot() for co in self._fleets.values()]
         inj = faults.current()
         if inj is not None:
             out["_faults"] = inj.stats()
